@@ -1,0 +1,58 @@
+"""Paper Figs. 9-10 + Sec. IX-B DRAM study: channels vs throughput,
+request-queue stalls, WS/OS flip."""
+from __future__ import annotations
+
+from repro.core import simulate_network, tpu_like_config
+from repro.core.accelerator import DramConfig
+from repro.core.dram import linear_trace, simulate_dram, tile_prefetch_trace
+from repro.core.topology import resnet18_six_layers
+from .common import timed
+
+
+def run():
+    rows = []
+
+    # Fig. 9: channels 1..8 vs throughput (streaming resnet-like traffic)
+    def fig9():
+        t, a, w = linear_trace(8192, issue_gap=0.25)
+        return {ch: float(simulate_dram(t, a, w,
+                                        DramConfig(channels=ch)).throughput)
+                for ch in (1, 2, 4, 8)}
+
+    th, us = timed(fig9, repeat=1)
+    rows.append(("fig9_dram_channels_throughput", us,
+                 ";".join(f"ch{c}={v:.1f}B/cyc" for c, v in th.items())))
+
+    # Fig. 10: request queue 32/128/512
+    def fig10():
+        t, a, w = tile_prefetch_trace(tile_bytes=20 * 1024, n_tiles=64,
+                                      compute_per_tile=400, gran_bytes=64)
+        return {q: float(simulate_dram(
+            t, a, w, DramConfig(channels=2, read_queue=q,
+                                write_queue=q)).total_cycles)
+            for q in (32, 128, 512)}
+
+    tot, us10 = timed(fig10, repeat=1)
+    r32 = tot[32] / tot[128]
+    r128 = (tot[128] - tot[512]) / tot[128] * 100
+    rows.append(("fig10_request_queue_stalls", us10,
+                 f"total32={tot[32]:.0f};total128={tot[128]:.0f};"
+                 f"total512={tot[512]:.0f};x32to128={r32:.2f};"
+                 f"pct128to512={r128:.1f}%"))
+
+    # Sec. IX-B: WS vs OS with and without DRAM stalls (six ResNet18 layers)
+    def flip():
+        out = {}
+        for df in ("ws", "os"):
+            cfg = tpu_like_config(array=32, dataflow=df, sram_mb=0.4)
+            rep = simulate_network(cfg, resnet18_six_layers())
+            out[df] = (rep.compute_cycles, rep.total_cycles)
+        return out
+
+    fl, usf = timed(flip, repeat=1)
+    ws_gain = (1 - fl["ws"][0] / fl["os"][0]) * 100
+    os_gain = (1 - fl["os"][1] / fl["ws"][1]) * 100
+    rows.append(("sec9b_ws_os_dram_flip", usf,
+                 f"ws_compute_better={ws_gain:.1f}%(paper:21%);"
+                 f"os_total_better={os_gain:.1f}%(paper:30.1%)"))
+    return rows

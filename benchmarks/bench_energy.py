@@ -1,0 +1,55 @@
+"""Paper Fig. 15 + Table V: energy by dataflow x array size; the
+latency/energy/EdP table for ResNet-50, RCNN, ViT-base."""
+from __future__ import annotations
+
+from repro.core import simulate_network, tpu_like_config
+from repro.core.topology import rcnn, resnet50, vit_base_linear
+from .common import timed
+
+
+def run():
+    rows = []
+
+    def fig15():
+        out = {}
+        for wl_name, wl in (("resnet50", resnet50()),
+                            ("vitb", vit_base_linear())):
+            for arr in (8, 16, 32, 64, 128):
+                for df in ("ws", "is", "os"):
+                    cfg = tpu_like_config(array=arr, dataflow=df)
+                    out[(wl_name, arr, df)] = simulate_network(
+                        cfg, wl).energy_pj * 1e-9
+        return out
+
+    e, us = timed(fig15, repeat=1)
+    os_wins = sum(1 for (w, a, d) in e if d == "os" and
+                  e[(w, a, "os")] <= min(e[(w, a, "ws")], e[(w, a, "is")]))
+    rows.append(("fig15_energy_dataflow_grid", us,
+                 f"os_wins={os_wins}/10;"
+                 f"vitb32_ws={e[('vitb', 32, 'ws')]:.1f}mJ;"
+                 f"vitb128_ws={e[('vitb', 128, 'ws')]:.1f}mJ"))
+
+    def table5():
+        out = {}
+        for wl_name, wl in (("resnet50", resnet50()), ("rcnn", rcnn()),
+                            ("vitb", vit_base_linear())):
+            for arr in (32, 64, 128):
+                rep = simulate_network(tpu_like_config(array=arr), wl)
+                out[(wl_name, arr)] = (rep.total_cycles,
+                                       rep.energy_pj * 1e-9, rep.edp)
+        return out
+
+    t5, us5 = timed(table5, repeat=1)
+    lat_ratio = t5[("vitb", 32)][0] / t5[("vitb", 128)][0]
+    e_ratio = t5[("vitb", 128)][1] / t5[("vitb", 32)][1]
+    edp = {a: t5[("vitb", a)][2] for a in (32, 64, 128)}
+    edp_best = min(edp, key=edp.get)
+    rows.append(("table5_latency_energy_edp", us5,
+                 f"vitb_lat32/128={lat_ratio:.2f}(paper:6.53);"
+                 f"vitb_E128/E32={e_ratio:.2f}(paper:2.86);"
+                 f"edp_best={edp_best}x{edp_best}(paper:64x64)"))
+    for wl in ("resnet50", "rcnn", "vitb"):
+        rows.append((f"table5_{wl}", 0.0,
+                     ";".join(f"{a}:lat={t5[(wl,a)][0]:.3e},E={t5[(wl,a)][1]:.2f}mJ,"
+                              f"EdP={t5[(wl,a)][2]:.3e}" for a in (32, 64, 128))))
+    return rows

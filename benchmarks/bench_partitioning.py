@@ -1,0 +1,62 @@
+"""Paper Fig. 3: spatial vs spatio-temporal partitioning tradeoff.
+
+27 GEMMs (M,N,K in {1000,5000,10000}) x arrays {8,16,32} x cores {16,32,64};
+reports how often each scheme wins under compute- and footprint-optimized
+selection, and the mean footprint saving of ST at near-equal cycles.
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from repro.core.partition import enumerate_plans
+from .common import timed
+
+
+def run():
+    dims = [1000, 5000, 10000]
+    arrays = [8, 16, 32]
+    cores = [16, 32, 64]
+    st_cycle_wins = 0
+    st_fp_wins_at_eq = 0
+    spatial_fp_wins = 0
+    total = 0
+    savings = []
+
+    def sweep():
+        nonlocal st_cycle_wins, st_fp_wins_at_eq, spatial_fp_wins, total
+        st_cycle_wins = st_fp_wins_at_eq = spatial_fp_wins = total = 0
+        savings.clear()
+        for (M, N, K), a, nc in itertools.product(
+                itertools.product(dims, dims, dims), arrays, cores):
+            plans = enumerate_plans("ws", M, N, K, a, a, nc)
+            sp = [p for p in plans if p.scheme == "spatial"]
+            st = [p for p in plans if p.scheme != "spatial"
+                  and not (p.scheme == "st1" and p.Pc == 1)
+                  and not (p.scheme == "st2" and p.Pr == 1)]
+            sp_best = min(sp, key=lambda p: (p.cycles, p.footprint))
+            st_best = min(st, key=lambda p: (p.cycles, p.footprint))
+            total += 1
+            if st_best.cycles < sp_best.cycles:
+                st_cycle_wins += 1
+            near = [p for p in st if p.cycles <= 1.05 * sp_best.cycles]
+            if near:
+                fp = min(near, key=lambda p: p.footprint)
+                if fp.footprint < sp_best.footprint:
+                    st_fp_wins_at_eq += 1
+                    savings.append(1 - fp.footprint / sp_best.footprint)
+            if min(plans, key=lambda p: (p.footprint, p.cycles)
+                   ).scheme == "spatial":
+                spatial_fp_wins += 1
+        return total
+
+    _, us = timed(sweep, repeat=1)
+    mean_save = float(np.mean(savings)) if savings else 0.0
+    return [
+        ("fig3_partitioning_sweep", us,
+         f"configs={total};st_cycle_wins={st_cycle_wins};"
+         f"st_fp_wins_at_eq_cycles={st_fp_wins_at_eq};"
+         f"spatial_fp_wins={spatial_fp_wins};"
+         f"mean_st_fp_saving={mean_save:.2f}"),
+    ]

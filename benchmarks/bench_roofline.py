@@ -1,0 +1,44 @@
+"""Roofline report: reads the dry-run JSONs (experiments/dryrun/) and emits
+the per-(arch x shape x mesh) three-term roofline table (deliverable g)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "experiments", "dryrun"))
+
+
+def load_cells():
+    cells = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run():
+    rows = []
+    cells = load_cells()
+    ok = [c for c in cells if c.get("ok")]
+    if not ok:
+        rows.append(("roofline", 0.0,
+                     "no dry-run artifacts; run python -m repro.launch.dryrun --all"))
+        return rows
+    n_fit = sum(1 for c in ok if c.get("fits_hbm"))
+    rows.append(("dryrun_summary", 0.0,
+                 f"cells_ok={len(ok)};fits_hbm={n_fit}/{len(ok)};"
+                 f"meshes=pod(256)+multipod(512)"))
+    for c in sorted(ok, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+        t = c["terms"]
+        rows.append((
+            f"roofline_{c['arch']}_{c['shape']}_{c['mesh']}", 0.0,
+            f"compute_s={t['compute_s']:.3e};memory_s={t['memory_s']:.3e};"
+            f"collective_s={t['collective_s']:.3e};dom={c['dominant'][:-2]};"
+            f"useful={c['useful_flops_ratio']:.2f};"
+            f"mfu_vs_roofline={c['mfu_vs_roofline']:.3f};"
+            f"peakGB={c['peak_bytes_per_device'] / 2**30:.2f}"))
+    return rows

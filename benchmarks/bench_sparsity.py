@@ -1,0 +1,74 @@
+"""Paper Figs. 5, 7, 8: sparsity cycles vs on-chip memory, storage, and
+block-size sweeps."""
+from __future__ import annotations
+
+from repro.core import simulate_network, tpu_like_config
+from repro.core.accelerator import SparsityConfig
+from repro.core.sparsity import storage_report
+from repro.core.topology import resnet18, vit_ffn_only
+from .common import timed
+
+
+def run():
+    rows = []
+
+    # Fig. 5: total cycles (incl. stalls) vs SRAM for 1:4 / 2:4 / 4:4
+    def fig5():
+        out = {}
+        for nm in ((1, 4), (2, 4), (4, 4)):
+            for mb in (0.25, 0.5, 1.0, 2.0, 3.0):
+                cfg = tpu_like_config(array=32, sram_mb=mb)
+                if nm != (4, 4):
+                    cfg = cfg.with_(sparsity=SparsityConfig(
+                        enabled=True, n=nm[0], m=nm[1]))
+                out[(nm, mb)] = simulate_network(cfg, resnet18()).total_cycles
+        return out
+
+    out, us = timed(fig5, repeat=1)
+    c14 = out[((1, 4), 1.0)]
+    c24 = out[((2, 4), 1.0)]
+    c44 = out[((4, 4), 1.0)]
+    rows.append(("fig5_sparsity_cycles_vs_sram", us,
+                 f"cycles@1MB 1:4={c14:.3e};2:4={c24:.3e};4:4={c44:.3e};"
+                 f"mono={'yes' if c14 < c24 < c44 else 'NO'}"))
+
+    # latency-constrained design point (Sec. IX-B "Sparsity")
+    budget = 1.5 * c24
+    dense_mb = min((mb for nm, mb in out if nm == (4, 4)
+                    and out[(nm, mb)] < budget), default=None)
+    sparse_mb = min((mb for nm, mb in out if nm == (2, 4)
+                     and out[(nm, mb)] < budget), default=None)
+    rows.append(("sec9b_sparse_sram_saving", 0.0,
+                 f"dense_needs_MB={dense_mb};sparse24_needs_MB={sparse_mb}"))
+
+    # Fig. 7: storage by ratio
+    def fig7():
+        res = {}
+        for nm in (None, (3, 4), (2, 4), (1, 4)):
+            sp = SparsityConfig(enabled=bool(nm), n=nm[0] if nm else 2,
+                                m=4)
+            tot = sum(storage_report(512, 4608, sp)["total_bytes"]
+                      for _ in range(1))
+            res[nm] = tot
+        return res
+
+    st, us7 = timed(fig7, repeat=3)
+    rows.append(("fig7_storage_bytes", us7,
+                 ";".join(f"{k}={v:.2e}" for k, v in st.items())))
+
+    # Fig. 8: block-size sweep on ViT FFN layers — larger M exposes a finer
+    # N:M spectrum whose lower end (N=1) gets faster with block size
+    def fig8():
+        res = {}
+        for m in (4, 8, 16, 32):
+            cfg = tpu_like_config(array=32).with_(
+                sparsity=SparsityConfig(enabled=True, n=1, m=m))
+            res[m] = simulate_network(cfg, vit_ffn_only()).total_cycles
+        return res
+
+    bs, us8 = timed(fig8, repeat=1)
+    mono = all(bs[a] >= bs[b] for a, b in ((4, 8), (8, 16), (16, 32)))
+    rows.append(("fig8_blocksize_sweep", us8,
+                 "finer_low_end_faster=" + ("yes" if mono else "NO") + ";"
+                 + ";".join(f"1:{k}cyc={v:.3e}" for k, v in bs.items())))
+    return rows

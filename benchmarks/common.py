@@ -1,0 +1,19 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+
+def timed(fn: Callable, *args, repeat: int = 3, **kw):
+    fn(*args, **kw)                      # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6                 # us per call
+
+
+def emit(rows: List[Tuple[str, float, str]]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,43 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Modules:
+  bench_partitioning   Fig. 3    spatial vs spatio-temporal tradeoff
+  bench_sparsity       Figs. 5/7/8 + Sec. IX-B sparsity design point
+  bench_dram           Figs. 9/10 + Sec. IX-B WS/OS DRAM flip
+  bench_layout         Figs. 12/13 bank-conflict slowdown grid
+  bench_energy         Fig. 15 + Table V latency/energy/EdP
+  bench_multicore      Table VI iso-compute + heterogeneous cores
+  bench_sim_throughput Table IV analog + DSE fast path
+  bench_kernels        Pallas kernel microbenchmarks
+  bench_roofline       dry-run roofline table (EXPERIMENTS.md source)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from .common import emit
+
+
+def main() -> None:
+    from . import (bench_partitioning, bench_sparsity, bench_dram,
+                   bench_layout, bench_energy, bench_multicore,
+                   bench_sim_throughput, bench_kernels, bench_roofline)
+    mods = [bench_partitioning, bench_sparsity, bench_dram, bench_layout,
+            bench_energy, bench_multicore, bench_sim_throughput,
+            bench_kernels, bench_roofline]
+    print("name,us_per_call,derived")
+    failed = 0
+    for m in mods:
+        try:
+            emit(m.run())
+        except Exception:
+            failed += 1
+            print(f"{m.__name__},0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,173 @@
+"""Dataflow mapping + runtime equations + SRAM/DRAM traffic model.
+
+GEMM convention (paper Table II): O[M, N] = W[M, K] @ X[K, N] with
+  M = output features (weight rows), N = tokens/pixels, K = reduction.
+
+Mapping dims (Sr, Sc, T):
+  input-stationary  (is): (K, N, M)   X stationary on the array
+  weight-stationary (ws): (K, M, N)   W stationary on the array
+  output-stationary (os): (M, N, K)   O stationary on the array
+
+All functions accept Python ints or jnp arrays (vmap-friendly); ceil-div is
+``-(-a // b)`` so tracing works.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+from .accelerator import AcceleratorConfig, MemoryConfig
+
+
+def cdiv(a, b):
+    return -(-a // b)
+
+
+def map_gemm(dataflow: str, M, N, K) -> Tuple:
+    """(Sr, Sc, T) per paper Table II."""
+    if dataflow == "is":
+        return K, N, M
+    if dataflow == "ws":
+        return K, M, N
+    if dataflow == "os":
+        return M, N, K
+    raise ValueError(f"unknown dataflow {dataflow!r}")
+
+
+def fold_counts(Sr, Sc, R: int, C: int):
+    return cdiv(Sr, R), cdiv(Sc, C)
+
+
+def compute_cycles(dataflow: str, M, N, K, R: int, C: int):
+    """Single-core compute cycles: (2R + C + T - 2) * ceil(Sr/R) * ceil(Sc/C).
+
+    This is the SCALE-Sim v2 analytical runtime (paper Eq. 1 with Pr=Pc=1),
+    validated cycle-accurate against the Pallas/ref wavefront simulators in
+    kernels/systolic for single folds.
+    """
+    Sr, Sc, T = map_gemm(dataflow, M, N, K)
+    fr, fc = fold_counts(Sr, Sc, R, C)
+    return (2 * R + C + T - 2) * fr * fc
+
+
+def pe_utilization(dataflow: str, M, N, K, R: int, C: int):
+    """Useful MACs / (PEs * compute cycles)."""
+    macs = 1.0 * M * N * K
+    cyc = compute_cycles(dataflow, M, N, K, R, C)
+    return macs / (1.0 * R * C * cyc)
+
+
+def mapping_occupancy(dataflow: str, M, N, K, R: int, C: int):
+    """Average fraction of the array occupied by the mapping (edge folds)."""
+    Sr, Sc, T = map_gemm(dataflow, M, N, K)
+    fr, fc = fold_counts(Sr, Sc, R, C)
+    return (1.0 * Sr * Sc) / (1.0 * fr * R * fc * C)
+
+
+def sram_traffic(dataflow: str, M, N, K, R: int, C: int) -> Dict[str, jnp.ndarray]:
+    """Aggregate SRAM demand counts (elements), SCALE-Sim v2 semantics.
+
+    - stationary operand: each element loaded once from its SRAM.
+    - streaming input operand: re-streamed once per column-fold group.
+    - psums: written once per row-fold, read back (accumulated) fr-1 times
+      (zero for os, whose psums never leave the array until drain).
+    Keys: ifmap_reads (X), filter_reads (W), ofmap_writes, ofmap_reads.
+    """
+    Sr, Sc, T = map_gemm(dataflow, M, N, K)
+    fr, fc = fold_counts(Sr, Sc, R, C)
+    WK = 1.0 * M * K
+    XK = 1.0 * K * N
+    O = 1.0 * M * N
+    if dataflow == "ws":          # W stationary, X streams, psums accumulate
+        filter_reads = WK
+        ifmap_reads = fc * XK
+        ofmap_writes = fr * O
+        ofmap_reads = (fr - 1) * O
+    elif dataflow == "is":        # X stationary, W streams
+        ifmap_reads = XK
+        filter_reads = fc * WK
+        ofmap_writes = fr * O
+        ofmap_reads = (fr - 1) * O
+    else:                         # os: O stationary, both operands stream
+        filter_reads = fc * WK
+        ifmap_reads = fr * XK
+        ofmap_writes = O
+        ofmap_reads = 0.0 * O
+    return dict(ifmap_reads=ifmap_reads, filter_reads=filter_reads,
+                ofmap_writes=ofmap_writes, ofmap_reads=ofmap_reads)
+
+
+def dram_traffic(dataflow: str, M, N, K, R: int, C: int,
+                 mem: MemoryConfig) -> Dict[str, jnp.ndarray]:
+    """Capacity-based DRAM traffic model (elements) over double-buffered SRAM.
+
+    Considers the two canonical loop orders (keep X resident / keep W
+    resident), tiling the non-resident operand by SRAM capacity, and takes the
+    cheaper; adds psum spill traffic when the psum working set exceeds the
+    ofmap SRAM. First-order but monotone in SRAM size, which is the behavior
+    the paper's Fig. 5 exercises.
+    """
+    wb = mem.word_bytes
+    WK = 1.0 * M * K
+    XK = 1.0 * K * N
+    O = 1.0 * M * N
+    cap_if = jnp.maximum(1.0, mem.ifmap_sram_bytes / wb)   # elements
+    cap_f = jnp.maximum(1.0, mem.filter_sram_bytes / wb)
+    cap_o = jnp.maximum(1.0, mem.ofmap_sram_bytes / wb)
+
+    # order A: X resident in tiles of n_t columns; W refetched per tile.
+    n_t = jnp.clip(cap_if // jnp.maximum(K, 1), 1, N)
+    total_a = XK + WK * cdiv(N, n_t)
+    # order B: W resident in tiles of m_t rows; X refetched per tile.
+    m_t = jnp.clip(cap_f // jnp.maximum(K, 1), 1, M)
+    total_b = WK + XK * cdiv(M, m_t)
+
+    a_better = total_a <= total_b
+    dram_x = jnp.where(a_better, XK, XK * cdiv(M, m_t))
+    dram_w = jnp.where(a_better, WK * cdiv(N, n_t), WK)
+
+    # psum spill: ws/is accumulate across ceil(Sr/R) row folds; spills if the
+    # live psum tile (C cols * T) exceeds the ofmap SRAM.
+    Sr, Sc, T = map_gemm(dataflow, M, N, K)
+    fr, _ = fold_counts(Sr, Sc, R, C)
+    live_psum = 1.0 * C * T
+    spills = jnp.where(
+        (dataflow != "os") & (live_psum > cap_o), (fr - 1) * O, 0.0 * O)
+    dram_o_writes = O + spills
+    dram_o_reads = spills
+    return dict(dram_ifmap=dram_x, dram_filter=dram_w,
+                dram_ofmap_writes=dram_o_writes, dram_ofmap_reads=dram_o_reads)
+
+
+def dram_stall_cycles_simple(total_bytes, compute_cycles_,
+                             bw_bytes_per_cycle: float):
+    """First-order memory-bound stall: double-buffered transfer vs compute."""
+    xfer = total_bytes / bw_bytes_per_cycle
+    return jnp.maximum(0.0, xfer - compute_cycles_)
+
+
+def simd_cycles(elements, lanes: int, latency: float = 1.0):
+    """Vector-unit cycles for pointwise/reduction ops (Sec. III-C)."""
+    return cdiv(elements, lanes) * latency
+
+
+def gemm_summary(cfg: AcceleratorConfig, M, N, K) -> Dict[str, jnp.ndarray]:
+    """Single-core end-to-end summary for one GEMM (no DRAM cycle model)."""
+    core = cfg.cores[0]
+    R, C = core.rows, core.cols
+    df = cfg.dataflow
+    cyc = compute_cycles(df, M, N, K, R, C)
+    sram = sram_traffic(df, M, N, K, R, C)
+    dram = dram_traffic(df, M, N, K, R, C, cfg.memory)
+    wb = cfg.memory.word_bytes
+    dram_bytes = (dram["dram_ifmap"] + dram["dram_filter"]
+                  + dram["dram_ofmap_writes"] + dram["dram_ofmap_reads"]) * wb
+    bw = cfg.dram.bandwidth_bytes_per_cycle * cfg.dram.channels
+    stall = dram_stall_cycles_simple(dram_bytes, cyc, bw)
+    return dict(compute_cycles=cyc,
+                utilization=pe_utilization(df, M, N, K, R, C),
+                dram_bytes=dram_bytes,
+                stall_cycles=stall,
+                total_cycles=cyc + stall,
+                **sram, **dram)

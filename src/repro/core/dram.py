@@ -1,0 +1,172 @@
+"""Cycle-accurate main-memory timing model (paper Sec. V) — Ramulator, in JAX.
+
+A `lax.scan` over a demand-request stream reproduces the statistics the paper
+gets from Ramulator: per-request round-trip latency, row-buffer hits / misses
+(empty row) / conflicts, per-channel throughput, and — via finite read/write
+request queues — the accelerator stall cycles that the queues' backpressure
+creates (Sec. V-A2/V-A3).
+
+Address mapping (documented; DDR-style interleave):
+  burst index  b   = addr // burst_bytes
+  channel          = b % channels
+  within-channel r = b // channels
+  bank             = (r // (row_bytes // burst_bytes)) % banks
+  row              = r // ((row_bytes // burst_bytes) * banks)
+
+Timing per request on its (channel, bank):
+  ready = max(issue_ok, bank_free, bus_free[channel])
+  row hit -> tCAS; empty row -> tRCD+tCAS; conflict -> tRP+tRCD+tCAS
+  done  = ready + lat + busy   (busy = gran_bytes / per-channel bandwidth)
+
+Finite queues: a request cannot issue until the request Q-back *in its
+direction* has completed (in-flight window, mirroring the AXI-style window the
+paper validates against). Backpressure accumulates into a `shift` carried
+through the scan: every later request (and the compute stream) is delayed by
+it — this is the "systolic array waits on the scratchpad" stall.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .accelerator import DramConfig
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DramResult:
+    latency: jnp.ndarray          # per-request round-trip (cycles)
+    complete: jnp.ndarray         # per-request completion time
+    stall_cycles: jnp.ndarray     # scalar: queue backpressure + tail wait
+    row_hits: jnp.ndarray
+    row_misses: jnp.ndarray       # empty-row activations
+    row_conflicts: jnp.ndarray
+    total_cycles: jnp.ndarray     # end-to-end (incl. compute overlap window)
+    bytes_moved: jnp.ndarray
+    throughput: jnp.ndarray       # bytes / cycle over the busy window
+
+
+@partial(jax.jit, static_argnames=("cfg", "gran_bytes"))
+def simulate_dram(t_issue: jnp.ndarray, addr: jnp.ndarray,
+                  is_write: jnp.ndarray, cfg: DramConfig,
+                  gran_bytes: int = 64) -> DramResult:
+    """Run the timing model over a request stream (sorted by t_issue).
+
+    gran_bytes: bytes moved per request (trace fidelity uses burst_bytes;
+    fast fidelity coarsens to larger transfers with bandwidth-equivalent
+    bus occupancy).
+    """
+    n = t_issue.shape[0]
+    ch_n, bk_n = cfg.channels, cfg.banks_per_channel
+    bursts_per_row = max(1, cfg.row_bytes // cfg.burst_bytes)
+    busy = jnp.maximum(1.0, gran_bytes / cfg.bandwidth_bytes_per_cycle)
+
+    b = addr // cfg.burst_bytes
+    ch = (b % ch_n).astype(jnp.int32)
+    r = b // ch_n
+    bank = ((r // bursts_per_row) % bk_n).astype(jnp.int32)
+    row = (r // (bursts_per_row * bk_n)).astype(jnp.int32)
+    flat_bank = ch * bk_n + bank
+
+    Qr, Qw = cfg.read_queue, cfg.write_queue
+
+    def step(carry, x):
+        (bank_free, open_row, bus_free, ring_r, ring_w, ir, iw, shift,
+         hits, misses, conflicts) = carry
+        t, fb, c, rw, w = x
+        t_eff = t + shift
+        # finite in-flight window per direction
+        head_r = ring_r[ir % Qr]
+        head_w = ring_w[iw % Qw]
+        issue_ok = jnp.maximum(t_eff, jnp.where(w, head_w, head_r))
+        ready = jnp.maximum(issue_ok, bank_free[fb])
+        cur = open_row[fb]
+        hit = cur == rw
+        empty = cur < 0
+        lat = jnp.where(hit, cfg.tCAS,
+                        jnp.where(empty, cfg.tRCD + cfg.tCAS,
+                                  cfg.tRP + cfg.tRCD + cfg.tCAS))
+        # RAS/CAS latency pipelines across banks; only the data burst
+        # serializes on the channel bus.
+        done = jnp.maximum(ready + lat, bus_free[c]) + busy
+        bank_free = bank_free.at[fb].set(done)
+        bus_free = bus_free.at[c].set(done)
+        open_row = open_row.at[fb].set(rw)
+        ring_r = jnp.where(w, ring_r, ring_r.at[ir % Qr].set(done))
+        ring_w = jnp.where(w, ring_w.at[iw % Qw].set(done), ring_w)
+        ir = ir + jnp.where(w, 0, 1)
+        iw = iw + jnp.where(w, 1, 0)
+        # queue-full backpressure shifts everything downstream
+        shift = shift + jnp.maximum(0.0, issue_ok - t_eff)
+        hits += hit
+        misses += empty
+        conflicts += (~hit) & (~empty)
+        return ((bank_free, open_row, bus_free, ring_r, ring_w, ir, iw, shift,
+                 hits, misses, conflicts),
+                (done, done - t))
+
+    carry0 = (jnp.zeros(ch_n * bk_n), -jnp.ones(ch_n * bk_n, jnp.int32),
+              jnp.zeros(ch_n), jnp.zeros(Qr), jnp.zeros(Qw),
+              jnp.int32(0), jnp.int32(0), jnp.float32(0.0),
+              jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    xs = (t_issue.astype(jnp.float32), flat_bank, ch, row, is_write)
+    carry, (done, rt) = jax.lax.scan(step, carry0, xs)
+    (_, _, _, _, _, _, _, shift, hits, misses, conflicts) = carry
+
+    last = jnp.max(done)
+    first = jnp.min(t_issue).astype(jnp.float32)
+    span = jnp.maximum(1.0, last - first)
+    nominal = cfg.tRCD + cfg.tCAS + busy
+    tail = jnp.maximum(0.0, last - (jnp.max(t_issue) + shift + nominal))
+    bytes_moved = jnp.float32(n * gran_bytes)
+    return DramResult(
+        latency=rt, complete=done,
+        stall_cycles=shift + tail,
+        row_hits=hits, row_misses=misses, row_conflicts=conflicts,
+        total_cycles=last, bytes_moved=bytes_moved,
+        throughput=bytes_moved / span)
+
+
+def linear_trace(n_requests: int, start_addr: int = 0, gran_bytes: int = 64,
+                 t0: float = 0.0, issue_gap: float = 1.0,
+                 write_every: int = 0) -> Tuple[jnp.ndarray, ...]:
+    """Streaming (prefetch-like) trace: consecutive addresses, steady issue."""
+    i = jnp.arange(n_requests)
+    t = t0 + issue_gap * i.astype(jnp.float32)
+    addr = start_addr + i * gran_bytes
+    w = (i % write_every == write_every - 1) if write_every else jnp.zeros_like(i, bool)
+    return t, addr, w
+
+
+def strided_trace(n_requests: int, stride_bytes: int, gran_bytes: int = 64,
+                  t0: float = 0.0, issue_gap: float = 1.0):
+    """Row-conflict-heavy trace: large strides thrash row buffers."""
+    i = jnp.arange(n_requests)
+    t = t0 + issue_gap * i.astype(jnp.float32)
+    addr = i * stride_bytes
+    return t, addr, jnp.zeros_like(i, dtype=bool)
+
+
+def tile_prefetch_trace(tile_bytes: int, n_tiles: int, compute_per_tile: float,
+                        gran_bytes: int = 512, base: int = 0,
+                        ofmap_fraction: float = 0.25):
+    """Engine integration (fast fidelity): double-buffered per-fold prefetch.
+
+    Each tile issues tile_bytes/gran requests at the start of its overlap
+    window (one window per fold of `compute_per_tile` cycles); a trailing
+    ofmap_fraction of requests are writes.
+    """
+    per = max(1, int(tile_bytes) // gran_bytes)
+    i = jnp.arange(per * n_tiles)
+    tile = i // per
+    # the whole next-tile prefetch is posted at the window start (true
+    # double-buffer behavior): small queues block the producer immediately,
+    # large queues absorb the burst and overlap it with compute (Fig. 10).
+    t = tile.astype(jnp.float32) * compute_per_tile
+    addr = base + i * gran_bytes
+    w = (i % per) >= int(per * (1 - ofmap_fraction))
+    return t, addr, w

@@ -1,0 +1,250 @@
+"""End-to-end simulation engine: op graph x AcceleratorConfig -> report.
+
+Pipeline per GEMM op (paper Fig. 1, left to right):
+  dataflow mapping -> multi-core partitioning -> compute cycles
+  -> sparsity-compressed streaming (if enabled)
+  -> SRAM traffic -> capacity-based DRAM traffic
+  -> DRAM stalls (simple bandwidth overlap, or the cycle-accurate
+     lax.scan model at `dram_fidelity='cycle'`)
+  -> layout bank-conflict slowdown (if enabled)
+  -> action counts -> energy / power / EdP.
+
+Vector ops run on the SIMD unit. `simulate_network` loops ops in Python
+(graphs are O(100) ops); `gemm_summary_traced` is the fully-traced variant
+used by vmap/pjit DSE sweeps over thousands of accelerator configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from .accelerator import AcceleratorConfig, SparsityConfig
+from . import dataflow as dfm
+from .dram import simulate_dram, tile_prefetch_trace
+from .energy import DEFAULT_ERT, ERT, action_counts, edp, energy_pj, power_w
+from .layout import evaluate_layout
+from .multicore import best_multicore
+from .sparsity import sparse_compute_cycles, storage_report
+from .topology import Op
+
+
+@dataclasses.dataclass
+class OpResult:
+    name: str
+    kind: str
+    compute_cycles: float
+    stall_cycles: float
+    layout_extra_cycles: float
+    total_cycles: float
+    utilization: float
+    macs: float
+    sram_reads: float
+    sram_writes: float
+    dram_bytes: float
+    energy_pj: float
+    scheme: str = "single"
+    dram_stats: Optional[Dict[str, float]] = None
+    sparse_storage: Optional[Dict[str, float]] = None
+
+
+@dataclasses.dataclass
+class NetworkReport:
+    ops: List[OpResult]
+    total_cycles: float
+    compute_cycles: float
+    stall_cycles: float
+    layout_extra_cycles: float
+    dram_bytes: float
+    energy_pj: float
+    energy_breakdown: Dict[str, float]
+    avg_power_w: float
+    edp: float
+    utilization: float
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        d["ops"] = [dataclasses.asdict(o) if not isinstance(o, dict) else o
+                    for o in d["ops"]]
+        return json.dumps(d, indent=1, default=float)
+
+    def write_csv(self, path: str) -> None:
+        cols = ["name", "kind", "compute_cycles", "stall_cycles",
+                "layout_extra_cycles", "total_cycles", "utilization",
+                "dram_bytes", "energy_pj"]
+        with open(path, "w") as f:
+            f.write(",".join(cols) + "\n")
+            for o in self.ops:
+                f.write(",".join(str(getattr(o, c)) for c in cols) + "\n")
+
+
+_DRAM_REQ_CAP = 16384     # cycle-fidelity request cap per op (scaled beyond)
+
+
+def simulate_op(cfg: AcceleratorConfig, op: Op, *,
+                dram_fidelity: str = "fast",
+                ert: ERT = DEFAULT_ERT) -> OpResult:
+    core = cfg.cores[0]
+    wb = cfg.memory.word_bytes
+
+    if op.kind == "vector":
+        cyc = float(dfm.simd_cycles(op.vector_elems, core.simd_lanes,
+                                    core.simd_latency)) * op.count
+        dram_b = op.vector_elems * wb * op.count
+        counts = action_counts(cfg, cycles=cyc, macs=0.0, ifmap_reads=op.vector_elems,
+                               filter_reads=0.0, ofmap_writes=op.vector_elems,
+                               ofmap_reads=0.0, dram_bytes=dram_b)
+        e = energy_pj(counts, ert)
+        return OpResult(op.name, "vector", cyc, 0.0, 0.0, cyc, 0.0, 0.0,
+                        op.vector_elems, op.vector_elems, dram_b, e["total"])
+
+    M, N, K = op.M, op.N, op.K
+    df = cfg.dataflow
+    sp = cfg.sparsity
+    if op.sparsity_nm is not None:
+        sp = SparsityConfig(enabled=True, n=op.sparsity_nm[0],
+                            m=op.sparsity_nm[1], row_wise=sp.row_wise,
+                            representation=sp.representation)
+    sparse_info = None
+    if sp.enabled:
+        comp = float(sparse_compute_cycles(df, M, N, K, core.rows, core.cols, sp))
+        sparse_info = storage_report(M, K, sp, wb)
+        scheme = "single"
+        util = min(1.0, M * N * K / max(1.0, core.num_pes * comp * sp.m / max(sp.n, 1)))
+    elif cfg.num_cores > 1:
+        mc = best_multicore(cfg, M, N, K)
+        comp, scheme = mc.cycles, f"{mc.scheme}({mc.Pr}x{mc.Pc})"
+        util = min(1.0, M * N * K / max(1.0,
+                   sum(c.num_pes for c in cfg.cores) * comp))
+    else:
+        comp = float(dfm.compute_cycles(df, M, N, K, core.rows, core.cols))
+        scheme = "single"
+        util = float(dfm.pe_utilization(df, M, N, K, core.rows, core.cols))
+
+    sram = dfm.sram_traffic(df, M, N, K, core.rows, core.cols)
+    dram = dfm.dram_traffic(df, M, N, K, core.rows, core.cols, cfg.memory)
+    if sp.enabled and sparse_info is not None:
+        shrink = sparse_info["total_bytes"] / max(sparse_info["original_bytes"], 1.0)
+        dram["dram_filter"] = dram["dram_filter"] * shrink
+        sram["filter_reads"] = sram["filter_reads"] * shrink
+    dram_elems = float(dram["dram_ifmap"] + dram["dram_filter"]
+                       + dram["dram_ofmap_writes"] + dram["dram_ofmap_reads"])
+    dram_bytes = dram_elems * wb
+    bw = cfg.dram.bandwidth_bytes_per_cycle * cfg.dram.channels
+
+    dram_stats = None
+    if dram_fidelity == "cycle":
+        gran = 512
+        n_req = max(1, int(dram_bytes) // gran)
+        scale = max(1.0, n_req / _DRAM_REQ_CAP)
+        n_sim = min(n_req, _DRAM_REQ_CAP)
+        folds = max(1, int(np.ceil(n_sim / 32)))
+        t, a, w = tile_prefetch_trace(n_sim * gran // folds, folds,
+                                      comp / max(folds, 1) / scale, gran)
+        res = simulate_dram(t, a, w, cfg.dram, gran)
+        stall = float(res.stall_cycles) * scale
+        dram_stats = dict(row_hits=int(res.row_hits), row_misses=int(res.row_misses),
+                          row_conflicts=int(res.row_conflicts),
+                          throughput_Bpc=float(res.throughput),
+                          mean_latency=float(jnp.mean(res.latency)),
+                          scaled_by=scale)
+    else:
+        stall = float(dfm.dram_stall_cycles_simple(dram_bytes / op.count if op.count
+                                                   else dram_bytes, comp, bw))
+
+    layout_extra = 0.0
+    if cfg.layout.enabled:
+        lr = evaluate_layout(cfg.layout, core.rows,
+                             n_cycles=min(512, max(8, int(min(comp, 512)))),
+                             lead_stride=1, elem_stride=max(1, N), word_bytes=wb)
+        layout_extra = (lr.mean_slowdown - 1.0) * comp
+
+    comp_total = comp * op.count
+    stall_total = stall * op.count
+    layout_total = layout_extra * op.count
+    total = comp_total + stall_total + layout_total
+    macs = op.macs
+    counts = action_counts(
+        cfg, cycles=comp_total, macs=macs,
+        ifmap_reads=float(sram["ifmap_reads"]) * op.count,
+        filter_reads=float(sram["filter_reads"]) * op.count,
+        ofmap_writes=float(sram["ofmap_writes"]) * op.count,
+        ofmap_reads=float(sram["ofmap_reads"]) * op.count,
+        dram_bytes=dram_bytes * op.count,
+        l2_reads=(dram_elems * op.count if cfg.memory.l2_sram_bytes else 0.0))
+    e = energy_pj(counts, ert)
+    return OpResult(op.name, "gemm", comp_total, stall_total, layout_total,
+                    total, util, macs,
+                    float(sram["ifmap_reads"] + sram["filter_reads"]
+                          + sram["ofmap_reads"]) * op.count,
+                    float(sram["ofmap_writes"]) * op.count,
+                    dram_bytes * op.count, e["total"], scheme,
+                    dram_stats, sparse_info)
+
+
+def simulate_network(cfg: AcceleratorConfig, ops: Sequence[Op], *,
+                     dram_fidelity: str = "fast",
+                     ert: ERT = DEFAULT_ERT) -> NetworkReport:
+    results = [simulate_op(cfg, o, dram_fidelity=dram_fidelity, ert=ert)
+               for o in ops]
+    total = sum(r.total_cycles for r in results)
+    comp = sum(r.compute_cycles for r in results)
+    stall = sum(r.stall_cycles for r in results)
+    lay = sum(r.layout_extra_cycles for r in results)
+    dram_b = sum(r.dram_bytes for r in results)
+    e_total = sum(r.energy_pj for r in results)
+    macs = sum(r.macs for r in results)
+    pes = sum(c.num_pes for c in cfg.cores)
+    breakdown: Dict[str, float] = {}
+    return NetworkReport(
+        ops=results, total_cycles=total, compute_cycles=comp,
+        stall_cycles=stall, layout_extra_cycles=lay, dram_bytes=dram_b,
+        energy_pj=e_total, energy_breakdown=breakdown,
+        avg_power_w=power_w(e_total, total, cfg.clock_ghz),
+        edp=edp(e_total, total),
+        utilization=min(1.0, macs / max(1.0, pes * total)))
+
+
+# --------------------------------------------------------------------------
+# Traced path for DSE sweeps (vmap over array dims / GEMM dims; pjit-shardable)
+# --------------------------------------------------------------------------
+
+def gemm_summary_traced(dataflow: str, M, N, K, R, C, *,
+                        sram_elems, bw_bytes_per_cycle, word_bytes=2):
+    """Fully-traced single-core summary: every argument may be a jnp array.
+
+    Used by examples/dse_sweep.py: vmap over (R, C) grids and (M, N, K)
+    workloads, then pjit over the production mesh -> thousands of simulated
+    designs per second. Mirrors dataflow.gemm_summary.
+    """
+    Sr, Sc, T = dfm.map_gemm(dataflow, M, N, K)
+    fr, fc = dfm.cdiv(Sr, R), dfm.cdiv(Sc, C)
+    comp = (2 * R + C + T - 2) * fr * fc
+    util = (1.0 * M * N * K) / (1.0 * R * C * comp)
+    WK, XK, O = 1.0 * M * K, 1.0 * K * N, 1.0 * M * N
+    n_t = jnp.clip(sram_elems // jnp.maximum(K, 1), 1, N)
+    m_t = jnp.clip(sram_elems // jnp.maximum(K, 1), 1, M)
+    total_a = XK + WK * dfm.cdiv(N, n_t)
+    total_b = WK + XK * dfm.cdiv(M, m_t)
+    dram_elems = jnp.minimum(total_a, total_b) + O
+    dram_bytes = dram_elems * word_bytes
+    stall = jnp.maximum(0.0, dram_bytes / bw_bytes_per_cycle - comp)
+    return dict(compute_cycles=comp, stall_cycles=stall,
+                total_cycles=comp + stall, utilization=util,
+                dram_bytes=dram_bytes)
+
+
+def energy_traced(comp_cycles, macs, dram_bytes, R, C,
+                  ert: ERT = DEFAULT_ERT):
+    """Traced energy estimate for DSE (MAC + leak + DRAM dominate)."""
+    pes = 1.0 * R * C
+    util = jnp.clip(macs / jnp.maximum(1.0, pes * comp_cycles), 0.0, 1.0)
+    e = (pes * comp_cycles * util * ert.mac_random
+         + pes * comp_cycles * (1 - util) * ert.mac_gated
+         + pes * comp_cycles * ert.pe_leak_per_cycle
+         + 3.0 * macs * ert.spad_read
+         + dram_bytes * ert.dram_per_byte)
+    return e

@@ -1,0 +1,103 @@
+"""On-chip multi-bank data-layout modeling (paper Sec. VI).
+
+The multi-bank SRAM is a 2D array: a "line" aggregates the same row index
+across banks; each bank offers `ports_per_bank` concurrent line accesses per
+cycle. A data layout assigns each tensor element a (line_id, col_id) via
+nested-loop dimension orders; bank_id = col_id // bandwidth_per_bank.
+
+Per-cycle slowdown (paper eq.): the bank needing the most distinct lines
+relative to its ports sets the cycle's latency:
+
+    slowdown = max_i ceil(distinct_lines(bank_i) / ports(bank_i))
+
+`slowdown_per_cycle` is the vectorized oracle; kernels/conflict provides the
+Pallas TPU kernel computing the same quantity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .accelerator import LayoutConfig
+
+
+def chw_ids(c, h, w, H: int, W: int, cfg: LayoutConfig,
+            word_bytes: int = 2) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Paper's (line_id, col_id, bank_id) for a CxHxW tensor layout."""
+    c1, h1, w1 = cfg.c1_step, cfg.h1_step, cfg.w1_step
+    line = (c // c1) * (-(-H // h1)) * (-(-W // w1)) \
+        + (h // h1) * (-(-W // w1)) + (w // w1)
+    col = (w % w1) * h1 * c1 + (h % h1) * c1 + (c % c1)
+    bpb = max(1, cfg.line_bytes // word_bytes)   # elements per bank line
+    bank = (col // bpb) % cfg.num_banks
+    return line, col, bank
+
+
+def flat_ids(flat_index, cfg: LayoutConfig, word_bytes: int = 2):
+    """Row-major layout for 2D operand matrices: contiguous elements fill a
+    line across banks, then move to the next line."""
+    bpb = max(1, cfg.line_bytes // word_bytes)
+    elems_per_line = bpb * cfg.num_banks
+    line = flat_index // elems_per_line
+    col = flat_index % elems_per_line
+    bank = col // bpb
+    return line, col, bank
+
+
+@partial(jax.jit, static_argnames=("num_banks", "ports"))
+def slowdown_per_cycle(line: jnp.ndarray, bank: jnp.ndarray,
+                       num_banks: int, ports: int = 1) -> jnp.ndarray:
+    """(cycles, k) line/bank ids -> per-cycle slowdown (>= 1).
+
+    Distinct (bank, line) pairs per cycle are counted by sorting each cycle's
+    keys and marking boundaries; per-bank distinct counts come from a one-hot
+    segment sum. Matches kernels/conflict (Pallas) bit-exactly.
+    """
+    # int32-safe composite key: bank * (max_line + 1) + line
+    stride = jnp.max(line) + 1
+    key = bank.astype(jnp.int32) * stride + line.astype(jnp.int32)
+    key = jnp.sort(key, axis=1)
+    new = jnp.concatenate(
+        [jnp.ones_like(key[:, :1], bool), key[:, 1:] != key[:, :-1]], axis=1)
+    b = (key // stride).astype(jnp.int32)
+    onehot = jax.nn.one_hot(b, num_banks, dtype=jnp.int32)
+    counts = jnp.einsum("ck,ckb->cb", new.astype(jnp.int32), onehot)
+    per_bank = -(-counts // ports)
+    return jnp.maximum(1, per_bank.max(axis=1))
+
+
+def streaming_access_pattern(R: int, n_cycles: int, lead_stride: int,
+                             elem_stride: int = 1) -> jnp.ndarray:
+    """Flat element indices accessed per cycle by a streaming operand port:
+    cycle t reads R elements {t*lead_stride + r*elem_stride}."""
+    t = jnp.arange(n_cycles)[:, None]
+    r = jnp.arange(R)[None, :]
+    return t * lead_stride + r * elem_stride
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutResult:
+    mean_slowdown: float
+    max_slowdown: float
+    extra_cycles: float
+
+
+def evaluate_layout(cfg: LayoutConfig, R: int, n_cycles: int,
+                    lead_stride: int, elem_stride: int = 1,
+                    word_bytes: int = 2) -> LayoutResult:
+    """Slowdown of a systolic streaming pattern under a flat layout.
+
+    lead_stride/elem_stride describe how consecutive cycles / array rows map
+    to operand addresses (dataflow-dependent): e.g. ws streams a column of X
+    per cycle (elem_stride = N, lead_stride = 1 for row-major K x N).
+    """
+    idx = streaming_access_pattern(R, n_cycles, lead_stride, elem_stride)
+    line, _, bank = flat_ids(idx, cfg, word_bytes)
+    sd = slowdown_per_cycle(line, bank, cfg.num_banks, cfg.ports_per_bank)
+    return LayoutResult(mean_slowdown=float(sd.mean()),
+                        max_slowdown=float(sd.max()),
+                        extra_cycles=float((sd - 1).sum()))

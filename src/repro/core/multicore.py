@@ -1,0 +1,142 @@
+"""Multi tensor-core engine: heterogeneous cores, shared L2, non-uniform split.
+
+Paper Sec. III-C/III-D: cores may differ in systolic dims and SIMD units, and
+MCM-style packages have non-uniform NoP latency to main memory. Workload is
+split so per-core (compute + NoP) finish times equalize: with per-unit-work
+rate a_i = cycles per unit of the split dim on core i and fixed NoP offset
+b_i = nop_hops * cycles_per_hop * tiles, solve
+
+    a_i * s_i + b_i = theta,  sum_i s_i = S
+    => theta = (S + sum(b_i / a_i)) / sum(1 / a_i),  s_i = (theta - b_i) / a_i
+
+then integerize s_i (floor + distribute remainder) and the makespan is
+max_i(a_i * s_i + b_i). Uniform grids with zero hops reduce exactly to the
+partition.py equations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from .accelerator import AcceleratorConfig, CoreConfig
+from .dataflow import cdiv, map_gemm
+from .partition import partition_footprint
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiCoreResult:
+    cycles: float                 # makespan over cores (compute + NoP)
+    per_core_cycles: Tuple[float, ...]
+    per_core_share: Tuple[int, ...]
+    scheme: str
+    Pr: int
+    Pc: int
+    l2_fit: bool                  # partitions fit the shared L2
+    l2_spill_elems: float         # unique elements beyond L2 capacity
+    footprint_l1: float
+    footprint_l2: float
+    reduce_elems: float
+
+
+def _core_rate(core: CoreConfig, split: str, scheme: str, dataflow: str,
+               Sr: int, Sc: int, T: int, Pr: int, Pc: int) -> float:
+    """Cycles per unit of the split dimension on this core (a_i)."""
+    R, C = core.rows, core.cols
+    if scheme == "spatial":
+        # split Sr: cycles(s) = (2R+C+T-2) * ceil(s/R) * ceil(Sc/(Pc*C))
+        return (2 * R + C + T - 2) * cdiv(Sc, Pc * C) / R
+    if scheme == "st1":
+        return (2 * R + C + cdiv(T, Pc) - 2) * cdiv(Sc, C) / R
+    # st2: split Sc
+    return (2 * R + C + cdiv(T, Pr) - 2) * cdiv(Sr, R) / C
+
+
+def nonuniform_split(total: int, rates: Sequence[float],
+                     offsets: Sequence[float]) -> List[int]:
+    """Equalize a_i*s_i + b_i; integer shares summing to `total` (each >= 0)."""
+    a = np.asarray(rates, dtype=np.float64)
+    b = np.asarray(offsets, dtype=np.float64)
+    inv = 1.0 / a
+    theta = (total + float(np.sum(b * inv))) / float(np.sum(inv))
+    s = np.maximum(0.0, (theta - b) * inv)
+    scale = total / max(s.sum(), 1e-9)
+    s = s * scale
+    shares = np.floor(s).astype(int)
+    rem = total - int(shares.sum())
+    # give remaining units to cores with the largest fractional part
+    order = np.argsort(-(s - shares))
+    for i in range(rem):
+        shares[order[i % len(shares)]] += 1
+    return [int(x) for x in shares]
+
+
+def simulate_multicore(cfg: AcceleratorConfig, M: int, N: int, K: int,
+                       scheme: str = "spatial") -> MultiCoreResult:
+    """Partition one GEMM over the core grid and return the makespan."""
+    df = cfg.dataflow
+    Sr, Sc, T = map_gemm(df, M, N, K)
+    Pr, Pc = cfg.mesh_rows, cfg.mesh_cols
+    cores = cfg.cores
+
+    # --- per-core workload shares along the split dimension -----------------
+    if scheme in ("spatial", "st1"):
+        split_total, ngroups = Sr, Pr
+    else:
+        split_total, ngroups = Sc, Pc
+    # group cores along the split axis; each group shares the split dim.
+    grid = np.array(range(Pr * Pc)).reshape(Pr, Pc)
+    groups = grid if scheme in ("spatial", "st1") else grid.T  # rows = groups
+    per_core_cyc = np.zeros(Pr * Pc)
+    shares_out = np.zeros(Pr * Pc, dtype=int)
+
+    # rate/offset per group-row (use the first core of the group for the
+    # secondary dims; heterogeneity enters through each member's own rate)
+    rates, offsets = [], []
+    for g in range(ngroups):
+        core = cores[groups[g][0]]
+        rates.append(_core_rate(core, "", scheme, df, Sr, Sc, T, Pr, Pc))
+        offsets.append(core.nop_hops * cfg.nop_cycles_per_hop)
+    shares = nonuniform_split(split_total, rates, offsets)
+
+    for g in range(ngroups):
+        for idx in groups[g]:
+            core = cores[idx]
+            R, C = core.rows, core.cols
+            s = shares[g]
+            if scheme == "spatial":
+                cyc = (2 * R + C + T - 2) * cdiv(s, R) * cdiv(Sc, Pc * C)
+            elif scheme == "st1":
+                cyc = (2 * R + C + cdiv(T, Pc) - 2) * cdiv(s, R) * cdiv(Sc, C)
+            else:
+                cyc = (2 * R + C + cdiv(T, Pr) - 2) * cdiv(Sr, R) * cdiv(s, C)
+            per_core_cyc[idx] = cyc + core.nop_hops * cfg.nop_cycles_per_hop
+            shares_out[idx] = s
+
+    # --- shared L2 capacity check (Sec. III-B) ------------------------------
+    fp_l1 = partition_footprint(scheme, df, Sr, Sc, T, Pr, Pc, dedup=False)
+    fp_l2 = partition_footprint(scheme, df, Sr, Sc, T, Pr, Pc, dedup=True)
+    wb = cfg.memory.word_bytes
+    l2_cap_elems = cfg.memory.l2_sram_bytes / wb if cfg.memory.l2_sram_bytes else 0.0
+    l2_need = float(fp_l2["stream_in"] + fp_l2["stationary"])  # operand partitions
+    l2_fit = (l2_cap_elems == 0.0) or (l2_need <= l2_cap_elems)
+    spill = 0.0 if l2_fit else l2_need - l2_cap_elems
+
+    return MultiCoreResult(
+        cycles=float(per_core_cyc.max()),
+        per_core_cycles=tuple(float(c) for c in per_core_cyc),
+        per_core_share=tuple(int(s) for s in shares_out),
+        scheme=scheme, Pr=Pr, Pc=Pc,
+        l2_fit=bool(l2_fit), l2_spill_elems=float(spill),
+        footprint_l1=float(fp_l1["total"]), footprint_l2=float(fp_l2["total"]),
+        reduce_elems=float(fp_l1["reduce_elems"]))
+
+
+def best_multicore(cfg: AcceleratorConfig, M: int, N: int, K: int,
+                   objective: str = "cycles") -> MultiCoreResult:
+    results = [simulate_multicore(cfg, M, N, K, s)
+               for s in ("spatial", "st1", "st2")]
+    if objective == "cycles":
+        return min(results, key=lambda r: (r.cycles, r.footprint_l1))
+    return min(results, key=lambda r: (r.footprint_l1, r.cycles))

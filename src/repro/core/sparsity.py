@@ -1,0 +1,116 @@
+"""N:M sparsity modeling (paper Sec. IV).
+
+Sparsity lives on the weight operand W[M_rows, K]: each block of `m`
+consecutive K-elements in a row holds `n` nonzeros. Layer-wise sparsity uses
+one n for the whole layer; row-wise sparsity randomizes n per (row, block)
+with n <= m/2 (paper constraint — density beyond m/2 negates the benefit).
+
+Compute model: on a weight-stationary systolic array the compressed weight
+stream only loads/streams nonzero reduction rows, so the effective reduction
+dim K' shrinks. Columns advance in lockstep, so a fold's K' is the max over
+the fold's columns of their nonzero counts (layer-wise: exactly K*n/m).
+
+Storage model (paper Fig. 6): blocked ELLPACK = values + ceil(log2(m))-bit
+metadata per value; CSR/CSC also reported for comparison.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .accelerator import SparsityConfig
+from .dataflow import cdiv, map_gemm
+
+
+def metadata_bits(m: int) -> int:
+    return max(1, int(math.ceil(math.log2(m))))
+
+
+def expected_rowwise_n(m: int) -> float:
+    """Row-wise n ~ Uniform{1..m//2}: E[n] = (1 + m//2) / 2."""
+    return (1 + m // 2) / 2.0
+
+
+def effective_K(K, sp: SparsityConfig, cols_in_fold: int = 1):
+    """Effective reduction length K' after N:M compression.
+
+    Layer-wise: K' = ceil(K * n / m).
+    Row-wise:   per-block fold length is the max over `cols_in_fold` iid
+    Uniform{1..m//2} draws; E[max] = m/2 - sum_{j<m/2} (j/(m/2))^c  (exact for
+    iid uniforms), applied per block of m.
+    """
+    if not sp.enabled:
+        return K
+    if not sp.row_wise:
+        return cdiv(K * sp.n, sp.m)
+    half = sp.m // 2
+    c = max(1, cols_in_fold)
+    # E[max of c iid Uniform{1..half}] = half - sum_{j=1}^{half-1} (j/half)^c
+    emax = half - sum((j / half) ** c for j in range(1, half))
+    blocks = cdiv(K, sp.m)
+    return jnp.ceil(blocks * emax).astype(jnp.int32) if hasattr(K, "dtype") \
+        else int(math.ceil(blocks * emax))
+
+
+def sample_rowwise_counts(key, rows: int, K: int, m: int) -> jnp.ndarray:
+    """(rows, K//m) int nonzero counts, Uniform{1..m//2} (trace fidelity)."""
+    blocks = K // m
+    half = max(1, m // 2)
+    return jax.random.randint(key, (rows, blocks), 1, half + 1)
+
+
+def sparse_compute_cycles(dataflow: str, M, N, K, R: int, C: int,
+                          sp: SparsityConfig):
+    """Compute cycles with compressed weight streaming (ws recommended)."""
+    K_eff = effective_K(K, sp, cols_in_fold=C)
+    Sr, Sc, T = map_gemm(dataflow, M, N, K_eff)
+    return (2 * R + C + T - 2) * cdiv(Sr, R) * cdiv(Sc, C)
+
+
+def storage_report(rows: int, K: int, sp: SparsityConfig,
+                   word_bytes: int = 2) -> Dict[str, float]:
+    """SPARSE_REPORT: original vs compressed filter storage in bytes."""
+    dense = float(rows * K * word_bytes)
+    if not sp.enabled:
+        return dict(representation="dense", original_bytes=dense,
+                    values_bytes=dense, metadata_bytes=0.0, total_bytes=dense)
+    if sp.row_wise:
+        nnz = rows * (K / sp.m) * expected_rowwise_n(sp.m)
+    else:
+        nnz = rows * K * sp.n / sp.m
+    if sp.representation == "ellpack_block":
+        meta = nnz * metadata_bits(sp.m) / 8.0
+    elif sp.representation == "csr":
+        idx_bytes = max(1, math.ceil(math.ceil(math.log2(max(K, 2))) / 8))
+        meta = nnz * idx_bytes + (rows + 1) * 4.0
+    elif sp.representation == "csc":
+        idx_bytes = max(1, math.ceil(math.ceil(math.log2(max(rows, 2))) / 8))
+        meta = nnz * idx_bytes + (K + 1) * 4.0
+    else:
+        raise ValueError(f"unknown representation {sp.representation!r}")
+    values = nnz * word_bytes
+    return dict(representation=sp.representation, original_bytes=dense,
+                values_bytes=float(values), metadata_bytes=float(meta),
+                total_bytes=float(values + meta))
+
+
+def pack_ellpack_block(w: jnp.ndarray, m: int):
+    """Reference blocked-ELLPACK packer (Fig. 6): (values, indices) per block.
+
+    w: (rows, K). Returns values (rows, K//m, m//2... padded to max n) plus
+    per-entry intra-block indices. Used by tests and the kernels' oracle.
+    """
+    rows, K = w.shape
+    blocks = K // m
+    wb = w[:, :blocks * m].reshape(rows, blocks, m)
+    nz = wb != 0
+    # stable order: nonzeros first, preserving index order
+    order = jnp.argsort(~nz, axis=-1, stable=True)
+    vals = jnp.take_along_axis(wb, order, axis=-1)
+    idx = jnp.where(jnp.take_along_axis(nz, order, axis=-1), order, -1)
+    counts = nz.sum(-1)
+    keep = int(counts.max()) if counts.size else 0
+    return vals[..., :keep], idx[..., :keep], counts

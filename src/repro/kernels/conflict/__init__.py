@@ -1,0 +1,3 @@
+from .conflict import conflict_slowdown
+from .ops import layout_slowdown
+from .ref import conflict_slowdown_reference

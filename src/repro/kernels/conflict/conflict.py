@@ -1,0 +1,57 @@
+"""Pallas kernel: per-cycle SRAM bank-conflict slowdown (paper Sec. VI).
+
+Input: the (line_id, bank_id) of each of the k elements a cycle requests
+from the multi-bank on-chip memory. Output per cycle:
+
+    slowdown = max_b ceil(distinct_lines(bank b) / ports_per_bank)
+
+Distinct counting inside the kernel avoids sorts (not VPU-friendly): access
+j is "first" iff no j' < j shares its (bank, line); per-bank counts then come
+from a one-hot contraction — O(k^2) in VREGs, with k = array rows + cols
+(small). Grid tiles the cycle axis; each block holds (blk, k) ids in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conflict_kernel(line_ref, bank_ref, o_ref, *, num_banks: int,
+                     ports: int):
+    line = line_ref[...]                       # (blk, k)
+    bank = bank_ref[...]
+    blk, k = line.shape
+    same = (line[:, :, None] == line[:, None, :]) & \
+           (bank[:, :, None] == bank[:, None, :])        # (blk, k, k)
+    j = jax.lax.broadcasted_iota(jnp.int32, (blk, k, k), 1)
+    jp = jax.lax.broadcasted_iota(jnp.int32, (blk, k, k), 2)
+    earlier = same & (jp < j)
+    is_first = ~jnp.any(earlier, axis=2)                 # (blk, k)
+    onehot = (bank[:, :, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (1, 1, num_banks), 2))
+    counts = jnp.sum(is_first[:, :, None] & onehot, axis=1)   # (blk, banks)
+    per_bank = -(-counts // ports)
+    o_ref[...] = jnp.maximum(1, jnp.max(per_bank, axis=1)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_banks", "ports", "blk",
+                                             "interpret"))
+def conflict_slowdown(line: jnp.ndarray, bank: jnp.ndarray, *,
+                      num_banks: int, ports: int = 1, blk: int = 128,
+                      interpret: bool = False) -> jnp.ndarray:
+    """(cycles, k) line/bank ids -> (cycles,) int slowdown, >= 1."""
+    cycles, k = line.shape
+    blk = min(blk, cycles)
+    grid = (pl.cdiv(cycles, blk),)
+    return pl.pallas_call(
+        functools.partial(_conflict_kernel, num_banks=num_banks, ports=ports),
+        grid=grid,
+        in_specs=[pl.BlockSpec((blk, k), lambda i: (i, 0)),
+                  pl.BlockSpec((blk, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((cycles,), jnp.int32),
+        interpret=interpret,
+    )(line.astype(jnp.int32), bank.astype(jnp.int32))

@@ -1,0 +1,28 @@
+"""Jit'd wrapper: layout slowdown for a streaming access pattern."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.accelerator import LayoutConfig
+from ...core.layout import flat_ids, streaming_access_pattern
+from .conflict import conflict_slowdown
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "R", "n_cycles",
+                                             "word_bytes", "interpret"))
+def layout_slowdown(cfg: LayoutConfig, *, R: int, n_cycles: int,
+                    lead_stride: int, elem_stride: int, word_bytes: int = 2,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """Per-cycle slowdown of a systolic streaming pattern (Pallas path)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    idx = streaming_access_pattern(R, n_cycles, lead_stride, elem_stride)
+    line, _, bank = flat_ids(idx, cfg, word_bytes)
+    return conflict_slowdown(line, bank, num_banks=cfg.num_banks,
+                             ports=cfg.ports_per_bank, interpret=interpret)

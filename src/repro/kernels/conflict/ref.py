@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the bank-conflict kernel: core.layout's sort-based
+distinct counting (the vectorized form of the paper's Sec. VI equations)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.layout import slowdown_per_cycle
+
+
+def conflict_slowdown_reference(line: jnp.ndarray, bank: jnp.ndarray, *,
+                                num_banks: int, ports: int = 1) -> jnp.ndarray:
+    return slowdown_per_cycle(line, bank, num_banks, ports).astype(jnp.int32)

@@ -1,0 +1,3 @@
+from .ellpack import ellpack_pack
+from .ops import pack_with_report
+from .ref import ellpack_pack_reference

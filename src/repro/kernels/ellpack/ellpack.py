@@ -1,0 +1,58 @@
+"""Pallas kernel: blocked-ELLPACK packing (paper Fig. 6).
+
+Compresses an N:M-sparse weight matrix into (values, intra-block indices):
+for every block of `m` consecutive elements in a row, the <= keep nonzeros
+are moved to the front with their log2(m)-bit positions. Sort-free
+formulation (TPU has no in-kernel sort): the j-th output slot selects the
+element whose nonzero-rank (exclusive cumsum of the nonzero mask) equals j —
+a one-hot contraction over the block, pure VPU work.
+
+Grid tiles the row axis; each block holds (rows_blk, K) in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_kernel(w_ref, vals_ref, idx_ref, *, m: int, keep: int):
+    w = w_ref[...]                                 # (rb, K)
+    rb, K = w.shape
+    blocks = K // m
+    wb = w.reshape(rb, blocks, m)
+    nz = wb != 0
+    rank = jnp.cumsum(nz.astype(jnp.int32), axis=-1) - nz.astype(jnp.int32)
+    j = jax.lax.broadcasted_iota(jnp.int32, (rb, blocks, m, keep), 3)
+    sel = (rank[..., None] == j) & nz[..., None]   # (rb, blocks, m, keep)
+    vals_ref[...] = jnp.einsum("rbmk,rbm->rbk", sel.astype(w.dtype), wb)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (rb, blocks, m, keep), 2)
+    idx = jnp.sum(jnp.where(sel, pos, 0), axis=2)
+    idx_ref[...] = jnp.where(jnp.any(sel, axis=2), idx, -1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "keep", "rows_blk",
+                                             "interpret"))
+def ellpack_pack(w: jnp.ndarray, *, m: int, keep: int = 0,
+                 rows_blk: int = 64, interpret: bool = False):
+    """w: (rows, K), K % m == 0 -> (vals (rows, K//m, keep),
+    idx (rows, K//m, keep) with -1 padding). keep defaults to m // 2
+    (the paper's N <= M/2 constraint)."""
+    rows, K = w.shape
+    assert K % m == 0, (K, m)
+    keep = keep or max(1, m // 2)
+    rows_blk = min(rows_blk, rows)
+    blocks = K // m
+    grid = (pl.cdiv(rows, rows_blk),)
+    return pl.pallas_call(
+        functools.partial(_pack_kernel, m=m, keep=keep),
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows_blk, K), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((rows_blk, blocks, keep), lambda i: (i, 0, 0)),
+                   pl.BlockSpec((rows_blk, blocks, keep), lambda i: (i, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows, blocks, keep), w.dtype),
+                   jax.ShapeDtypeStruct((rows, blocks, keep), jnp.int32)],
+        interpret=interpret,
+    )(w)

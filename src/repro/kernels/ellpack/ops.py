@@ -1,0 +1,32 @@
+"""Jit'd wrapper + storage accounting for the ELLPACK packer."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.sparsity import metadata_bits
+from .ellpack import ellpack_pack
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pack_with_report(w: jnp.ndarray, *, m: int, keep: int = 0,
+                     interpret: bool | None = None):
+    """Returns (vals, idx, report) — report mirrors SPARSE_REPORT.csv."""
+    interpret = _default_interpret() if interpret is None else interpret
+    keep = keep or max(1, m // 2)
+    vals, idx = ellpack_pack(w, m=m, keep=keep, interpret=interpret)
+    nnz = int(jnp.sum(idx >= 0))
+    wb = jnp.dtype(w.dtype).itemsize
+    report = dict(
+        representation="ellpack_block",
+        original_bytes=float(w.size * wb),
+        values_bytes=float(nnz * wb),
+        metadata_bytes=float(nnz * metadata_bits(m) / 8.0),
+    )
+    report["total_bytes"] = report["values_bytes"] + report["metadata_bytes"]
+    return vals, idx, report

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle: core.sparsity.pack_ellpack_block truncated/padded to the
+kernel's fixed `keep` slots."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.sparsity import pack_ellpack_block
+
+
+def ellpack_pack_reference(w: jnp.ndarray, *, m: int, keep: int = 0):
+    keep = keep or max(1, m // 2)
+    vals, idx, _ = pack_ellpack_block(w, m)
+    cur = vals.shape[-1]
+    if cur >= keep:
+        return vals[..., :keep], idx[..., :keep]
+    pad = ((0, 0), (0, 0), (0, keep - cur))
+    return jnp.pad(vals, pad), jnp.pad(idx, pad, constant_values=-1)

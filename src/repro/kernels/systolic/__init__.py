@@ -1,0 +1,4 @@
+from .ops import FoldSim, batched_fold_activity, simulate_fold
+from .ref import (systolic_ws_reference, total_cycles_ws,
+                  wavefront_activity_reference)
+from .systolic import systolic_matmul, wavefront_activity

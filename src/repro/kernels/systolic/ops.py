@@ -1,0 +1,56 @@
+"""Jit'd public wrappers for the systolic tile simulator kernels.
+
+`simulate_fold` is what core/engine + benchmarks call: one weight-stationary
+fold -> (functional output, per-cycle active-PE counts incl. the R-cycle
+weight preload, total cycles, utilization). Matches
+core.dataflow.compute_cycles (= 2R + C + T - 2) by construction and the
+ref.py scan oracle elementwise.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .systolic import systolic_matmul, wavefront_activity
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+class FoldSim(NamedTuple):
+    out: jnp.ndarray            # (T, C) functional result
+    active: jnp.ndarray         # (2R + C + T - 2,) active PEs per cycle
+    cycles: int
+    utilization: jnp.ndarray    # scalar in [0, 1]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def simulate_fold(x: jnp.ndarray, w: jnp.ndarray, *,
+                  interpret: bool | None = None) -> FoldSim:
+    """Simulate one WS fold: x (T, R) streamed, w (R, C) stationary."""
+    interpret = _default_interpret() if interpret is None else interpret
+    T, R = x.shape
+    C = w.shape[1]
+    out = systolic_matmul(x, w, interpret=interpret)
+    wave = wavefront_activity(jnp.int32(T), R=R, C=C,
+                              n_cycles=T + R + C - 2, interpret=interpret)
+    preload = jnp.full((R,), C, jnp.int32)     # weight rows shifting in
+    active = jnp.concatenate([preload, wave])
+    cycles = 2 * R + C + T - 2
+    util = jnp.sum(active) / (R * C * cycles)
+    return FoldSim(out, active, cycles, util)
+
+
+@functools.partial(jax.jit, static_argnames=("R", "C", "n_cycles", "interpret"))
+def batched_fold_activity(Ts: jnp.ndarray, *, R: int, C: int,
+                          n_cycles: int, interpret: bool | None = None):
+    """vmap'd wavefront activity for a batch of folds with varying T —
+    the DSE fast path (one compile, thousands of folds)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    fn = functools.partial(wavefront_activity, R=R, C=C, n_cycles=n_cycles,
+                           interpret=interpret)
+    return jax.vmap(fn)(Ts.astype(jnp.int32))

@@ -1,0 +1,75 @@
+"""Pure-jnp cycle-accurate oracle for the weight-stationary systolic tile.
+
+An explicit `lax.scan` over cycles moves data exactly like the paper's
+per-PE event loop:
+
+  - weights W[r, c] are stationary in PE(r, c);
+  - stream element x[t, r] enters row r (column 0) at cycle t + r (input
+    skew) and shifts one column right per cycle;
+  - each PE multiplies its resident x by W and adds the psum arriving from
+    the PE above; psums shift one row down per cycle;
+  - output o[t, c] leaves the bottom of column c at cycle t + (R-1) + c.
+
+Returns both the functional result (T, C) and the per-cycle active-PE count
+of the wavefront phase (length T + R + C - 2), the oracle for
+kernels/systolic/systolic.py.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def systolic_ws_reference(x: jnp.ndarray, w: jnp.ndarray
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    T, R = x.shape
+    R2, C = w.shape
+    assert R == R2
+    n_cycles = T + R + C - 2
+    acc_dtype = jnp.promote_types(jnp.promote_types(x.dtype, w.dtype),
+                                  jnp.float32)
+    wf = w.astype(acc_dtype)
+
+    def cycle(carry, n):
+        x_buf, v_buf, psum = carry
+        # skewed injection at column 0: row r receives x[n - r, r]
+        t_idx = n - jnp.arange(R)
+        valid_in = (t_idx >= 0) & (t_idx < T)
+        x_in = jnp.where(valid_in,
+                         x[jnp.clip(t_idx, 0, T - 1), jnp.arange(R)], 0)
+        # shift right one column
+        x_buf = jnp.concatenate([x_in[:, None], x_buf[:, :-1]], axis=1)
+        v_buf = jnp.concatenate([valid_in[:, None], v_buf[:, :-1]], axis=1)
+        prod = x_buf.astype(acc_dtype) * wf * v_buf
+        # psums shift down one row, accumulating this cycle's products
+        psum = jnp.concatenate(
+            [jnp.zeros((1, C), acc_dtype), psum[:-1, :]], axis=0) + prod
+        bottom = psum[-1, :]                    # emerges next cycle boundary
+        active = jnp.sum(v_buf)
+        return (x_buf, v_buf, psum), (bottom, active)
+
+    carry0 = (jnp.zeros((R, C), x.dtype), jnp.zeros((R, C), bool),
+              jnp.zeros((R, C), acc_dtype))
+    _, (bottoms, active) = jax.lax.scan(cycle, carry0,
+                                        jnp.arange(n_cycles))
+    # o[t, c] left the array at cycle t + (R-1) + c
+    t = jnp.arange(T)[:, None]
+    c = jnp.arange(C)[None, :]
+    out = bottoms[t + (R - 1) + c, c]
+    return out.astype(jnp.promote_types(x.dtype, w.dtype)), active
+
+
+def wavefront_activity_reference(T: int, R: int, C: int) -> jnp.ndarray:
+    """Closed-form oracle for active(n) = |{(t,r,c): t+r+c=n}| (numpy-style)."""
+    n = jnp.arange(T + R + C - 2)[:, None]
+    r = jnp.arange(R)[None, :]
+    lo = jnp.maximum(0, n - r - (C - 1))
+    hi = jnp.minimum(T - 1, n - r)
+    return jnp.sum(jnp.maximum(0, hi - lo + 1), axis=1).astype(jnp.int32)
+
+
+def total_cycles_ws(T: int, R: int, C: int) -> int:
+    """Fold runtime incl. R preload cycles: 2R + C + T - 2 (paper Eq. 1)."""
+    return 2 * R + C + T - 2

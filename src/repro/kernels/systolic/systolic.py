@@ -1,0 +1,97 @@
+"""Pallas TPU kernels for cycle-accurate systolic-array tile simulation.
+
+The paper's inner loop — simulating an R x C weight-stationary systolic array
+executing one GEMM fold — is split into its two physical components, both as
+Pallas kernels with explicit VMEM BlockSpecs:
+
+  1. `matmul_kernel`: the *functional* result the PE grid produces
+     (O = X @ W). On TPU this IS the hardware being simulated, so it runs
+     on the MXU with 128-aligned blocks.
+  2. `wavefront_kernel`: the *cycle model* — active-PE counts per cycle of
+     the skewed wavefront. PE(r, c) fires for stream element t at cycle
+     t + r + c, so active(n) = |{(t,r,c) : t+r+c = n}|, a separable
+     clamp-sum evaluated in VREGs (no TPU analogue of the paper's per-PE
+     Python event loop exists; this index algebra is the TPU-native form).
+
+kernels/systolic/ref.py holds the pure-jnp oracle: an explicit per-cycle
+`lax.scan` that shifts operands through PE registers exactly like the paper's
+simulator, against which both kernels are validated elementwise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEF_BLK_T = 128
+DEF_BLK_C = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    # x: (T_blk, R), w: (R, C_blk) resident in VMEM; MXU matmul.
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...],
+                         preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_t", "blk_c", "interpret"))
+def systolic_matmul(x: jnp.ndarray, w: jnp.ndarray, *, blk_t: int = DEF_BLK_T,
+                    blk_c: int = DEF_BLK_C, interpret: bool = False):
+    """O = X @ W with explicit (blk_t, R) x (R, blk_c) VMEM tiling.
+
+    x: (T, R) streamed operand, w: (R, C) stationary operand.
+    """
+    T, R = x.shape
+    R2, C = w.shape
+    assert R == R2, (x.shape, w.shape)
+    blk_t = min(blk_t, T)
+    blk_c = min(blk_c, C)
+    out_dtype = jnp.promote_types(x.dtype, w.dtype)
+    grid = (pl.cdiv(T, blk_t), pl.cdiv(C, blk_c))
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((blk_t, R), lambda i, j: (i, 0)),
+                  pl.BlockSpec((R, blk_c), lambda i, j: (0, j))],
+        out_specs=pl.BlockSpec((blk_t, blk_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((T, C), out_dtype),
+        interpret=interpret,
+    )(x, w)
+
+
+def _wavefront_kernel(meta_ref, o_ref, *, blk_n: int, R: int, C: int):
+    # meta: (1,) = [T]. Block i covers cycles [i*blk_n, (i+1)*blk_n).
+    T = meta_ref[0]
+    i = pl.program_id(0)
+    n = i * blk_n + jax.lax.iota(jnp.int32, blk_n)          # global cycle ids
+    r = jax.lax.broadcasted_iota(jnp.int32, (blk_n, R), 1)
+    nn = n[:, None]
+    # #{t in [0,T) : max(0, n-r-(C-1)) <= t <= min(T-1, n-r)}
+    lo = jnp.maximum(0, nn - r - (C - 1))
+    hi = jnp.minimum(T - 1, nn - r)
+    o_ref[...] = jnp.sum(jnp.maximum(0, hi - lo + 1), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("R", "C", "n_cycles", "blk_n",
+                                             "interpret"))
+def wavefront_activity(T: jnp.ndarray, *, R: int, C: int, n_cycles: int,
+                       blk_n: int = 256, interpret: bool = False):
+    """Active-PE count per wavefront cycle (length n_cycles >= T+R+C-2).
+
+    T is a traced scalar so one compiled kernel serves every stream length
+    within a padded cycle budget.
+    """
+    blk_n = min(blk_n, n_cycles)
+    meta = jnp.asarray([T], jnp.int32)
+    grid = (pl.cdiv(n_cycles, blk_n),)
+    return pl.pallas_call(
+        functools.partial(_wavefront_kernel, blk_n=blk_n, R=R, C=C),
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)
+                  if False else pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((blk_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_cycles,), jnp.int32),
+        interpret=interpret,
+    )(meta)

@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first backend init). 512 placeholder host devices let
+# jax.make_mesh build the production meshes; nothing is ever allocated —
+# every input is a ShapeDtypeStruct.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Per cell:
+  jit(step, in_shardings=..., donate...).lower(**ShapeDtypeStructs).compile()
+  -> memory_analysis()   (per-device bytes: args / temp / peak)
+  -> cost_analysis()     (per-device HLO FLOPs + bytes accessed)
+  -> post-SPMD HLO text  -> per-chip collective bytes (while-loop trip counts
+     multiply collectives inside scanned layer bodies; ring-algorithm
+     factors per replica-group size)
+  -> roofline terms (TPU v5e-class: 197 TFLOP/s bf16, 819 GB/s HBM,
+     50 GB/s/link ICI) -> JSON in experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --jobs 2        # orchestrate subprocesses
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+HBM_BYTES = 16 * 1024**3     # v5e-class capacity
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+def model_flops(cfg, *, seq: int, batch: int, mode: str) -> float:
+    n = cfg.active_param_count()
+    if mode == "train":
+        return 6.0 * n * seq * batch
+    if mode == "prefill":
+        return 2.0 * n * seq * batch
+    return 2.0 * n * batch           # decode: one token per sequence
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             sp_mode: str = "megatron", serve_params: bool = False,
+             accum: int = 1) -> Dict:
+    import dataclasses
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from ..configs import get_config
+    from ..configs.shapes import SHAPES, skip_reason
+    from ..dist.sharding import make_mesh_ctx
+    from ..models.zoo import ModelBundle
+    from .mesh import make_production_mesh
+
+    cfg = dataclasses.replace(get_config(arch), sp_mode=sp_mode)
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return dict(arch=arch, shape=shape, mesh=mesh_kind, skipped=reason)
+    spec = SHAPES[shape]
+    seq, batch, mode = spec["seq"], spec["batch"], spec["mode"]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    ctx = make_mesh_ctx(mesh)
+    chips = mesh.size
+    bundle = ModelBundle(cfg)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        param_sds = bundle.param_sds()
+        param_sh = bundle.param_shardings(
+            ctx, serve=serve_params and mode != "train")
+        if mode == "train":
+            opt_sds = bundle.opt_sds()
+            opt_sh = bundle.opt_shardings(ctx)
+            batch_sds = bundle.batch_sds(seq=seq, batch=batch, mode="train")
+            batch_sh = bundle.batch_shardings(ctx, seq=seq, batch=batch,
+                                              mode="train")
+            fn = bundle.train_step(ctx, accum=accum)
+            jitted = jax.jit(fn, in_shardings=(param_sh, opt_sh, batch_sh),
+                             out_shardings=(param_sh, opt_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(param_sds, opt_sds, batch_sds)
+        elif mode == "prefill":
+            batch_sds = bundle.batch_sds(seq=seq, batch=batch, mode="prefill")
+            batch_sh = bundle.batch_shardings(ctx, seq=seq, batch=batch,
+                                              mode="prefill")
+            fn = bundle.prefill_step(ctx)
+            jitted = jax.jit(fn, in_shardings=(param_sh, batch_sh))
+            lowered = jitted.lower(param_sds, batch_sds)
+        else:                         # decode
+            cache_sds = bundle.cache_sds(batch=batch, cache_len=seq)
+            cache_sh = bundle.cache_shardings(ctx, batch=batch, cache_len=seq)
+            tok_sds = jax.ShapeDtypeStruct((batch, 1), jax.numpy.int32)
+            dp = ctx.dp_axes if batch % ctx.dp == 0 else None
+            tok_sh = NamedSharding(mesh, P(dp, None))
+            len_sds = jax.ShapeDtypeStruct((), jax.numpy.int32)
+            fn = bundle.decode_step(ctx)
+            jitted = jax.jit(fn, in_shardings=(param_sh, cache_sh, tok_sh,
+                                               NamedSharding(mesh, P())),
+                             out_shardings=(None, cache_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(param_sds, cache_sds, tok_sds, len_sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    from .hlocost import HloCost
+    hc = HloCost(hlo).totals()
+    per_chip_coll, coll_detail = hc["collective_bytes"], hc["collectives"]
+
+    # loop-aware per-device costs (XLA's cost_analysis counts while bodies
+    # once; see launch/hlocost.py) — raw XLA numbers kept for reference.
+    flops_dev = float(hc["flops"])
+    bytes_dev = float(hc["hbm_bytes"])
+    mf = model_flops(cfg, seq=seq, batch=batch, mode=mode)
+    terms = dict(
+        compute_s=flops_dev / PEAK_FLOPS,
+        memory_s=bytes_dev / HBM_BW,
+        collective_s=per_chip_coll / LINK_BW,
+    )
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    step_flops_total = flops_dev * chips
+    result = dict(
+        arch=arch, shape=shape, mesh=mesh_kind, chips=chips, mode=mode,
+        sp_mode=sp_mode, serve_params=serve_params, accum=accum,
+        seq=seq, batch=batch,
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        peak_bytes_per_device=int(getattr(ma, "peak_memory_in_bytes", 0)
+                                  or (ma.argument_size_in_bytes
+                                      + ma.temp_size_in_bytes)),
+        arg_bytes_per_device=int(ma.argument_size_in_bytes),
+        temp_bytes_per_device=int(ma.temp_size_in_bytes),
+        out_bytes_per_device=int(ma.output_size_in_bytes),
+        fits_hbm=bool((ma.argument_size_in_bytes + ma.temp_size_in_bytes)
+                      < HBM_BYTES),
+        hlo_flops_per_device=flops_dev,
+        hlo_bytes_per_device=bytes_dev,
+        xla_flops_once=float(cost.get("flops", 0.0)),
+        xla_bytes_once=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes_per_chip=per_chip_coll,
+        collectives=coll_detail[:8],
+        model_flops=mf,
+        useful_flops_ratio=mf / max(step_flops_total, 1.0),
+        terms=terms, dominant=dominant,
+        roofline_bound_s=bound,
+        mfu_vs_roofline=terms["compute_s"] / max(bound, 1e-12),
+        ok=True,
+    )
+    return result
+
+
+def cell_list() -> List[Tuple[str, str, str]]:
+    from ..configs import list_archs, get_config
+    from ..configs.shapes import SHAPES, skip_reason
+    cells = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if skip_reason(cfg, shape):
+                continue
+            for mesh in ("pod", "multipod"):
+                cells.append((arch, shape, mesh))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=1)
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--missing-only", action="store_true")
+    ap.add_argument("--sp-mode", default="megatron",
+                    choices=["megatron", "weightgather"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--serve-params", action="store_true",
+                    help="decode/prefill: TP-resident weights (no FSDP gather)")
+    ap.add_argument("--accum", type=int, default=1,
+                    help="train: gradient-accumulation microbatches")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        cells = cell_list()
+        if args.missing_only:
+            cells = [(a, s, m) for a, s, m in cells if not os.path.exists(
+                os.path.join(args.out, f"{a}__{s}__{m}.json"))]
+        procs: List = []
+        for a, s, m in cells:
+            while len(procs) >= args.jobs:
+                for p in list(procs):
+                    if p.poll() is not None:
+                        procs.remove(p)
+                time.sleep(1)
+            cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a,
+                   "--shape", s, "--mesh", m, "--out", args.out]
+            print("launch:", a, s, m, flush=True)
+            procs.append(subprocess.Popen(cmd))
+        for p in procs:
+            p.wait()
+        return
+
+    res = run_cell(args.arch, args.shape, args.mesh, sp_mode=args.sp_mode,
+                   serve_params=args.serve_params, accum=args.accum)
+    tag = f"__{args.tag}" if args.tag else ""
+    path = os.path.join(args.out,
+                        f"{args.arch}__{args.shape}__{args.mesh}{tag}.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1, default=float)
+    print(json.dumps({k: v for k, v in res.items()
+                      if k not in ("collectives",)}, indent=1, default=float))
+
+
+if __name__ == "__main__":
+    main()

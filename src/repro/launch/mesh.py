@@ -1,0 +1,21 @@
+"""Production mesh construction (multi-pod dry-run spec).
+
+Functions, not module-level constants: importing this module never touches
+jax device state (device count locks on first backend init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(tp: int = 1):
+    """Whatever this host has (smoke tests / examples)."""
+    n = len(jax.devices())
+    tp = min(tp, n)
+    return jax.make_mesh((n // tp, tp), ("data", "model"))

@@ -1,0 +1,224 @@
+"""GQA attention: flash-chunked training/prefill, cached decode, windows.
+
+Sharding strategy (see dist/sharding.py):
+  - heads % tp == 0: head tensor-parallelism — q/k/v weights sharded on the
+    head axis, attention computed locally per model rank.
+  - otherwise: sequence-sharded attention — weights replicated on `model`,
+    queries re-sharded along L over the model axis (each rank computes full
+    softmax for its query rows), output re-gathered. Works for any head
+    count (whisper 8H, qwen2-1.5b 12H, internvl2 14H, yi-34b 56H...).
+  - decode: the KV cache shards its length axis over `model`; softmax and
+    the context contraction reduce over a sharded axis, which SPMD lowers
+    to small (B, H) all-reduces — flash-decode's combine, for free.
+
+The flash pass is a lax.scan over query chunks with the full K/V per chunk
+(peak memory chunk x L instead of L x L); causal/window masks are applied
+per chunk from absolute positions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..dist.sharding import MeshCtx
+from .common import rope
+
+NEG = -1e30
+
+
+def _with_sharding(x, ctx: Optional[MeshCtx], spec):
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, ctx.sharding(spec))
+
+
+def gqa_scores_ctx(q, k, v, *, causal: bool, window: int,
+                   q_offset, chunk: int = 256):
+    """q: (B, Lq, H, hd), k/v: (B, S, KV, hd) -> (B, Lq, H, hd).
+
+    Scan over query chunks; memory peak (B, chunk, H, S).
+    q_offset: absolute position of q[0] (prefill: 0; decode: cache length).
+    """
+    B, Lq, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    scale = hd ** -0.5
+    chunk = min(chunk, Lq)
+    kpos = jnp.arange(S)
+
+    qg = q.reshape(B, Lq, KV, group, hd)
+
+    def one_chunk(qc, qpos):
+        # qc: (B, nq, KV, group, hd)
+        s = jnp.einsum("bqkgh,bskh->bqkgs", qc, k,
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((qc.shape[1], S), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, :, None, None, :], s, NEG)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bqkgs,bskh->bqkgh", p, v)
+
+    if Lq <= chunk:
+        qpos = q_offset + jnp.arange(Lq)
+        return one_chunk(qg, qpos).reshape(B, Lq, H, hd)
+
+    n = -(-Lq // chunk)
+    pad = n * chunk - Lq
+    if pad:                          # ragged tail: pad, compute, slice
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    qs = qg.reshape(B, n, chunk, KV, group, hd).swapaxes(0, 1)
+
+    @jax.checkpoint          # recompute probs in backward: peak = 1 chunk
+    def body(_, inp):
+        qc, i = inp
+        qpos = q_offset + i * chunk + jnp.arange(chunk)
+        return None, one_chunk(qc, qpos)
+
+    _, outs = jax.lax.scan(body, None, (qs, jnp.arange(n)))
+    out = outs.swapaxes(0, 1).reshape(B, n * chunk, KV, group, hd)
+    return out[:, :Lq].reshape(B, Lq, H, hd)
+
+
+class AttnParams(NamedTuple):
+    wq: jnp.ndarray          # (d, H, hd)
+    wk: jnp.ndarray          # (d, KV, hd)
+    wv: jnp.ndarray          # (d, KV, hd)
+    wo: jnp.ndarray          # (H, hd, d)
+    bq: Optional[jnp.ndarray] = None
+    bk: Optional[jnp.ndarray] = None
+    bv: Optional[jnp.ndarray] = None
+
+
+def attention(p, x, *, cfg, ctx: Optional[MeshCtx], causal: bool = True,
+              kv_x: Optional[jnp.ndarray] = None, use_rope: bool = True,
+              positions: Optional[jnp.ndarray] = None,
+              head_tp: Optional[bool] = None):
+    """Full-sequence attention (train / prefill). x: (B, L, d)."""
+    B, L, d = x.shape
+    H, KV, hd = cfg.heads, cfg.kv_heads, cfg.head_dim
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bld,dnh->blnh", x, p["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", src, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", src, p["wv"])
+    if p.get("bq") is not None:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if use_rope and kv_x is None:
+        pos = positions if positions is not None else jnp.arange(L)
+        q = rope(q, jnp.broadcast_to(pos, (B, L)), cfg.rope_theta)
+        k = rope(k, jnp.broadcast_to(pos, (B, L)), cfg.rope_theta)
+
+    is_causal = causal and kv_x is None
+    if ctx is None:
+        out = gqa_scores_ctx(q, k, v, causal=is_causal,
+                             window=cfg.attn_window, q_offset=0)
+    else:
+        if head_tp is None:
+            head_tp = (H % ctx.tp == 0
+                       and getattr(cfg, "sp_mode", "megatron") != "weightgather")
+        dp = ctx.dp_axes
+        if head_tp:
+            # Megatron-style GQA TP: KV heads repeated to H so the head axis
+            # shards evenly; each rank's q heads see their own kv copy.
+            group = H // KV
+            kr = jnp.repeat(k, group, axis=2) if group > 1 else k
+            vr = jnp.repeat(v, group, axis=2) if group > 1 else v
+            q = _with_sharding(q, ctx, P(dp, None, "model", None))
+            kr = _with_sharding(kr, ctx, P(dp, None, "model", None))
+            vr = _with_sharding(vr, ctx, P(dp, None, "model", None))
+            out = gqa_scores_ctx(q, kr, vr, causal=is_causal,
+                                 window=cfg.attn_window, q_offset=0)
+        elif q.shape[1] % ctx.tp == 0 and q.shape[1] > 1:
+            # sequence-parallel fallback (odd head counts): each model rank
+            # owns L/tp query rows and the full K/V; masks use the rank's
+            # absolute query offset. shard_map keeps the chunked scan local
+            # so SPMD never slices across the sharded L axis.
+            out = _seq_sharded_attention(q, k, v, ctx=ctx, causal=is_causal,
+                                         window=cfg.attn_window)
+        else:
+            # tiny L (cross-attention during decode): replicated compute
+            out = gqa_scores_ctx(q, k, v, causal=is_causal,
+                                 window=cfg.attn_window, q_offset=0)
+    y = jnp.einsum("blnh,nhd->bld", out, p["wo"])
+    if ctx is not None:
+        seq_out = (getattr(cfg, "sp_mode", "megatron") == "weightgather"
+                   and L % ctx.tp == 0 and L > 1)
+        y = _with_sharding(y, ctx, P(ctx.dp_axes,
+                                     "model" if seq_out else None, None))
+    return y, (k, v)
+
+
+def _seq_sharded_attention(q, k, v, *, ctx: MeshCtx, causal: bool,
+                           window: int):
+    B, L, H, hd = q.shape
+    tp = ctx.tp
+    dp = ctx.dp_axes
+    l_loc = L // tp
+
+    def local_fn(q_blk, k_full, v_full):
+        r = jax.lax.axis_index("model")
+        # bound the f32 score buffer (B_loc, chunk, H, S) to ~256 MB
+        b_loc, _, hh, _ = q_blk[0].shape
+        s_full = k_full.shape[2]
+        budget = max(16, (1 << 28) // max(b_loc * hh * s_full * 4, 1))
+        chunk = 1 << max(4, budget.bit_length() - 1)
+        return gqa_scores_ctx(q_blk[0], k_full[0], v_full[0], causal=causal,
+                              window=window, q_offset=r * l_loc,
+                              chunk=min(chunk, l_loc))[None]
+
+    # dummy leading axis keeps shard_map specs rank-stable for dp tuples
+    out = jax.shard_map(
+        local_fn, mesh=ctx.mesh,
+        in_specs=(P(None, dp, "model", None, None),
+                  P(None, dp, None, None, None),
+                  P(None, dp, None, None, None)),
+        out_specs=P(None, dp, "model", None, None),
+        check_vma=False,
+    )(q[None], k[None], v[None])
+    return out[0]
+
+
+def decode_attention(p, x, cache_k, cache_v, cache_len, *, cfg,
+                     ctx: Optional[MeshCtx], use_rope: bool = True):
+    """One-token decode. x: (B, 1, d); cache: (B, S, KV, hd) (len axis may be
+    sharded over `model`). Returns y, (new_k, new_v) cache tensors."""
+    B = x.shape[0]
+    H, KV, hd = cfg.heads, cfg.kv_heads, cfg.head_dim
+    S = cache_k.shape[1]
+    q = jnp.einsum("bld,dnh->blnh", x, p["wq"])
+    k = jnp.einsum("bld,dnh->blnh", x, p["wk"])
+    v = jnp.einsum("bld,dnh->blnh", x, p["wv"])
+    if p.get("bq") is not None:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if use_rope:
+        pos = jnp.full((B, 1), cache_len, jnp.int32)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    # ring-buffer insert for windowed caches, plain insert otherwise
+    slot = cache_len % S if cfg.attn_window else jnp.minimum(cache_len, S - 1)
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                      (0, slot, 0, 0))
+    group = H // KV
+    qg = q.reshape(B, 1, KV, group, hd)
+    s = jnp.einsum("bqkgh,bskh->bqkgs", qg, ck,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    valid = jnp.arange(S) <= jnp.minimum(cache_len, S - 1)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG)
+    pattn = jax.nn.softmax(s, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bqkgs,bskh->bqkgh", pattn, cv).reshape(B, 1, H, hd)
+    y = jnp.einsum("blnh,nhd->bld", out, p["wo"])
+    if ctx is not None:
+        y = _with_sharding(y, ctx, P(ctx.dp_axes, None, None))
+    return y, (ck, cv)

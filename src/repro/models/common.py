@@ -1,0 +1,73 @@
+"""Shared model pieces: norms, RoPE, activations, chunked cross-entropy."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale).astype(x.dtype) * gamma
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e6):
+    """x: (..., L, H, hd); positions: (..., L) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    # angles: (..., L, 1, half) — broadcast over the heads axis
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos.astype(x.dtype)
+    sin = sin.astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def swiglu(gate_up: jnp.ndarray):
+    g, u = jnp.split(gate_up, 2, axis=-1)
+    return jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u
+
+
+def gelu(x):
+    return jax.nn.gelu(x.astype(jnp.float32)).astype(x.dtype)
+
+
+def chunked_cross_entropy(x: jnp.ndarray, unembed: jnp.ndarray,
+                          labels: jnp.ndarray, *, true_vocab: int,
+                          chunk: int = 512,
+                          mask: Optional[jnp.ndarray] = None):
+    """Mean CE without materializing (B, L, V) logits.
+
+    x: (B, L, d) final hidden; unembed: (d, Vpad); labels: (B, L) int32.
+    A lax.scan over L-chunks keeps peak memory at (B, chunk, Vpad); padded
+    vocab entries are masked to -inf. mask: (B, L) 1.0 = count this token.
+    """
+    B, L, d = x.shape
+    V = unembed.shape[1]
+    chunk = min(chunk, L)
+    n = L // chunk
+    xs = x[:, :n * chunk].reshape(B, n, chunk, d).swapaxes(0, 1)
+    ys = labels[:, :n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+    ms = (mask[:, :n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+          if mask is not None else jnp.ones_like(ys, jnp.float32))
+    vocab_ok = (jnp.arange(V) < true_vocab)
+
+    @jax.checkpoint          # recompute logits in backward: peak = 1 chunk
+    def body(carry, inp):
+        xc, yc, mc = inp
+        logits = jnp.einsum("bld,dv->blv", xc, unembed,
+                            preferred_element_type=jnp.float32)
+        logits = jnp.where(vocab_ok, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        loss = jnp.sum((lse - gold) * mc)
+        return (carry[0] + loss, carry[1] + jnp.sum(mc)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (xs, ys, ms))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,277 @@
+"""Serving paths: prefill (build cache) and decode (one token, cached).
+
+Cache layout (leaves stacked over the scanned layer axis, mirroring params):
+  dense/moe/vlm : {"k","v"}: (L, B, S, KV, hd) — S sharded over `model`
+  audio         : decoder self-attn cache + precomputed encoder states
+  hybrid        : mamba (S, conv) states per block + shared-attn K/V per group
+  ssm           : mLSTM (S, n) + sLSTM (h, c, n, m) states
+
+Windowed attention (mixtral, zamba2 shared blocks) allocates S = window and
+decode_attention ring-buffers into it — the reason long_500k stays O(window).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import MeshCtx
+from .config import ModelConfig
+from .params import ParamDef
+from .common import rms_norm
+from .transformer import (CONV_K, embed_tokens, mamba_block, mlstm_block,
+                          slstm_block, transformer_block,
+                          transformer_block_decode)
+
+PyTree = Any
+
+
+def _pd(shape, logical, dtype):
+    return ParamDef(tuple(int(s) for s in shape), tuple(logical), dtype=dtype)
+
+
+def cache_defs(cfg: ModelConfig, batch: int, cache_len: int) -> PyTree:
+    """ParamDef tree for the decode cache (SDS + shardings derive from it)."""
+    dt = cfg.param_dtype
+    B, d = batch, cfg.d_model
+    S = min(cache_len, cfg.attn_window) if cfg.attn_window else cache_len
+    KV, hd = cfg.kv_heads, cfg.head_dim
+    kv = lambda L: {"k": _pd((L, B, S, KV, hd),
+                             (None, "batch", "kv_len", None, None), dt),
+                    "v": _pd((L, B, S, KV, hd),
+                             (None, "batch", "kv_len", None, None), dt)}
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    p = di // H
+    mamba = lambda *lead: {
+        "S": _pd((*lead, B, H, p, N), (*(None,) * len(lead), "batch",
+                                       None, None, None), "float32"),
+        "conv": _pd((*lead, B, CONV_K - 1, di + 2 * N),
+                    (*(None,) * len(lead), "batch", None, None), dt)}
+    if cfg.family in ("dense", "moe", "vlm"):
+        return kv(cfg.layers)
+    if cfg.family == "audio":
+        enc_len = cache_len                     # encoder frames
+        return {"self": kv(cfg.decoder_layers),
+                "enc": _pd((B, enc_len, d), ("batch", None, None), dt)}
+    if cfg.family == "hybrid":
+        g = cfg.attn_every
+        groups = cfg.layers // g
+        tail = cfg.layers - groups * g
+        Sw = min(cache_len, cfg.attn_window) if cfg.attn_window else cache_len
+        return {"mamba_groups": mamba(groups, g - 1),
+                "mamba_tail": mamba(max(tail, 1)),
+                "attn": {"k": _pd((groups, B, Sw, KV, hd),
+                                  (None, "batch", "kv_len", None, None), dt),
+                         "v": _pd((groups, B, Sw, KV, hd),
+                                  (None, "batch", "kv_len", None, None), dt)}}
+    if cfg.family == "ssm":
+        g = cfg.slstm_every or 8
+        groups = cfg.layers // g
+        H2 = cfg.heads
+        p2 = di // H2
+        return {"mlstm": {
+                    "S": _pd((groups, g - 1, B, H2, p2, p2),
+                             (None, None, "batch", None, "tp", None), "float32"),
+                    "n": _pd((groups, g - 1, B, H2, p2),
+                             (None, None, "batch", None, "tp"), "float32")},
+                "slstm": {k: _pd((groups, B, d), (None, "batch", None),
+                                 "float32") for k in ("h", "c", "n", "m")}}
+    raise ValueError(cfg.family)
+
+
+# --------------------------------------------------------------------------
+# prefill
+# --------------------------------------------------------------------------
+
+def _prefill_kv_stack(params, x, *, cfg, ctx, S, causal=True, cross=None):
+    """Run blocks, returning hidden + per-layer (k, v) padded to S."""
+    from .attention import attention
+
+    def body(h, pl):
+        hn = rms_norm(h, pl["ln1"], cfg.norm_eps)
+        a, (k, v) = attention(pl, hn, cfg=cfg, ctx=ctx, causal=causal)
+        h = h + a
+        if cross is not None:
+            xp = {kk[2:]: vv for kk, vv in pl.items() if kk.startswith("x_")}
+            a2, _ = attention(xp, rms_norm(h, pl["ln3"], cfg.norm_eps),
+                              cfg=cfg, ctx=ctx, causal=False, kv_x=cross,
+                              use_rope=False)
+            h = h + a2
+        from .transformer import _ffn_apply
+        h = h + _ffn_apply(pl, rms_norm(h, pl["ln2"], cfg.norm_eps), cfg, ctx)
+        L = k.shape[1]
+        if cfg.attn_window and L > S:               # keep last `window`
+            k, v = k[:, L - S:], v[:, L - S:]
+        elif L < S:
+            pad = ((0, 0), (0, S - L), (0, 0), (0, 0))
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        return h, {"k": k.astype(jnp.dtype(cfg.param_dtype)),
+                   "v": v.astype(jnp.dtype(cfg.param_dtype))}
+
+    body = jax.checkpoint(body)
+    return jax.lax.scan(body, x, params)
+
+
+def prefill(params, batch, *, cfg: ModelConfig, ctx: Optional[MeshCtx]
+            ) -> Tuple[jnp.ndarray, PyTree]:
+    """Returns (last-position logits (B, Vpad), cache)."""
+    fam = cfg.family
+    tokens = batch["tokens"]
+    B, L = tokens.shape
+    S = min(L, cfg.attn_window) if cfg.attn_window else L
+    if fam in ("dense", "moe", "vlm"):
+        x = embed_tokens(params, tokens, ctx)
+        if fam == "vlm" and batch.get("patches") is not None:
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], 1)
+        x, cache = _prefill_kv_stack(params["blocks"], x, cfg=cfg, ctx=ctx,
+                                     S=x.shape[1] if not cfg.attn_window
+                                     else S)
+    elif fam == "audio":
+        from .transformer import decoder_stack
+        enc = decoder_stack(params["enc_blocks"], batch["frames"], cfg=cfg,
+                            ctx=ctx, causal=False)
+        enc = rms_norm(enc, params["enc_norm"], cfg.norm_eps)
+        x = embed_tokens(params, tokens, ctx)
+        x, kvc = _prefill_kv_stack(params["dec_blocks"], x, cfg=cfg, ctx=ctx,
+                                   S=S, cross=enc)
+        cache = {"self": kvc, "enc": enc}
+    elif fam == "hybrid":
+        x = embed_tokens(params, tokens, ctx)
+        shared = params["shared_attn"]
+
+        def group_body(h, gp):
+            def mbody(hh, pl):
+                out, st = mamba_block(pl, hh, cfg=cfg, ctx=ctx)
+                return out, {"S": st[0], "conv": st[1]}
+            h, mstates = jax.lax.scan(mbody, h, gp)
+            from .attention import attention
+            a, (k, v) = attention(shared, rms_norm(h, shared["ln1"],
+                                                   cfg.norm_eps),
+                                  cfg=cfg, ctx=ctx, causal=True)
+            h = h + a
+            from .transformer import _ffn_apply
+            h = h + _ffn_apply(shared, rms_norm(h, shared["ln2"],
+                                                cfg.norm_eps), cfg, ctx)
+            Lk = k.shape[1]
+            if Lk > S:
+                k, v = k[:, Lk - S:], v[:, Lk - S:]
+            dt = jnp.dtype(cfg.param_dtype)
+            return h, (mstates, {"k": k.astype(dt), "v": v.astype(dt)})
+
+        group_body = jax.checkpoint(group_body)
+        x, (mg, attn_c) = jax.lax.scan(group_body, x, params["mamba_groups"])
+
+        def tbody(h, pl):
+            out, st = mamba_block(pl, h, cfg=cfg, ctx=ctx)
+            return out, {"S": st[0], "conv": st[1]}
+        x, mt = jax.lax.scan(jax.checkpoint(tbody), x, params["mamba_tail"])
+        cache = {"mamba_groups": mg, "mamba_tail": mt, "attn": attn_c}
+    elif fam == "ssm":
+        x = embed_tokens(params, tokens, ctx)
+
+        def group_body(h, gp):
+            mgp, sp = gp
+
+            def mbody(hh, pl):
+                out, st = mlstm_block(pl, hh, cfg=cfg, ctx=ctx)
+                return out, {"S": st[0], "n": st[1]}
+            h, ms = jax.lax.scan(mbody, h, mgp)
+            h, ss = slstm_block(sp, h, cfg=cfg, ctx=ctx)
+            return h, (ms, dict(zip(("h", "c", "n", "m"), ss)))
+
+        group_body = jax.checkpoint(group_body)
+        x, (ms, ss) = jax.lax.scan(group_body, x,
+                                   (params["mlstm_groups"],
+                                    params["slstm_blocks"]))
+        cache = {"mlstm": ms, "slstm": ss}
+    else:
+        raise ValueError(fam)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["unembed"],
+                        preferred_element_type=jnp.float32)
+    return logits, cache
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def decode(params, cache, token, cache_len, *, cfg: ModelConfig,
+           ctx: Optional[MeshCtx]) -> Tuple[jnp.ndarray, PyTree]:
+    """One-token step. token: (B, 1) int32; returns (logits (B, Vpad), cache)."""
+    fam = cfg.family
+    x = embed_tokens(params, token, ctx)
+    if fam in ("dense", "moe", "vlm"):
+        def body(h, pc):
+            pl, cl = pc
+            h, cn = transformer_block_decode(pl, h, cl, cache_len, cfg=cfg,
+                                             ctx=ctx)
+            return h, cn
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    elif fam == "audio":
+        enc = cache["enc"]
+
+        def body(h, pc):
+            pl, cl = pc
+            h, cn = transformer_block_decode(pl, h, cl, cache_len, cfg=cfg,
+                                             ctx=ctx, cross=enc)
+            return h, cn
+        x, kvc = jax.lax.scan(body, x, (params["dec_blocks"], cache["self"]))
+        new_cache = {"self": kvc, "enc": enc}
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(h, gpc):
+            gp, (mst, ac) = gpc
+
+            def mbody(hh, pst):
+                pl, st = pst
+                out, stn = mamba_block(pl, hh, cfg=cfg, ctx=ctx,
+                                       state=(st["S"], st["conv"]),
+                                       decode=True)
+                return out, {"S": stn[0], "conv": stn[1]}
+            h, ms = jax.lax.scan(mbody, h, (gp, mst))
+            h, acn = transformer_block_decode(shared, h, ac, cache_len,
+                                              cfg=cfg, ctx=ctx)
+            return h, (ms, acn)
+
+        x, (mg, ac) = jax.lax.scan(
+            group_body, x,
+            (params["mamba_groups"],
+             (cache["mamba_groups"], cache["attn"])))
+
+        def tbody(h, pst):
+            pl, st = pst
+            out, stn = mamba_block(pl, h, cfg=cfg, ctx=ctx,
+                                   state=(st["S"], st["conv"]), decode=True)
+            return out, {"S": stn[0], "conv": stn[1]}
+        x, mt = jax.lax.scan(tbody, x,
+                             (params["mamba_tail"], cache["mamba_tail"]))
+        new_cache = {"mamba_groups": mg, "mamba_tail": mt, "attn": ac}
+    elif fam == "ssm":
+        def group_body(h, gpc):
+            (mgp, sp), (mst, sst) = gpc
+
+            def mbody(hh, pst):
+                pl, st = pst
+                out, stn = mlstm_block(pl, hh, cfg=cfg, ctx=ctx,
+                                       state=(st["S"], st["n"]), decode=True)
+                return out, {"S": stn[0], "n": stn[1]}
+            h, ms = jax.lax.scan(mbody, h, (mgp, mst))
+            h, ss = slstm_block(sp, h, cfg=cfg, ctx=ctx,
+                                state=(sst["h"], sst["c"], sst["n"],
+                                       sst["m"]), decode=True)
+            return h, (ms, dict(zip(("h", "c", "n", "m"), ss)))
+
+        x, (ms, ss) = jax.lax.scan(
+            group_body, x,
+            ((params["mlstm_groups"], params["slstm_blocks"]),
+             (cache["mlstm"], cache["slstm"])))
+        new_cache = {"mlstm": ms, "slstm": ss}
+    else:
+        raise ValueError(fam)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["unembed"],
+                        preferred_element_type=jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,87 @@
+"""Spec-driven parameters: one definition serves dry-run (ShapeDtypeStruct,
+zero allocation), smoke tests (real init) and sharding trees."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..dist.sharding import MeshCtx, logical_to_spec
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]     # logical axis per dim
+    init: str = "normal"                   # normal | zeros | ones
+    scale: float = 0.02
+    dtype: str = "bfloat16"
+
+    def spec(self, ctx: MeshCtx) -> P:
+        """PartitionSpec with automatic replication of non-divisible dims
+        (e.g. 8 KV heads over a 16-way model axis)."""
+        full = logical_to_spec(ctx, *self.logical)
+        out = []
+        for dim, axes in zip(self.shape, full):
+            if axes is None:
+                out.append(None)
+                continue
+            names = axes if isinstance(axes, tuple) else (axes,)
+            size = 1
+            for n in names:
+                size *= ctx.mesh.shape[n]
+            out.append(axes if dim % size == 0 else None)
+        return P(*out)
+
+
+def tree_sds(defs: PyTree) -> PyTree:
+    """ShapeDtypeStruct tree (dry-run path: no device allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype)),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def tree_specs(defs: PyTree, ctx: MeshCtx) -> PyTree:
+    return jax.tree.map(lambda d: d.spec(ctx), defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def tree_shardings(defs: PyTree, ctx: MeshCtx) -> PyTree:
+    return jax.tree.map(lambda d: NamedSharding(ctx.mesh, d.spec(ctx)), defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def init_params(defs: PyTree, key: jax.Array) -> PyTree:
+    """Real initialization (smoke tests / the train example)."""
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        dt = jnp.dtype(d.dtype)
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        else:
+            fan = d.shape[0] if d.shape else 1
+            out.append((jax.random.normal(k, d.shape, jnp.float32)
+                        * d.scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_bytes(defs: PyTree) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    return int(sum(np.prod(d.shape) * jnp.dtype(d.dtype).itemsize
+                   for d in leaves))
+
+
+def param_count(defs: PyTree) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    return int(sum(np.prod(d.shape) for d in leaves))

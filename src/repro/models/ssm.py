@@ -1,0 +1,260 @@
+"""State-space blocks: Mamba2 (chunked SSD), mLSTM (chunked matrix memory),
+sLSTM (scanned scalar memory with exponential gating).
+
+All three expose a parallel train/prefill form (lax.scan over sequence
+chunks carrying O(1) state — the sub-quadratic property long_500k relies on)
+and a single-token decode form carrying explicit recurrent state.
+
+Faithfulness notes (DESIGN.md §5): Mamba2 follows the SSD chunked algorithm
+with shared B/C across heads and a width-4 causal depthwise conv; mLSTM uses
+log-sigmoid forget gates with a chunkwise decay matrix (the published
+stabilizer `m` is carried across chunks but not within-chunk re-normalized);
+sLSTM uses the stabilized exponential-gating update with a dense recurrent
+matrix (the paper's block-diagonal per-head variant is a sparsity pattern of
+the same computation).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import rms_norm
+
+F32 = jnp.float32
+
+
+def causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv via shifted adds. x: (B, L, D), w: (K, D)."""
+    K = w.shape[0]
+    y = x * w[K - 1]
+    for k in range(1, K):
+        y = y + jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, :-k] * w[K - 1 - k]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+def mamba2_forward(p, x, *, cfg, chunk: int = 128,
+                   state: Optional[Tuple] = None):
+    """x: (B, L, d) -> (y, final_state). O(L * chunk) memory, O(1) state.
+
+    state: (S (B,H,hd,N), conv_buf (B,K-1,di+2N)) for streaming prefill.
+    """
+    B, L, d = x.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hd = di // H
+    chunk = max(1, min(chunk, L))
+
+    zx = jnp.einsum("bld,dk->blk", x, p["in_proj"])
+    z, xin = zx[..., :di], zx[..., di:]
+    bc_dt = jnp.einsum("bld,dk->blk", x, p["bc_proj"])
+    conv_in = jnp.concatenate([xin, bc_dt[..., :2 * N]], -1)
+    conv_out = causal_conv(conv_in, p["conv_w"])
+    conv_out = jax.nn.silu(conv_out.astype(F32)).astype(x.dtype)
+    xin = conv_out[..., :di]
+    Bm = conv_out[..., di:di + N].astype(F32)
+    Cm = conv_out[..., di + N:].astype(F32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", x, p["dt_proj"]).astype(F32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(F32))                      # (H,)
+
+    nc = L // chunk
+    xh = xin.reshape(B, nc, chunk, H, hd)
+    dtc = dt.reshape(B, nc, chunk, H)
+    Bc = Bm.reshape(B, nc, chunk, N)
+    Cc = Cm.reshape(B, nc, chunk, N)
+
+    S0 = (jnp.zeros((B, H, hd, N), F32) if state is None else state[0])
+
+    @jax.checkpoint          # recompute chunk internals in backward
+    def per_chunk(S, inp):
+        xq, dq, bq, cq = inp          # (B,Q,H,hd) (B,Q,H) (B,Q,N) (B,Q,N)
+        dA = dq * A                                            # (B,Q,H)
+        cums = jnp.cumsum(dA, axis=1)
+        seg = jnp.exp(cums[:, :, None, :] - cums[:, None, :, :])  # (B,i,j,H)
+        Q = xq.shape[1]
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        scores = jnp.einsum("bin,bjn->bij", cq, bq)            # shared heads
+        w = jnp.where(mask[None, :, :, None], seg, 0.0) \
+            * scores[..., None] * dq[:, None, :, :]            # (B,i,j,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xq.astype(F32))
+        decay_out = jnp.exp(cums)                              # (B,Q,H)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", cq, S, decay_out)
+        tail = jnp.exp(cums[:, -1:, :] - cums)                 # (B,Q,H)
+        contrib = jnp.einsum("bjn,bjh,bjhp->bhpn",
+                             bq, tail * dq, xq.astype(F32))
+        S_new = S * jnp.exp(cums[:, -1])[:, :, None, None] + contrib
+        return S_new, y_intra + y_inter
+
+    S, ys = jax.lax.scan(per_chunk, S0,
+                         (xh.swapaxes(0, 1), dtc.swapaxes(0, 1),
+                          Bc.swapaxes(0, 1), Cc.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(B, L, H, hd)
+    y = y + p["D"][None, None, :, None].astype(F32) \
+        * xin.reshape(B, L, H, hd).astype(F32)
+    y = y.reshape(B, L, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(x.dtype),
+                 p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("blk,kd->bld", y, p["out_proj"])
+    K = p["conv_w"].shape[0]
+    conv_buf = conv_in[:, -(K - 1):, :]
+    return out, (S, conv_buf)
+
+
+def mamba2_decode(p, x, state, *, cfg):
+    """Single token: x (B, 1, d); state = (S, conv_buf)."""
+    B = x.shape[0]
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hd = di // H
+    S, conv_buf = state
+    zx = jnp.einsum("bld,dk->blk", x, p["in_proj"])
+    z, xin = zx[..., :di], zx[..., di:]
+    bc_dt = jnp.einsum("bld,dk->blk", x, p["bc_proj"])
+    conv_in = jnp.concatenate([xin, bc_dt[..., :2 * N]], -1)   # (B,1,ch)
+    window = jnp.concatenate([conv_buf, conv_in], axis=1)      # (B,K,ch)
+    w = p["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", window, w)[:, None, :]
+    conv_out = jax.nn.silu(conv_out.astype(F32)).astype(x.dtype)
+    xin = conv_out[..., :di]
+    Bm = conv_out[..., di:di + N].astype(F32)
+    Cm = conv_out[..., di + N:].astype(F32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", x, p["dt_proj"]).astype(F32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(F32))
+    dA = jnp.exp(dt[:, 0] * A)                                 # (B,H)
+    xh = xin.reshape(B, H, hd).astype(F32)
+    S = S * dA[:, :, None, None] \
+        + jnp.einsum("bn,bh,bhp->bhpn", Bm[:, 0], dt[:, 0], xh)
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0], S) \
+        + p["D"][None, :, None].astype(F32) * xh
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(x.dtype),
+                 p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("blk,kd->bld", y, p["out_proj"])
+    return out, (S, window[:, 1:], )
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory, chunkwise)
+# ---------------------------------------------------------------------------
+
+def mlstm_forward(p, x, *, cfg, chunk: int = 128,
+                  state: Optional[Tuple] = None):
+    """x: (B, L, d) -> (y, (S, n)). Matrix state per head (hd x hd)."""
+    B, L, d = x.shape
+    di = cfg.d_inner
+    H = cfg.heads
+    hd = di // H
+    chunk = max(1, min(chunk, L))
+    up = jnp.einsum("bld,dk->blk", x, p["up_proj"])
+    z, xin = up[..., :di], up[..., di:]
+    qkv = jnp.einsum("blk,kj->blj", xin, p["w_qkv"])
+    q, k, v = [t.reshape(B, L, H, hd) for t in jnp.split(qkv, 3, -1)]
+    gates = jnp.einsum("blk,kg->blg", xin, p["w_gates"]).astype(F32)
+    logi = jax.nn.log_sigmoid(gates[..., :H])                  # (B,L,H)
+    logf = jax.nn.log_sigmoid(gates[..., H:])
+    scale = hd ** -0.5
+
+    nc = L // chunk
+    sw = lambda t: t.reshape(B, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    S0 = jnp.zeros((B, H, hd, hd), F32) if state is None else state[0]
+    n0 = jnp.zeros((B, H, hd), F32) if state is None else state[1]
+
+    @jax.checkpoint          # recompute chunk internals in backward
+    def per_chunk(carry, inp):
+        S, n = carry
+        qc, kc, vc, lic, lfc = inp
+        cums = jnp.cumsum(lfc, axis=1)                         # (B,Q,H)
+        dmat = jnp.exp(cums[:, :, None, :] - cums[:, None, :, :]
+                       + lic[:, None, :, :])                   # (B,i,j,H)
+        Q = qc.shape[1]
+        mask = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        dmat = jnp.where(mask, dmat, 0.0)
+        scores = jnp.einsum("bihp,bjhp->bijh", qc.astype(F32),
+                            kc.astype(F32)) * scale
+        w = scores * dmat
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, vc.astype(F32))
+        dec = jnp.exp(cums)
+        y_inter = jnp.einsum("bihp,bhpk,bih->bihk",
+                             qc.astype(F32), S, dec) * scale
+        n_inter = jnp.einsum("bihp,bhp,bih->bih",
+                             qc.astype(F32), n, dec) * scale
+        n_intra = jnp.einsum("bijh,bjhp,bihp->bih", w,
+                             kc.astype(F32), qc.astype(F32)) * scale
+        denom = jnp.maximum(jnp.abs(n_intra + n_inter), 1.0)[..., None]
+        y = (y_intra + y_inter) / denom
+        tail = jnp.exp(cums[:, -1:, :] - cums + lic)
+        S = S * jnp.exp(cums[:, -1])[..., None, None] \
+            + jnp.einsum("bjh,bjhp,bjhk->bhpk", tail, kc.astype(F32),
+                         vc.astype(F32))
+        n = n * jnp.exp(cums[:, -1])[..., None] \
+            + jnp.einsum("bjh,bjhp->bhp", tail, kc.astype(F32))
+        return (S, n), y
+
+    (S, n), ys = jax.lax.scan(per_chunk, (S0, n0),
+                              (sw(q), sw(k), sw(v), sw(logi), sw(logf)))
+    y = ys.swapaxes(0, 1).reshape(B, L, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(F32)).astype(x.dtype)
+    out = jnp.einsum("blk,kd->bld", y, p["down_proj"])
+    return out, (S, n)
+
+
+def mlstm_decode(p, x, state, *, cfg):
+    B = x.shape[0]
+    di, H = cfg.d_inner, cfg.heads
+    hd = di // H
+    S, n = state
+    up = jnp.einsum("bld,dk->blk", x, p["up_proj"])
+    z, xin = up[..., :di], up[..., di:]
+    qkv = jnp.einsum("blk,kj->blj", xin, p["w_qkv"])
+    q, k, v = [t.reshape(B, H, hd) for t in jnp.split(qkv[:, 0], 3, -1)]
+    gates = jnp.einsum("bk,kg->bg", xin[:, 0], p["w_gates"]).astype(F32)
+    i = jnp.exp(jax.nn.log_sigmoid(gates[..., :H]))
+    f = jnp.exp(jax.nn.log_sigmoid(gates[..., H:]))
+    S = S * f[..., None, None] + i[..., None, None] \
+        * jnp.einsum("bhp,bhk->bhpk", k.astype(F32), v.astype(F32))
+    n = n * f[..., None] + i[..., None] * k.astype(F32)
+    scale = hd ** -0.5
+    y = jnp.einsum("bhp,bhpk->bhk", q.astype(F32), S) * scale
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bhp,bhp->bh", q.astype(F32), n) * scale), 1.0)
+    y = (y / denom[..., None]).reshape(B, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(F32)).astype(x.dtype)
+    return jnp.einsum("blk,kd->bld", y, p["down_proj"]), (S, n)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, scanned)
+# ---------------------------------------------------------------------------
+
+def slstm_forward(p, x, *, cfg, state: Optional[Tuple] = None):
+    """x: (B, L, d). Stabilized exponential gating; recurrent h feedback."""
+    B, L, d = x.shape
+    gx = jnp.einsum("bld,dg->blg", x, p["w_in"]).astype(F32)   # (B,L,4d)
+
+    def step(carry, g_t):
+        h, c, n, m = carry
+        g = g_t + jnp.einsum("bd,dg->bg", h, p["w_rec"].astype(F32))
+        ii, ff, zz, oo = jnp.split(g, 4, -1)
+        m_new = jnp.maximum(ff + m, ii)
+        i_t = jnp.exp(ii - m_new)
+        f_t = jnp.exp(ff + m - m_new)
+        c = f_t * c + i_t * jnp.tanh(zz)
+        n = f_t * n + i_t
+        h = jax.nn.sigmoid(oo) * c / jnp.maximum(n, 1.0)
+        return (h, c, n, m_new), h
+
+    z0 = jnp.zeros((B, d), F32)
+    carry0 = (z0, z0, z0, z0) if state is None else state
+    carry, hs = jax.lax.scan(step, carry0, gx.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)
+    return jnp.einsum("bld,dk->blk", y, p["w_out"]), carry
+
+
+def slstm_decode(p, x, state, *, cfg):
+    y, carry = slstm_forward(p, x, cfg=cfg, state=state)
+    return y, carry

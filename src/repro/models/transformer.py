@@ -1,0 +1,387 @@
+"""Model assembly for all 10 assigned architectures.
+
+Every family is built from the same pieces:
+  - per-block ParamDef trees with leaves stacked over the layer axis,
+    consumed by a remat'd lax.scan (one block body in HLO regardless of
+    depth — 80-layer models compile as fast as 6-layer ones);
+  - families with heterogeneous blocks (zamba2 hybrid, xlstm) scan over
+    repeating *groups* (e.g. 5 mamba + 1 shared-attention) so each distinct
+    block body appears once in the HLO;
+  - decode threads a cache pytree through the same scans.
+
+Layout: decoder-only (dense/moe/vlm), enc-dec (audio), hybrid, ssm.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..dist.sharding import MeshCtx
+from .attention import attention, decode_attention
+from .common import chunked_cross_entropy, rms_norm
+from .config import ModelConfig
+from .ffn import dense_ffn, moe_ffn
+from .params import ParamDef
+from .ssm import (mamba2_decode, mamba2_forward, mlstm_decode, mlstm_forward,
+                  slstm_decode, slstm_forward)
+
+PyTree = Any
+CONV_K = 4
+
+
+def _pd(shape, logical, **kw):
+    return ParamDef(tuple(int(s) for s in shape), tuple(logical), **kw)
+
+
+def _stack(defs: PyTree, n: int) -> PyTree:
+    """Prepend a scanned layer axis (replicated) to every leaf."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, (None,) + d.logical, d.init,
+                           d.scale, d.dtype),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# --------------------------------------------------------------------------
+# per-block ParamDefs
+# --------------------------------------------------------------------------
+
+def attn_defs(cfg: ModelConfig, dt: str) -> Dict[str, ParamDef]:
+    d, H, KV, hd = cfg.d_model, cfg.heads, cfg.kv_heads, cfg.head_dim
+    defs = {
+        "wq": _pd((d, H, hd), ("fsdp", "tp", None), dtype=dt),
+        "wk": _pd((d, KV, hd), ("fsdp", "tp", None), dtype=dt),
+        "wv": _pd((d, KV, hd), ("fsdp", "tp", None), dtype=dt),
+        "wo": _pd((H, hd, d), ("tp", None, "fsdp"), dtype=dt),
+    }
+    if cfg.qkv_bias:
+        defs.update(bq=_pd((H, hd), ("tp", None), init="zeros", dtype=dt),
+                    bk=_pd((KV, hd), ("tp", None), init="zeros", dtype=dt),
+                    bv=_pd((KV, hd), ("tp", None), init="zeros", dtype=dt))
+    return defs
+
+
+def ffn_defs(cfg: ModelConfig, dt: str) -> Dict[str, ParamDef]:
+    d, F = cfg.d_model, cfg.d_ff
+    if cfg.num_experts > 1:
+        return {
+            "wr": _pd((d, cfg.num_experts), (None, None), dtype=dt),
+            "w_up": _pd((cfg.num_experts, d, 2 * F), (None, "fsdp", "tp"),
+                        dtype=dt),
+            "w_down": _pd((cfg.num_experts, F, d), (None, "tp", "fsdp"),
+                          dtype=dt),
+        }
+    return {"w_up": _pd((d, 2 * F), ("fsdp", "tp"), dtype=dt),
+            "w_down": _pd((F, d), ("tp", "fsdp"), dtype=dt)}
+
+
+def norm_defs(cfg, dt, names=("ln1", "ln2")):
+    return {n: _pd((cfg.d_model,), (None,), init="ones", dtype=dt)
+            for n in names}
+
+
+def mamba_defs(cfg: ModelConfig, dt: str) -> Dict[str, ParamDef]:
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    return {
+        "in_proj": _pd((d, 2 * di), ("fsdp", "tp"), dtype=dt),
+        "bc_proj": _pd((d, 2 * N), ("fsdp", None), dtype=dt),
+        "dt_proj": _pd((d, H), ("fsdp", None), dtype=dt),
+        "dt_bias": _pd((H,), (None,), init="zeros", dtype="float32"),
+        "A_log": _pd((H,), (None,), init="zeros", dtype="float32"),
+        "D": _pd((H,), (None,), init="ones", dtype="float32"),
+        "conv_w": _pd((CONV_K, di + 2 * N), (None, None), dtype=dt),
+        "gate_norm": _pd((di,), (None,), init="ones", dtype=dt),
+        "out_proj": _pd((di, d), ("tp", "fsdp"), dtype=dt),
+        "ln": _pd((d,), (None,), init="ones", dtype=dt),
+    }
+
+
+def mlstm_defs(cfg: ModelConfig, dt: str) -> Dict[str, ParamDef]:
+    d, di, H = cfg.d_model, cfg.d_inner, cfg.heads
+    return {
+        "up_proj": _pd((d, 2 * di), ("fsdp", "tp"), dtype=dt),
+        "w_qkv": _pd((di, 3 * di), ("fsdp", "tp"), dtype=dt),
+        "w_gates": _pd((di, 2 * H), ("fsdp", None), dtype=dt),
+        "down_proj": _pd((di, d), ("tp", "fsdp"), dtype=dt),
+        "ln": _pd((d,), (None,), init="ones", dtype=dt),
+    }
+
+
+def slstm_defs(cfg: ModelConfig, dt: str) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    return {
+        "w_in": _pd((d, 4 * d), ("fsdp", "tp"), dtype=dt),
+        "w_rec": _pd((d, 4 * d), ("fsdp", None), dtype=dt, scale=0.002),
+        "w_out": _pd((d, d), ("fsdp", "tp"), dtype=dt),
+        "ln": _pd((d,), (None,), init="ones", dtype=dt),
+    }
+
+
+def model_defs(cfg: ModelConfig) -> PyTree:
+    dt = cfg.param_dtype
+    d, Vp = cfg.d_model, cfg.vocab_padded
+    defs: Dict[str, Any] = {
+        "embed": _pd((Vp, d), ("tp", "fsdp"), scale=1.0, dtype=dt),
+        "final_norm": _pd((d,), (None,), init="ones", dtype=dt),
+        "unembed": _pd((d, Vp), ("fsdp", "tp"), dtype=dt),
+    }
+    block = lambda: {**attn_defs(cfg, dt), **ffn_defs(cfg, dt),
+                     **norm_defs(cfg, dt)}
+    if cfg.family in ("dense", "moe", "vlm"):
+        defs["blocks"] = _stack(block(), cfg.layers)
+    elif cfg.family == "audio":
+        defs["enc_blocks"] = _stack(block(), cfg.encoder_layers)
+        dec = {**block(),
+               **{f"x_{k}": v for k, v in attn_defs(cfg, dt).items()},
+               "ln3": _pd((d,), (None,), init="ones", dtype=dt)}
+        defs["dec_blocks"] = _stack(dec, cfg.decoder_layers)
+        defs["enc_norm"] = _pd((d,), (None,), init="ones", dtype=dt)
+    elif cfg.family == "hybrid":
+        g = cfg.attn_every
+        groups = cfg.layers // g
+        tail = cfg.layers - groups * g
+        defs["mamba_groups"] = _stack(_stack(mamba_defs(cfg, dt), g - 1),
+                                      groups)
+        defs["mamba_tail"] = _stack(mamba_defs(cfg, dt), max(tail, 1))
+        defs["shared_attn"] = block()              # one shared block
+    elif cfg.family == "ssm":
+        g = cfg.slstm_every or 8
+        groups = cfg.layers // g
+        defs["mlstm_groups"] = _stack(_stack(mlstm_defs(cfg, dt), g - 1),
+                                      groups)
+        defs["slstm_blocks"] = _stack(slstm_defs(cfg, dt), groups)
+    else:
+        raise ValueError(cfg.family)
+    return defs
+
+
+# --------------------------------------------------------------------------
+# block forward functions
+# --------------------------------------------------------------------------
+
+def res_shard(x, ctx: Optional[MeshCtx]):
+    """Sequence parallelism (Korthikanti et al.): the residual stream lives
+    sharded along L over the model axis between blocks. The layer scan then
+    saves (B, L/tp, d) per layer instead of (B, L, d) — 16x less activation
+    memory. Sublayers gather explicitly (res_gather) at their input and
+    scatter back at their output; forcing both boundaries keeps SPMD from
+    replicating the projections."""
+    if ctx is None or x.ndim != 3 or x.shape[1] % ctx.tp or x.shape[1] == 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, ctx.sharding(P(ctx.dp_axes, "model", None)))
+
+
+def melt_batch(x, ctx: Optional[MeshCtx]):
+    """For blocks whose inner structure cannot TP-shard (mLSTM/sLSTM with
+    heads < tp): spread the batch over BOTH mesh axes so the model axis
+    does useful work instead of replicating compute 16x. Requires
+    B %% (dp*tp) == 0 (train_4k: 256 = 16x16)."""
+    if ctx is None or x.ndim != 3 or x.shape[0] % (ctx.dp * ctx.tp):
+        return None
+    return jax.lax.with_sharding_constraint(
+        x, ctx.sharding(P((*ctx.dp_axes, "model"), None, None)))
+
+
+def res_gather(x, ctx: Optional[MeshCtx], sp_mode: str = "megatron"):
+    """all-gather the L-sharded residual for a TP sublayer's matmuls
+    (megatron mode); weightgather mode keeps it L-sharded and lets the
+    layer's weights gather instead (2D FSDP)."""
+    if ctx is None or x.ndim != 3 or x.shape[1] % ctx.tp or x.shape[1] == 1:
+        return x
+    if sp_mode == "weightgather":
+        return res_shard(x, ctx)
+    return jax.lax.with_sharding_constraint(
+        x, ctx.sharding(P(ctx.dp_axes, None, None)))
+
+
+def _ffn_apply(pl, x, cfg, ctx):
+    if cfg.num_experts > 1:
+        return moe_ffn(pl, x, cfg=cfg, ctx=ctx)
+    return dense_ffn(pl, x, ctx, cfg.sp_mode)
+
+
+def transformer_block(pl, x, *, cfg, ctx, causal=True, cross=None,
+                      positions=None):
+    h, _ = attention(pl, res_gather(rms_norm(x, pl["ln1"], cfg.norm_eps),
+                                    ctx, cfg.sp_mode), cfg=cfg,
+                     ctx=ctx, causal=causal, positions=positions)
+    x = x + res_shard(h, ctx)
+    if cross is not None:
+        xp = {k[2:]: v for k, v in pl.items() if k.startswith("x_")}
+        h, _ = attention(xp, res_gather(rms_norm(x, pl["ln3"], cfg.norm_eps),
+                                        ctx, cfg.sp_mode), cfg=cfg,
+                         ctx=ctx, causal=False, kv_x=cross, use_rope=False)
+        x = x + res_shard(h, ctx)
+    h = _ffn_apply(pl, res_gather(rms_norm(x, pl["ln2"], cfg.norm_eps), ctx,
+                                  cfg.sp_mode),
+                   cfg, ctx)
+    return x + res_shard(h, ctx)
+
+
+def transformer_block_decode(pl, x, cache_l, cache_len, *, cfg, ctx,
+                             cross=None):
+    h, kv = decode_attention(pl, rms_norm(x, pl["ln1"], cfg.norm_eps),
+                             cache_l["k"], cache_l["v"], cache_len,
+                             cfg=cfg, ctx=ctx)
+    x = x + h
+    new_cache = dict(cache_l, k=kv[0], v=kv[1])
+    if cross is not None:
+        xp = {k[2:]: v for k, v in pl.items() if k.startswith("x_")}
+        h, _ = attention(xp, rms_norm(x, pl["ln3"], cfg.norm_eps), cfg=cfg,
+                         ctx=ctx, causal=False, kv_x=cross, use_rope=False)
+        x = x + h
+    x = x + _ffn_apply(pl, rms_norm(x, pl["ln2"], cfg.norm_eps), cfg, ctx)
+    return x, new_cache
+
+
+def mamba_block(pl, x, *, cfg, ctx, state=None, decode=False):
+    h = res_gather(rms_norm(x, pl["ln"], cfg.norm_eps), ctx, cfg.sp_mode)
+    if decode:
+        y, s = mamba2_decode(pl, h, state, cfg=cfg)
+    else:
+        y, s = mamba2_forward(pl, h, cfg=cfg, state=state)
+    return x + res_shard(y, ctx), s
+
+
+def mlstm_block(pl, x, *, cfg, ctx, state=None, decode=False):
+    h = res_gather(rms_norm(x, pl["ln"], cfg.norm_eps), ctx, cfg.sp_mode)
+    if decode:
+        y, s = mlstm_decode(pl, h, state, cfg=cfg)
+        return x + y, s
+    y, s = mlstm_forward(pl, h, cfg=cfg, state=state)
+    return x + res_shard(y, ctx), s
+
+
+def slstm_block(pl, x, *, cfg, ctx, state=None, decode=False):
+    h = res_gather(rms_norm(x, pl["ln"], cfg.norm_eps), ctx, cfg.sp_mode)
+    if decode:
+        y, s = slstm_decode(pl, h, state, cfg=cfg)
+        return x + y, s
+    y, s = slstm_forward(pl, h, cfg=cfg, state=state)
+    return x + res_shard(y, ctx), s
+
+
+# --------------------------------------------------------------------------
+# stacks (scan over layers / groups)
+# --------------------------------------------------------------------------
+
+def _scan_blocks(body, x, stacked, remat=True):
+    inner = body
+
+    def barriered(h, pl):
+        # keeps XLA from hoisting dtype converts of the saved residuals out
+        # of the backward loop (which would materialize the whole
+        # (layers, B, L_loc, d) stack in f32 — 2x activation memory)
+        return inner(jax.lax.optimization_barrier(h), pl)
+
+    b = jax.checkpoint(barriered) if remat else barriered
+    x, _ = jax.lax.scan(b, x, stacked)
+    return x
+
+
+def decoder_stack(params, x, *, cfg, ctx, causal=True, cross=None,
+                  positions=None, remat=True):
+    def body(h, pl):
+        h = transformer_block(pl, h, cfg=cfg, ctx=ctx, causal=causal,
+                              cross=cross, positions=positions)
+        return res_shard(h, ctx), None
+    return _scan_blocks(body, res_shard(x, ctx), params, remat)
+
+
+def hybrid_stack(params, x, *, cfg, ctx, remat=True):
+    """zamba2: groups of (attn_every - 1) mamba blocks + 1 shared attn."""
+    shared = params["shared_attn"]
+
+    def group_body(h, group_params):
+        def mbody(hh, pl):
+            out, _ = mamba_block(pl, hh, cfg=cfg, ctx=ctx)
+            return res_shard(out, ctx), None
+        h, _ = jax.lax.scan(mbody, h, group_params)
+        h = transformer_block(shared, h, cfg=cfg, ctx=ctx)
+        return res_shard(h, ctx), None
+
+    gb = jax.checkpoint(group_body) if remat else group_body
+    x, _ = jax.lax.scan(gb, res_shard(x, ctx), params["mamba_groups"])
+
+    def tbody(h, pl):
+        out, _ = mamba_block(pl, h, cfg=cfg, ctx=ctx)
+        return res_shard(out, ctx), None
+    x = _scan_blocks(tbody, x, params["mamba_tail"], remat)
+    return x
+
+
+def xlstm_stack(params, x, *, cfg, ctx, remat=True):
+    def group_body(h, gp):
+        mg, sp = gp
+
+        def mbody(hh, pl):
+            out, _ = mlstm_block(pl, hh, cfg=cfg, ctx=ctx)
+            return res_shard(out, ctx), None
+        h, _ = jax.lax.scan(mbody, h, mg)
+        h, _ = slstm_block(sp, h, cfg=cfg, ctx=ctx)
+        return res_shard(h, ctx), None
+
+    gb = jax.checkpoint(group_body) if remat else group_body
+    x, _ = jax.lax.scan(gb, res_shard(x, ctx), (params["mlstm_groups"],
+                                params["slstm_blocks"]))
+    return x
+
+
+# --------------------------------------------------------------------------
+# embedding / head
+# --------------------------------------------------------------------------
+
+def embed_tokens(params, tokens, ctx: Optional[MeshCtx]):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if ctx is not None:
+        x = jax.lax.with_sharding_constraint(
+            x, ctx.sharding(P(ctx.dp_axes, None, None)))
+    return x
+
+
+def backbone(params, batch, *, cfg: ModelConfig, ctx: Optional[MeshCtx],
+             remat: bool = True) -> jnp.ndarray:
+    """Full forward to final hidden states (B, L, d)."""
+    fam = cfg.family
+    if fam == "audio":
+        frames = batch["frames"]                    # stub conv frontend
+        enc = decoder_stack(params["enc_blocks"], frames, cfg=cfg, ctx=ctx,
+                            causal=False, remat=remat)
+        enc = rms_norm(enc, params["enc_norm"], cfg.norm_eps)
+        x = embed_tokens(params, batch["tokens"], ctx)
+        x = decoder_stack(params["dec_blocks"], x, cfg=cfg, ctx=ctx,
+                          causal=True, cross=enc, remat=remat)
+    elif fam == "vlm":
+        x = embed_tokens(params, batch["tokens"], ctx)
+        patches = batch.get("patches")
+        if patches is not None:                     # stub ViT frontend
+            x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        x = decoder_stack(params["blocks"], x, cfg=cfg, ctx=ctx, remat=remat)
+        if patches is not None:
+            x = x[:, patches.shape[1]:]
+    elif fam in ("dense", "moe"):
+        x = embed_tokens(params, batch["tokens"], ctx)
+        x = decoder_stack(params["blocks"], x, cfg=cfg, ctx=ctx, remat=remat)
+    elif fam == "hybrid":
+        x = embed_tokens(params, batch["tokens"], ctx)
+        x = hybrid_stack(params, x, cfg=cfg, ctx=ctx, remat=remat)
+    elif fam == "ssm":
+        x = embed_tokens(params, batch["tokens"], ctx)
+        x = xlstm_stack(params, x, cfg=cfg, ctx=ctx, remat=remat)
+    else:
+        raise ValueError(fam)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def lm_loss(params, batch, *, cfg, ctx, remat=True):
+    h = res_gather(backbone(params, batch, cfg=cfg, ctx=ctx, remat=remat),
+                   ctx)
+    return chunked_cross_entropy(h, params["unembed"], batch["labels"],
+                                 true_vocab=cfg.vocab,
+                                 mask=batch.get("loss_mask"))

@@ -1,0 +1,176 @@
+"""ModelBundle: one object per architecture exposing everything the
+launchers, tests and the simulation plane need."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..data.pipeline import make_batch_specs
+from ..dist.sharding import MeshCtx
+from ..optim import adamw_init, adamw_update, clip_by_global_norm
+from . import decode as decode_mod
+from . import params as pm
+from .config import ModelConfig
+from .transformer import lm_loss, model_defs
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ModelConfig
+
+    def __post_init__(self):
+        self.defs = model_defs(self.cfg)
+
+    # ---- parameters --------------------------------------------------------
+    def init(self, key) -> PyTree:
+        return pm.init_params(self.defs, key)
+
+    def param_sds(self) -> PyTree:
+        return pm.tree_sds(self.defs)
+
+    def param_shardings(self, ctx: MeshCtx, *, serve: bool = False) -> PyTree:
+        """serve=True drops the FSDP axis (weights TP-resident, replicated
+        over data): serving must not re-gather weights per decoded token —
+        see EXPERIMENTS.md §Perf (mixtral decode hillclimb)."""
+        defs = self.defs
+        if serve:
+            attn_keys = {"wq", "wk", "wv", "wo", "bq", "bk", "bv",
+                         "x_wq", "x_wk", "x_wv", "x_wo"}
+
+            heads_tp = self.cfg.heads % ctx.tp == 0
+
+            def remap(path, d):
+                leaf = str(getattr(path[-1], "key", ""))
+                if leaf in attn_keys and not heads_tp:
+                    # odd head counts: replicate attention weights so the
+                    # S-sharded cache never moves during decode
+                    logical = (None,) * len(d.logical)
+                else:                          # weights TP-resident
+                    logical = tuple(None if a == "fsdp" else a
+                                    for a in d.logical)
+                return pm.ParamDef(d.shape, logical, d.init, d.scale, d.dtype)
+
+            defs = jax.tree_util.tree_map_with_path(
+                remap, defs, is_leaf=lambda x: isinstance(x, pm.ParamDef))
+        return pm.tree_shardings(defs, ctx)
+
+    def opt_sds(self) -> PyTree:
+        sds = self.param_sds()
+        f32 = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), sds)
+        from ..optim.adamw import AdamWState
+        return AdamWState(jax.ShapeDtypeStruct((), jnp.int32), f32, f32)
+
+    def opt_shardings(self, ctx: MeshCtx) -> PyTree:
+        sh = self.param_shardings(ctx)
+        from ..optim.adamw import AdamWState
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return AdamWState(NamedSharding(ctx.mesh, P()), sh, sh)
+
+    # ---- steps -------------------------------------------------------------
+    def loss_fn(self, ctx: Optional[MeshCtx]):
+        cfg = self.cfg
+
+        def f(params, batch):
+            return lm_loss(params, batch, cfg=cfg, ctx=ctx)
+        return f
+
+    def train_step(self, ctx: Optional[MeshCtx], *, lr=3e-4,
+                   max_grad_norm: float = 1.0, accum: int = 1) -> Callable:
+        """accum > 1: gradient accumulation over microbatches — activation
+        stacks shrink by `accum` at the cost of re-gathering weights per
+        microbatch (see EXPERIMENTS.md §Perf)."""
+        loss_fn = self.loss_fn(ctx)
+
+        def step(params, opt_state, batch):
+            if accum == 1:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            else:
+                mb = jax.tree.map(
+                    lambda x: x.reshape((accum, x.shape[0] // accum)
+                                        + x.shape[1:]), batch)
+                zero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+                def micro(carry, b):
+                    acc_l, acc_g = carry
+                    l, g = jax.value_and_grad(loss_fn)(params, b)
+                    acc_g = jax.tree.map(
+                        lambda a, x: a + x.astype(jnp.float32), acc_g, g)
+                    return (acc_l + l, acc_g), None
+
+                (loss, grads), _ = jax.lax.scan(
+                    micro, (jnp.float32(0), zero), mb)
+                loss = loss / accum
+                grads = jax.tree.map(lambda g: g / accum, grads)
+            grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+            params, opt_state = adamw_update(grads, opt_state, params, lr=lr)
+            return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+        return step
+
+    def prefill_step(self, ctx: Optional[MeshCtx]) -> Callable:
+        cfg = self.cfg
+
+        def step(params, batch):
+            return decode_mod.prefill(params, batch, cfg=cfg, ctx=ctx)
+        return step
+
+    def decode_step(self, ctx: Optional[MeshCtx]) -> Callable:
+        cfg = self.cfg
+
+        def step(params, cache, token, cache_len):
+            return decode_mod.decode(params, cache, token, cache_len,
+                                     cfg=cfg, ctx=ctx)
+        return step
+
+    # ---- specs (dry-run path, zero allocation) ------------------------------
+    def batch_sds(self, *, seq: int, batch: int, mode: str) -> Dict:
+        return make_batch_specs(self.cfg, seq=seq, batch=batch, mode=mode)
+
+    def batch_shardings(self, ctx: MeshCtx, *, seq: int, batch: int,
+                        mode: str):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        sds = self.batch_sds(seq=seq, batch=batch, mode=mode)
+        dp = ctx.dp_axes if batch % ctx.dp == 0 else None
+
+        def spec(name, s):
+            lead = dp
+            return NamedSharding(ctx.mesh, P(lead, *([None] * (len(s.shape) - 1))))
+        return {k: spec(k, v) for k, v in sds.items()}
+
+    def cache_defs(self, *, batch: int, cache_len: int):
+        return decode_mod.cache_defs(self.cfg, batch, cache_len)
+
+    def cache_sds(self, *, batch: int, cache_len: int):
+        return pm.tree_sds(self.cache_defs(batch=batch, cache_len=cache_len))
+
+    def cache_shardings(self, ctx: MeshCtx, *, batch: int, cache_len: int):
+        defs = self.cache_defs(batch=batch, cache_len=cache_len)
+        if batch % ctx.dp != 0:
+            # long_500k: batch 1 — drop batch sharding, keep kv_len on model
+            defs = jax.tree.map(
+                lambda d: pm.ParamDef(
+                    d.shape,
+                    tuple(None if a == "batch" else a for a in d.logical),
+                    d.init, d.scale, d.dtype),
+                defs, is_leaf=lambda x: isinstance(x, pm.ParamDef))
+        return pm.tree_shardings(defs, ctx)
+
+    def init_cache(self, *, batch: int, cache_len: int) -> PyTree:
+        sds = self.cache_sds(batch=batch, cache_len=cache_len)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds)
+
+    def param_count(self) -> int:
+        return pm.param_count(self.defs)
+
+
+@functools.lru_cache(maxsize=None)
+def get_bundle(arch_id: str, smoke: bool = False) -> ModelBundle:
+    from ..configs import get_config
+    return ModelBundle(get_config(arch_id, smoke=smoke))

@@ -1,0 +1,3 @@
+from .adamw import (AdamWState, adamw_init, adamw_update, clip_by_global_norm,
+                    cosine_schedule)
+from .compress import compress_decompress, int8_compress, int8_decompress

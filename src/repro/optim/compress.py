@@ -1,0 +1,50 @@
+"""Gradient compression for the cross-pod DP all-reduce.
+
+Per-tensor symmetric int8 quantization with error feedback: the residual
+(g - dequant(quant(g))) is carried to the next step, so compression bias
+vanishes in expectation (Seide et al. / 1-bit Adam lineage). Intended for
+the `pod` axis where links are slowest; 4x traffic reduction on bf16 grads.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def int8_compress(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(g.astype(jnp.float32))) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_decompress(grads: PyTree, residuals: Optional[PyTree] = None
+                        ) -> Tuple[PyTree, PyTree]:
+    """Quantize+dequantize each leaf with error feedback; returns
+    (compressed-equivalent grads, new residuals). On hardware the int8
+    payload is what crosses the pod axis (psum of int32 accumulators)."""
+    if residuals is None:
+        residuals = jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, s = int8_compress(gf)
+        deq = int8_decompress(q, s)
+        return deq.astype(g.dtype), gf - deq
+
+    out = jax.tree.map(one, grads, residuals)
+    newg = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    newr = jax.tree.map(lambda t: t[1], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return newg, newr

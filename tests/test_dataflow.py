@@ -1,0 +1,69 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import accelerator as acc
+from repro.core import dataflow as dfm
+
+
+def test_mapping_table():
+    # paper Table II
+    assert dfm.map_gemm("is", 1, 2, 3) == (3, 2, 1)
+    assert dfm.map_gemm("ws", 1, 2, 3) == (3, 1, 2)
+    assert dfm.map_gemm("os", 1, 2, 3) == (1, 2, 3)
+
+
+def test_compute_cycles_single_fold():
+    # one fold: (2R + C + T - 2)
+    assert dfm.compute_cycles("ws", 16, 10, 8, 16, 16) == 2 * 16 + 16 + 10 - 2
+
+
+def test_compute_cycles_matches_kernel_model():
+    from repro.kernels.systolic import total_cycles_ws
+    M, N, K, R, C = 32, 100, 64, 16, 16
+    folds = -(-K // R) * (-(-M // C))
+    per_fold = total_cycles_ws(N, R, C)
+    assert dfm.compute_cycles("ws", M, N, K, R, C) == per_fold * folds
+
+
+def test_utilization_bounds():
+    for df in ("ws", "is", "os"):
+        u = float(dfm.pe_utilization(df, 64, 128, 256, 32, 32))
+        assert 0.0 < u <= 1.0
+
+
+def test_sram_traffic_ws_semantics():
+    t = dfm.sram_traffic("ws", 64, 128, 256, 32, 32)
+    assert t["filter_reads"] == 64 * 256                 # stationary once
+    assert t["ifmap_reads"] == (64 // 32) * 256 * 128    # restream per c-fold
+    fr = 256 // 32
+    assert t["ofmap_writes"] == fr * 64 * 128
+    assert t["ofmap_reads"] == (fr - 1) * 64 * 128
+
+
+def test_os_psums_stay_on_array():
+    t = dfm.sram_traffic("os", 64, 128, 256, 32, 32)
+    assert t["ofmap_writes"] == 64 * 128
+    assert t["ofmap_reads"] == 0
+
+
+def test_dram_traffic_monotone_in_sram():
+    small = acc.MemoryConfig(ifmap_sram_bytes=1 << 12,
+                             filter_sram_bytes=1 << 12,
+                             ofmap_sram_bytes=1 << 12)
+    big = acc.MemoryConfig(ifmap_sram_bytes=1 << 24,
+                           filter_sram_bytes=1 << 24,
+                           ofmap_sram_bytes=1 << 24)
+    M, N, K = 512, 4096, 1024
+    d_small = dfm.dram_traffic("ws", M, N, K, 32, 32, small)
+    d_big = dfm.dram_traffic("ws", M, N, K, 32, 32, big)
+    tot = lambda d: float(sum(jnp.asarray(v) for v in d.values()))
+    assert tot(d_big) <= tot(d_small)
+    # big SRAM: every unique element fetched once
+    assert tot(d_big) == M * K + K * N + M * N
+
+
+def test_gemm_summary_runs():
+    cfg = acc.tpu_like_config(array=32)
+    s = dfm.gemm_summary(cfg, 64, 128, 256)
+    assert float(s["total_cycles"]) >= float(s["compute_cycles"])

@@ -1,0 +1,64 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.accelerator import DramConfig
+from repro.core.dram import (linear_trace, simulate_dram, strided_trace,
+                             tile_prefetch_trace)
+
+
+def test_roundtrip_latency_positive_and_causal():
+    t, a, w = linear_trace(512)
+    res = simulate_dram(t, a, w, DramConfig())
+    lat = np.asarray(res.latency)
+    assert (lat > 0).all()
+    comp = np.asarray(res.complete)
+    assert (comp >= np.asarray(t)).all()
+
+
+def test_row_hits_on_streaming():
+    """Consecutive addresses hit the open row buffer most of the time."""
+    t, a, w = linear_trace(2048)
+    res = simulate_dram(t, a, w, DramConfig(channels=1))
+    assert int(res.row_hits) > 0.9 * 2048
+
+
+def test_strided_causes_conflicts():
+    t, a, w = strided_trace(1024, stride_bytes=1 << 16)
+    res = simulate_dram(t, a, w, DramConfig(channels=1, banks_per_channel=4))
+    lin = simulate_dram(*linear_trace(1024), DramConfig(channels=1,
+                                                        banks_per_channel=4))
+    assert int(res.row_conflicts) > int(lin.row_conflicts)
+    assert float(np.mean(np.asarray(res.latency))) > \
+        float(np.mean(np.asarray(lin.latency)))
+
+
+def test_channel_scaling_fig9():
+    """Fig. 9: throughput scales with channels for streaming traffic."""
+    t, a, w = linear_trace(4096, issue_gap=0.25)
+    th = []
+    for ch in (1, 2, 4, 8):
+        th.append(float(simulate_dram(t, a, w, DramConfig(channels=ch)
+                                      ).throughput))
+    assert th[1] > 1.6 * th[0]
+    assert th[2] > 1.6 * th[1]
+    assert th[3] > 1.5 * th[2]
+
+
+def test_queue_size_fig10():
+    """Fig. 10: bigger request queues absorb prefetch bursts -> fewer
+    stalls; the 32 -> 128 step is the big one."""
+    t, a, w = tile_prefetch_trace(tile_bytes=20 * 1024, n_tiles=64,
+                                  compute_per_tile=400, gran_bytes=64)
+    tot = {}
+    for q in (32, 128, 512):
+        res = simulate_dram(t, a, w, DramConfig(channels=2, read_queue=q,
+                                                write_queue=q))
+        tot[q] = float(res.total_cycles)
+    assert tot[32] > tot[128] >= tot[512]
+
+
+def test_conservation_bytes():
+    t, a, w = linear_trace(100, gran_bytes=64)
+    res = simulate_dram(t, a, w, DramConfig(), gran_bytes=64)
+    assert float(res.bytes_moved) == 100 * 64

@@ -1,0 +1,90 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AcceleratorConfig, CoreConfig, simulate_network,
+                        simulate_op, tpu_like_config)
+from repro.core.accelerator import LayoutConfig, SparsityConfig
+from repro.core.engine import energy_traced, gemm_summary_traced
+from repro.core.topology import Op, lm_ops, resnet18, total_macs
+from repro.configs import get_config
+
+
+def test_network_report_totals():
+    cfg = tpu_like_config(array=32)
+    rep = simulate_network(cfg, resnet18())
+    assert rep.total_cycles == pytest.approx(
+        sum(o.total_cycles for o in rep.ops))
+    assert rep.energy_pj > 0 and 0 < rep.utilization <= 1
+
+
+def test_vector_ops_on_simd():
+    cfg = tpu_like_config(array=32)
+    r = simulate_op(cfg, Op("softmax", kind="vector", vector_elems=12800))
+    assert r.kind == "vector"
+    assert r.compute_cycles == pytest.approx(12800 / 128)
+
+
+def test_sparsity_flows_through_engine():
+    cfg = tpu_like_config(array=32).with_(
+        sparsity=SparsityConfig(enabled=True, n=2, m=4))
+    dense = simulate_network(tpu_like_config(array=32), resnet18()[:4])
+    sp = simulate_network(cfg, resnet18()[:4])
+    assert sp.compute_cycles < dense.compute_cycles
+    assert sp.ops[0].sparse_storage["total_bytes"] < \
+        sp.ops[0].sparse_storage["original_bytes"]
+
+
+def test_layout_slows_down():
+    lc = LayoutConfig(enabled=True, num_banks=2, line_bytes=32)
+    cfg = tpu_like_config(array=32).with_(layout=lc)
+    base = simulate_network(tpu_like_config(array=32), resnet18()[:3])
+    lay = simulate_network(cfg, resnet18()[:3])
+    assert lay.total_cycles >= base.total_cycles
+
+
+def test_dram_cycle_fidelity():
+    cfg = tpu_like_config(array=32)
+    r = simulate_op(cfg, resnet18()[0], dram_fidelity="cycle")
+    assert r.dram_stats is not None
+    assert r.dram_stats["row_hits"] > 0
+
+
+def test_lm_extractor_all_archs():
+    for arch in ("qwen2-1.5b", "mixtral-8x7b", "zamba2-7b", "xlstm-1.3b",
+                 "whisper-base", "internvl2-1b"):
+        cfg = get_config(arch)
+        ops = lm_ops(cfg, seq=512, batch=2, mode="train")
+        assert total_macs(ops) > 0
+        dec = lm_ops(cfg, seq=512, batch=2, mode="decode", cache_len=512)
+        assert total_macs(dec) < total_macs(ops)
+
+
+def test_moe_extractor_counts_active_only():
+    cfg = get_config("mixtral-8x7b")
+    ops = lm_ops(cfg, seq=128, batch=1, mode="prefill")
+    moe = [o for o in ops if "moe_up" in o.name][0]
+    assert moe.count == cfg.top_k                  # not num_experts
+
+
+def test_traced_path_vmaps():
+    Ms = jnp.array([64, 128, 256])
+    f = jax.vmap(lambda m: gemm_summary_traced(
+        "ws", m, 1024, 512, 32, 32, sram_elems=1 << 18,
+        bw_bytes_per_cycle=38.4)["total_cycles"])
+    out = f(Ms)
+    assert out.shape == (3,) and bool((out[1:] >= out[:-1]).all())
+
+
+def test_traced_matches_engine_compute():
+    from repro.core.dataflow import compute_cycles
+    t = gemm_summary_traced("ws", 512, 4096, 1024, 32, 32,
+                            sram_elems=1 << 30, bw_bytes_per_cycle=1e9)
+    assert int(t["compute_cycles"]) == int(
+        compute_cycles("ws", 512, 4096, 1024, 32, 32))
+
+
+def test_energy_traced_positive():
+    e = energy_traced(1e6, 1e9, 1e8, 32, 32)
+    assert float(e) > 0

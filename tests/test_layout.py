@@ -1,0 +1,70 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.accelerator import LayoutConfig
+from repro.core.layout import (chw_ids, evaluate_layout, flat_ids,
+                               slowdown_per_cycle, streaming_access_pattern)
+
+
+def test_paper_equations_chw():
+    cfg = LayoutConfig(enabled=True, c1_step=8, h1_step=2, w1_step=4,
+                       num_banks=8, line_bytes=16)
+    C, H, W = 16, 8, 8
+    c = jnp.arange(C)[:, None, None] * jnp.ones((1, H, W), jnp.int32)
+    h = jnp.arange(H)[None, :, None] * jnp.ones((C, 1, W), jnp.int32)
+    w = jnp.arange(W)[None, None, :] * jnp.ones((C, H, 1), jnp.int32)
+    line, col, bank = chw_ids(c, h, w, H, W, cfg)
+    # line id formula at a known point
+    c0, h0, w0 = 9, 3, 5
+    expect_line = (c0 // 8) * (-(-H // 2)) * (-(-W // 4)) \
+        + (h0 // 2) * (-(-W // 4)) + (w0 // 4)
+    assert int(line[c0, h0, w0]) == expect_line
+    expect_col = (w0 % 4) * 2 * 8 + (h0 % 2) * 8 + (c0 % 8)
+    assert int(col[c0, h0, w0]) == expect_col
+
+
+def test_slowdown_equation():
+    # 4 accesses to the same bank, different lines, 1 port -> slowdown 4
+    line = jnp.array([[0, 1, 2, 3]])
+    bank = jnp.zeros((1, 4), jnp.int32)
+    sd = slowdown_per_cycle(line, bank, num_banks=4, ports=1)
+    assert int(sd[0]) == 4
+    # same line 4x -> one distinct line -> slowdown 1
+    sd2 = slowdown_per_cycle(jnp.zeros((1, 4), jnp.int32), bank, 4, 1)
+    assert int(sd2[0]) == 1
+    # 2 ports halve it
+    sd3 = slowdown_per_cycle(line, bank, num_banks=4, ports=2)
+    assert int(sd3[0]) == 2
+
+
+def test_more_banks_fewer_conflicts_fig12():
+    """Figs. 12-13: at fixed total bandwidth, more banks -> less slowdown."""
+    means = []
+    for banks in (2, 4, 8, 16):
+        cfg = LayoutConfig(enabled=True, num_banks=banks,
+                           line_bytes=512 // banks)
+        r = evaluate_layout(cfg, R=32, n_cycles=128, lead_stride=1,
+                            elem_stride=197)
+        means.append(r.mean_slowdown)
+    assert all(means[i] >= means[i + 1] for i in range(len(means) - 1))
+    assert means[0] > 2 * means[-1]
+
+
+def test_contiguous_access_no_slowdown():
+    cfg = LayoutConfig(enabled=True, num_banks=32, line_bytes=64)
+    # one element per cycle: can never conflict
+    r = evaluate_layout(cfg, R=1, n_cycles=64, lead_stride=1, elem_stride=1)
+    assert r.mean_slowdown == 1.0
+
+
+def test_kernel_matches_oracle():
+    from repro.kernels.conflict import (conflict_slowdown,
+                                        conflict_slowdown_reference)
+    key = jax.random.PRNGKey(3)
+    line = jax.random.randint(key, (96, 48), 0, 13)
+    bank = jax.random.randint(jax.random.fold_in(key, 1), (96, 48), 0, 16)
+    k = conflict_slowdown(line, bank, num_banks=16, ports=2, interpret=True)
+    r = conflict_slowdown_reference(line, bank, num_banks=16, ports=2)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(r))

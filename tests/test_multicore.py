@@ -1,0 +1,62 @@
+import numpy as np
+import pytest
+
+from repro.core.accelerator import AcceleratorConfig, CoreConfig, MemoryConfig
+from repro.core.multicore import (best_multicore, nonuniform_split,
+                                  simulate_multicore)
+from repro.core.partition import partition_cycles
+from repro.core.dataflow import map_gemm
+
+
+def _cfg(cores, rows=2, cols=2):
+    return AcceleratorConfig(cores=tuple(cores), mesh_rows=rows,
+                             mesh_cols=cols)
+
+
+def test_uniform_matches_partition_equations():
+    cfg = AcceleratorConfig(cores=(CoreConfig(rows=32, cols=32),),
+                            mesh_rows=2, mesh_cols=2)
+    M, N, K = 512, 1024, 2048
+    Sr, Sc, T = map_gemm("ws", M, N, K)
+    r = simulate_multicore(cfg, M, N, K, "spatial")
+    assert r.cycles == partition_cycles("spatial", 32, 32, Sr, Sc, T, 2, 2)
+
+
+def test_nonuniform_split_equalizes():
+    shares = nonuniform_split(1000, rates=[1.0, 1.0, 2.0], offsets=[0, 0, 0])
+    assert sum(shares) == 1000
+    assert shares[2] < shares[0]                 # slower core gets less
+
+
+def test_nop_offset_shifts_work():
+    near = nonuniform_split(1000, [1.0, 1.0], [0.0, 0.0])
+    far = nonuniform_split(1000, [1.0, 1.0], [0.0, 500.0])
+    assert far[1] < near[1]                      # farther core gets less
+
+
+def test_heterogeneous_cores_balanced():
+    cores = [CoreConfig(rows=64, cols=64), CoreConfig(rows=16, cols=16)]
+    cfg = AcceleratorConfig(cores=tuple(cores), mesh_rows=2, mesh_cols=1)
+    r = simulate_multicore(cfg, 512, 2048, 4096, "spatial")
+    # the big core takes more of the split dimension
+    assert r.per_core_share[0] > r.per_core_share[1]
+    spread = max(r.per_core_cycles) / max(min(r.per_core_cycles), 1)
+    assert spread < 4.5                          # roughly balanced makespan
+
+
+def test_more_cores_not_slower():
+    M, N, K = 1024, 4096, 4096
+    c1 = AcceleratorConfig(cores=(CoreConfig(32, 32),))
+    c16 = AcceleratorConfig(cores=(CoreConfig(32, 32),), mesh_rows=4,
+                            mesh_cols=4)
+    r1 = best_multicore(c1, M, N, K)
+    r16 = best_multicore(c16, M, N, K)
+    assert r16.cycles < r1.cycles
+
+
+def test_l2_capacity_check():
+    mem = MemoryConfig(l2_sram_bytes=1 << 10)
+    cfg = AcceleratorConfig(cores=(CoreConfig(32, 32),), mesh_rows=2,
+                            mesh_cols=2, memory=mem)
+    r = simulate_multicore(cfg, 2048, 2048, 2048, "spatial")
+    assert not r.l2_fit and r.l2_spill_elems > 0

@@ -1,0 +1,89 @@
+import pytest
+
+from repro.core.dataflow import cdiv, map_gemm
+from repro.core.partition import (best_plan, enumerate_plans,
+                                  partition_cycles, partition_footprint)
+
+
+def test_equations_match_paper():
+    R = C = 32
+    Sr, Sc, T = 1000, 5000, 10000
+    Pr, Pc = 4, 4
+    # Eq. 1
+    assert partition_cycles("spatial", R, C, Sr, Sc, T, Pr, Pc) == \
+        (2 * R + C + T - 2) * cdiv(Sr, Pr * R) * cdiv(Sc, Pc * C)
+    # Eq. 2
+    assert partition_cycles("st1", R, C, Sr, Sc, T, Pr, Pc) == \
+        (2 * R + C + cdiv(T, Pc) - 2) * cdiv(Sr, Pr * R) * cdiv(Sc, C)
+    # Eq. 3
+    assert partition_cycles("st2", R, C, Sr, Sc, T, Pr, Pc) == \
+        (2 * R + C + cdiv(T, Pr) - 2) * cdiv(Sr, R) * cdiv(Sc, Pc * C)
+
+
+def test_single_core_reduces_to_v2():
+    R = C = 16
+    Sr, Sc, T = 100, 200, 300
+    for scheme in ("spatial", "st1", "st2"):
+        assert partition_cycles(scheme, R, C, Sr, Sc, T, 1, 1) == \
+            (2 * R + C + T - 2) * cdiv(Sr, R) * cdiv(Sc, C)
+
+
+def test_footprint_l2_dedup_never_bigger():
+    for scheme in ("spatial", "st1", "st2"):
+        f1 = partition_footprint(scheme, "ws", 512, 512, 1024, 4, 4)
+        f2 = partition_footprint(scheme, "ws", 512, 512, 1024, 4, 4,
+                                 dedup=True)
+        assert f2["total"] <= f1["total"]
+
+
+def test_os_temporal_split_needs_reduction():
+    f = partition_footprint("st1", "os", 512, 512, 1024, 4, 4)
+    assert f["reduce_elems"] > 0
+    f2 = partition_footprint("spatial", "os", 512, 512, 1024, 4, 4)
+    assert f2["reduce_elems"] == 0
+
+
+def _true_st(p):
+    """ST plan with an actual temporal split (Pc=1 st1 degenerates)."""
+    return (p.scheme == "st1" and p.Pc > 1) or (p.scheme == "st2" and p.Pr > 1)
+
+
+def test_spatiotemporal_wins_cycles_on_skinny_gemm():
+    """Paper Fig. 3a: ST beats spatial outright when both spatial dims are
+    exhausted (Sr, Sc small) — only a temporal split of T uses all cores."""
+    plans = enumerate_plans("ws", 32, 8192, 256, 32, 32, 16)
+    best_st = min((p for p in plans if _true_st(p)), key=lambda p: p.cycles)
+    spatial_best = min((p for p in plans if p.scheme == "spatial"),
+                       key=lambda p: p.cycles)
+    assert best_st.cycles < 0.7 * spatial_best.cycles
+
+
+def test_spatiotemporal_wins_footprint_at_equal_cycles():
+    """Paper Fig. 3a (reading): among compute-optimal points, ST schemes
+    reach near-equal cycles with a much smaller (no-L2) footprint because
+    the streamed operand is not duplicated across core columns."""
+    plans = enumerate_plans("ws", 1024, 8192, 1024, 32, 32, 16)
+    spatial_best = min((p for p in plans if p.scheme == "spatial"),
+                       key=lambda p: (p.cycles, p.footprint))
+    st_near = [p for p in plans if _true_st(p)
+               and p.cycles < 1.05 * spatial_best.cycles]
+    st_best = min(st_near, key=lambda p: p.footprint)
+    assert st_best.footprint < 0.75 * spatial_best.footprint
+
+
+def test_spatial_usually_wins_footprint():
+    """Paper Fig. 3b: spatial partitioning usually minimizes footprint."""
+    wins = 0
+    cases = [(1000, 5000, 10000), (5000, 5000, 5000), (10000, 1000, 5000)]
+    for (M, N, K) in cases:
+        p = best_plan("ws", M, N, K, 32, 32, 16, objective="footprint")
+        if p.scheme == "spatial":
+            wins += 1
+    assert wins >= 2
+
+
+def test_best_plan_objectives():
+    pc = best_plan("ws", 1000, 5000, 10000, 32, 32, 64, "cycles")
+    pf = best_plan("ws", 1000, 5000, 10000, 32, 32, 64, "footprint")
+    assert pc.cycles <= pf.cycles
+    assert pf.footprint <= pc.footprint

@@ -1,0 +1,112 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import accelerator as acc
+from repro.core import dataflow as dfm
+from repro.core.partition import enumerate_plans, partition_cycles
+from repro.core.sparsity import effective_K, storage_report
+from repro.core.energy import action_counts, energy_pj
+from repro.core.layout import slowdown_per_cycle
+
+dims = st.integers(min_value=1, max_value=2048)
+arr = st.sampled_from([8, 16, 32, 64, 128])
+dfs = st.sampled_from(["ws", "is", "os"])
+
+
+@settings(max_examples=60, deadline=None)
+@given(dfs, dims, dims, dims, arr, arr)
+def test_cycles_lower_bound(df, M, N, K, R, C):
+    """Compute cycles always cover the pure streaming lower bound and the
+    utilization never exceeds 1."""
+    cyc = int(dfm.compute_cycles(df, M, N, K, R, C))
+    Sr, Sc, T = dfm.map_gemm(df, M, N, K)
+    assert cyc >= T
+    assert M * N * K <= R * C * cyc
+
+
+@settings(max_examples=60, deadline=None)
+@given(dfs, dims, dims, dims, arr, arr)
+def test_bigger_array_never_more_cycles(df, M, N, K, R, C):
+    c1 = int(dfm.compute_cycles(df, M, N, K, R, C))
+    c2 = int(dfm.compute_cycles(df, M, N, K, 2 * R, 2 * C))
+    Sr, Sc, _ = dfm.map_gemm(df, M, N, K)
+    f2 = int(dfm.cdiv(Sr, 2 * R) * dfm.cdiv(Sc, 2 * C))
+    # provable: c2 = (2R'+C'+T-2)f2 <= c1 + (2R'+C'-(2R+C))f2 with f2<=f1
+    assert c2 <= c1 + (2 * R + C) * f2
+
+
+@settings(max_examples=40, deadline=None)
+@given(dfs, dims, dims, dims, st.sampled_from([4, 16, 64]))
+def test_partition_cycles_divide_work(df, M, N, K, cores):
+    """Any partitioning plan on n cores is at least 1/n of single-core
+    cycles (no super-linear speedup) and never slower than ~1 core."""
+    Sr, Sc, T = dfm.map_gemm(df, M, N, K)
+    single = partition_cycles("spatial", 32, 32, Sr, Sc, T, 1, 1)
+    for p in enumerate_plans(df, M, N, K, 32, 32, cores):
+        assert p.cycles >= single / cores * 0.9
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 64).filter(lambda m: m % 2 == 0),
+       st.integers(64, 4096))
+def test_sparsity_storage_monotone(m, K):
+    K = (K // m) * m or m
+    rows = 64
+    prev = None
+    for n in range(1, m // 2 + 1):
+        sp = acc.SparsityConfig(enabled=True, n=n, m=m)
+        tot = storage_report(rows, K, sp)["total_bytes"]
+        if prev is not None:
+            assert tot >= prev
+        prev = tot
+    dense = storage_report(rows, K, acc.SparsityConfig())["total_bytes"]
+    assert prev <= dense * (0.5 + math.ceil(math.log2(m)) / 16 + 0.01)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 16), st.integers(2, 32), st.integers(64, 2048))
+def test_effective_k_bounds(n, m, K):
+    if n > m:
+        return
+    sp = acc.SparsityConfig(enabled=True, n=min(n, m), m=m)
+    ke = int(effective_K(K, sp))
+    assert 0 < ke <= K + m
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 64))
+def test_layout_slowdown_at_least_one(num_banks, k):
+    line = jnp.zeros((4, k), jnp.int32)
+    bank = jnp.zeros((4, k), jnp.int32)
+    sd = slowdown_per_cycle(line, bank, num_banks=num_banks, ports=1)
+    assert int(sd.min()) >= 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(1e3, 1e9), st.floats(0, 1e12))
+def test_energy_nonnegative_and_monotone_in_macs(cycles, macs):
+    cfg = acc.tpu_like_config(array=32)
+    c = action_counts(cfg, cycles=cycles, macs=macs, ifmap_reads=0.0,
+                      filter_reads=0.0, ofmap_writes=0.0, ofmap_reads=0.0,
+                      dram_bytes=0.0)
+    e = energy_pj(c)
+    assert e["total"] >= 0
+    c2 = action_counts(cfg, cycles=cycles, macs=macs * 2, ifmap_reads=0.0,
+                       filter_reads=0.0, ofmap_writes=0.0, ofmap_reads=0.0,
+                       dram_bytes=0.0)
+    assert energy_pj(c2)["total"] >= e["total"] * 0.99
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(8, 512), st.integers(0, 3))
+def test_dram_latency_at_least_cas(n_req, seed):
+    from repro.core.dram import linear_trace, simulate_dram
+    cfg = acc.DramConfig()
+    t, a, w = linear_trace(n_req, start_addr=seed * 4096)
+    res = simulate_dram(t, a, w, cfg)
+    assert float(np.asarray(res.latency).min()) >= cfg.tCAS

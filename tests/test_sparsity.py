@@ -1,0 +1,102 @@
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.accelerator import SparsityConfig
+from repro.core.sparsity import (effective_K, expected_rowwise_n,
+                                 metadata_bits, pack_ellpack_block,
+                                 sparse_compute_cycles, storage_report)
+
+
+def test_nm_constraint_enforced():
+    with pytest.raises(ValueError):
+        SparsityConfig(enabled=True, n=3, m=4, row_wise=True)  # N > M/2
+    SparsityConfig(enabled=True, n=2, m=4, row_wise=True)       # ok
+    SparsityConfig(enabled=True, n=3, m=4, row_wise=False)      # layer-wise ok
+
+
+def test_effective_k_layerwise():
+    sp = SparsityConfig(enabled=True, n=2, m=4)
+    assert effective_K(1024, sp) == 512
+    sp14 = SparsityConfig(enabled=True, n=1, m=4)
+    assert effective_K(1024, sp14) == 256
+
+
+def test_2to4_exactly_halves_compute():
+    """Ampere 2:4 validation (paper Sec. VIII): 2x compute reduction."""
+    dense = sparse_compute_cycles("ws", 512, 4096, 1024, 32, 32,
+                                  SparsityConfig())
+    sp = sparse_compute_cycles("ws", 512, 4096, 1024, 32, 32,
+                               SparsityConfig(enabled=True, n=2, m=4))
+    # streaming term dominates at T=4096: ratio within fold rounding of 2x
+    assert 1.8 < float(dense) / float(sp) <= 2.05
+
+
+def test_sparser_never_slower():
+    prev = None
+    for n in (4, 3, 2, 1):
+        c = float(sparse_compute_cycles(
+            "ws", 512, 512, 2048, 32, 32,
+            SparsityConfig(enabled=(n < 4), n=n, m=4)))
+        if prev is not None:
+            assert c <= prev
+        prev = c
+
+
+def test_storage_report_fig7():
+    """Fig. 7: storage (values + metadata) shrinks with sparsity."""
+    rows, K = 512, 4608
+    dense = storage_report(rows, K, SparsityConfig())["total_bytes"]
+    last = dense
+    for n in (3, 2, 1):
+        sp = SparsityConfig(enabled=True, n=n, m=4)
+        r = storage_report(rows, K, sp)
+        assert r["metadata_bytes"] > 0
+        assert r["total_bytes"] < last
+        last = r["total_bytes"]
+    # metadata bits per value = log2(M)
+    assert metadata_bits(4) == 2
+    assert metadata_bits(32) == 5
+
+
+def test_storage_representations():
+    rows, K = 256, 1024
+    sp_ell = SparsityConfig(enabled=True, n=2, m=4)
+    sp_csr = SparsityConfig(enabled=True, n=2, m=4, representation="csr")
+    sp_csc = SparsityConfig(enabled=True, n=2, m=4, representation="csc")
+    e = storage_report(rows, K, sp_ell)
+    c = storage_report(rows, K, sp_csr)
+    cc = storage_report(rows, K, sp_csc)
+    # blocked ELLPACK metadata (2 bits/val) beats CSR byte indices
+    assert e["metadata_bytes"] < c["metadata_bytes"]
+    assert abs(c["values_bytes"] - cc["values_bytes"]) < 1e-6
+
+
+def test_rowwise_expectation():
+    assert expected_rowwise_n(4) == 1.5          # Uniform{1, 2}
+    sp = SparsityConfig(enabled=True, n=1, m=8, row_wise=True)
+    k_eff = effective_K(1024, sp, cols_in_fold=32)
+    # lockstep max over 32 columns approaches M/2 per block
+    assert 1024 * (4 / 8) * 0.8 < float(k_eff) <= 1024 * (4 / 8)
+
+
+def test_pack_ellpack_roundtrip():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (8, 16))
+    mask = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.4, (8, 16))
+    w = jnp.where(mask, w, 0.0)
+    vals, idx, counts = pack_ellpack_block(w, m=4)
+    # every nonzero is represented at its claimed index
+    wb = np.asarray(w).reshape(8, 4, 4)
+    for r in range(8):
+        for b in range(4):
+            got = {int(i): float(v) for v, i in
+                   zip(np.asarray(vals[r, b]), np.asarray(idx[r, b]))
+                   if i >= 0}
+            want = {j: wb[r, b, j] for j in range(4) if wb[r, b, j] != 0}
+            assert got.keys() == want.keys()
+            for j in want:
+                assert abs(got[j] - want[j]) < 1e-6
