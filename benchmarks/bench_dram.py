@@ -2,19 +2,20 @@
 request-queue stalls, WS/OS flip."""
 from __future__ import annotations
 
-from repro.core import simulate_network, tpu_like_config
+from repro.api import Simulator
 from repro.core.accelerator import DramConfig
 from repro.core.dram import linear_trace, simulate_dram, tile_prefetch_trace
 from repro.core.topology import resnet18_six_layers
 from .common import timed
 
 
-def run():
+def run(smoke: bool = False):
     rows = []
+    n_req = 2048 if smoke else 8192
 
     # Fig. 9: channels 1..8 vs throughput (streaming resnet-like traffic)
     def fig9():
-        t, a, w = linear_trace(8192, issue_gap=0.25)
+        t, a, w = linear_trace(n_req, issue_gap=0.25)
         return {ch: float(simulate_dram(t, a, w,
                                         DramConfig(channels=ch)).throughput)
                 for ch in (1, 2, 4, 8)}
@@ -25,7 +26,8 @@ def run():
 
     # Fig. 10: request queue 32/128/512
     def fig10():
-        t, a, w = tile_prefetch_trace(tile_bytes=20 * 1024, n_tiles=64,
+        t, a, w = tile_prefetch_trace(tile_bytes=20 * 1024,
+                                      n_tiles=16 if smoke else 64,
                                       compute_per_tile=400, gran_bytes=64)
         return {q: float(simulate_dram(
             t, a, w, DramConfig(channels=2, read_queue=q,
@@ -44,8 +46,8 @@ def run():
     def flip():
         out = {}
         for df in ("ws", "os"):
-            cfg = tpu_like_config(array=32, dataflow=df, sram_mb=0.4)
-            rep = simulate_network(cfg, resnet18_six_layers())
+            rep = Simulator.from_preset("tpu-like", array=32, dataflow=df,
+                                        sram_mb=0.4).run(resnet18_six_layers())
             out[df] = (rep.compute_cycles, rep.total_cycles)
         return out
 

@@ -1,40 +1,43 @@
 """Paper Fig. 15 + Table V: energy by dataflow x array size; the
-latency/energy/EdP table for ResNet-50, RCNN, ViT-base."""
+latency/energy/EdP table for ResNet-50, RCNN, ViT-base. All points run
+through the unified `Simulator` facade."""
 from __future__ import annotations
 
-from repro.core import simulate_network, tpu_like_config
+from repro.api import Simulator
 from repro.core.topology import rcnn, resnet50, vit_base_linear
 from .common import timed
 
 
-def run():
+def run(smoke: bool = False):
     rows = []
+    arrays15 = (32, 128) if smoke else (8, 16, 32, 64, 128)
+    workloads = (("resnet50", resnet50()), ("vitb", vit_base_linear()))
 
     def fig15():
         out = {}
-        for wl_name, wl in (("resnet50", resnet50()),
-                            ("vitb", vit_base_linear())):
-            for arr in (8, 16, 32, 64, 128):
+        for wl_name, wl in workloads:
+            for arr in arrays15:
                 for df in ("ws", "is", "os"):
-                    cfg = tpu_like_config(array=arr, dataflow=df)
-                    out[(wl_name, arr, df)] = simulate_network(
-                        cfg, wl).energy_pj * 1e-9
+                    sim = Simulator.from_preset("tpu-like", array=arr,
+                                                dataflow=df)
+                    out[(wl_name, arr, df)] = sim.run(wl).energy_pj * 1e-9
         return out
 
     e, us = timed(fig15, repeat=1)
     os_wins = sum(1 for (w, a, d) in e if d == "os" and
                   e[(w, a, "os")] <= min(e[(w, a, "ws")], e[(w, a, "is")]))
     rows.append(("fig15_energy_dataflow_grid", us,
-                 f"os_wins={os_wins}/10;"
+                 f"os_wins={os_wins}/{2 * len(arrays15)};"
                  f"vitb32_ws={e[('vitb', 32, 'ws')]:.1f}mJ;"
                  f"vitb128_ws={e[('vitb', 128, 'ws')]:.1f}mJ"))
 
+    t5_wl = workloads if smoke else workloads + (("rcnn", rcnn()),)
+
     def table5():
         out = {}
-        for wl_name, wl in (("resnet50", resnet50()), ("rcnn", rcnn()),
-                            ("vitb", vit_base_linear())):
+        for wl_name, wl in t5_wl:
             for arr in (32, 64, 128):
-                rep = simulate_network(tpu_like_config(array=arr), wl)
+                rep = Simulator.from_preset("tpu-like", array=arr).run(wl)
                 out[(wl_name, arr)] = (rep.total_cycles,
                                        rep.energy_pj * 1e-9, rep.edp)
         return out
@@ -48,8 +51,10 @@ def run():
                  f"vitb_lat32/128={lat_ratio:.2f}(paper:6.53);"
                  f"vitb_E128/E32={e_ratio:.2f}(paper:2.86);"
                  f"edp_best={edp_best}x{edp_best}(paper:64x64)"))
-    for wl in ("resnet50", "rcnn", "vitb"):
-        rows.append((f"table5_{wl}", 0.0,
-                     ";".join(f"{a}:lat={t5[(wl,a)][0]:.3e},E={t5[(wl,a)][1]:.2f}mJ,"
-                              f"EdP={t5[(wl,a)][2]:.3e}" for a in (32, 64, 128))))
+    for wl_name, _ in t5_wl:
+        rows.append((f"table5_{wl_name}", 0.0,
+                     ";".join(f"{a}:lat={t5[(wl_name, a)][0]:.3e},"
+                              f"E={t5[(wl_name, a)][1]:.2f}mJ,"
+                              f"EdP={t5[(wl_name, a)][2]:.3e}"
+                              for a in (32, 64, 128))))
     return rows

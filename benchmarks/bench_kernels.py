@@ -11,10 +11,10 @@ from repro.kernels.systolic import simulate_fold, systolic_ws_reference
 from .common import timed
 
 
-def run():
+def run(smoke: bool = False):
     rows = []
     key = jax.random.PRNGKey(0)
-    T, R, C = 128, 32, 32
+    T, R, C = (64, 16, 16) if smoke else (128, 32, 32)
     x = jax.random.normal(key, (T, R), jnp.float32)
     w = jax.random.normal(jax.random.fold_in(key, 1), (R, C), jnp.float32)
 

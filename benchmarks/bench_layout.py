@@ -6,12 +6,13 @@ from repro.core.layout import evaluate_layout
 from .common import timed
 
 
-def run():
+def run(smoke: bool = False):
     rows = []
+    lines = (512,) if smoke else (256, 512, 1024)
 
     def grid():
         out = {}
-        for total_line in (256, 512, 1024):       # on-chip bandwidth proxy
+        for total_line in lines:                  # on-chip bandwidth proxy
             for banks in (2, 4, 8, 16, 32):
                 cfg = LayoutConfig(enabled=True, num_banks=banks,
                                    line_bytes=max(2, total_line // banks))
@@ -22,7 +23,7 @@ def run():
 
     out, us = timed(grid, repeat=1)
     mono = all(out[(bw, b1)] >= out[(bw, b2)] - 1e-9
-               for bw in (256, 512, 1024)
+               for bw in lines
                for b1, b2 in zip((2, 4, 8, 16), (4, 8, 16, 32)))
     sample = ";".join(f"bw{bw}b{b}={out[(bw,b)]:.2f}"
                       for bw in (512,) for b in (2, 8, 32))

@@ -2,22 +2,24 @@
 plus heterogeneous/non-uniform partitioning demonstrations."""
 from __future__ import annotations
 
-from repro.core import simulate_network, tpu_like_config
+from repro.api import Simulator
 from repro.core.accelerator import AcceleratorConfig, CoreConfig
 from repro.core.multicore import simulate_multicore
 from repro.core.topology import vit_base_linear
 from .common import timed
 
 
-def run():
+def run(smoke: bool = False):
     rows = []
+    points = ((1, 128), (16, 32))
 
     def table6():
         out = {}
-        for cores, arr in ((1, 128), (16, 32)):
+        for cores, arr in points:
             for df in ("ws", "is"):
-                cfg = tpu_like_config(array=arr, cores=cores, dataflow=df)
-                rep = simulate_network(cfg, vit_base_linear())
+                sim = Simulator.from_preset("tpu-like", array=arr,
+                                            cores=cores, dataflow=df)
+                rep = sim.run(vit_base_linear())
                 out[(cores, df)] = (rep.compute_cycles, rep.energy_pj * 1e-9,
                                     rep.edp)
         return out
@@ -40,7 +42,7 @@ def run():
         r = simulate_multicore(cfg, 2048, 4096, 4096, "spatial")
         return r
 
-    r, ush = timed(hetero, repeat=3)
+    r, ush = timed(hetero, repeat=1 if smoke else 3)
     spread = max(r.per_core_cycles) / min(r.per_core_cycles)
     rows.append(("sec3_heterogeneous_nonuniform", ush,
                  f"shares={list(r.per_core_share)};makespan={r.cycles:.3e};"

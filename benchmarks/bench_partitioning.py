@@ -14,10 +14,10 @@ from repro.core.partition import enumerate_plans
 from .common import timed
 
 
-def run():
-    dims = [1000, 5000, 10000]
-    arrays = [8, 16, 32]
-    cores = [16, 32, 64]
+def run(smoke: bool = False):
+    dims = [1000, 10000] if smoke else [1000, 5000, 10000]
+    arrays = [8, 32] if smoke else [8, 16, 32]
+    cores = [16, 64] if smoke else [16, 32, 64]
     st_cycle_wins = 0
     st_fp_wins_at_eq = 0
     spatial_fp_wins = 0

@@ -20,7 +20,7 @@ def load_cells():
     return cells
 
 
-def run():
+def run(smoke: bool = False):
     rows = []
     cells = load_cells()
     ok = [c for c in cells if c.get("ok")]

@@ -2,54 +2,53 @@
 
 The paper reports per-feature simulation-time overheads of v3 vs v2 (Python
 event loop). Our adaptation's claim is different: features cost little
-because everything is vectorized/jit-compiled — and the DSE fast path
-simulates thousands of designs per second (the reason to put a simulator on
-a TPU pod in the first place). Both are measured here.
+because everything is vectorized/jit-compiled — and the batched
+`Simulator.sweep` path simulates thousands of designs per second (the
+reason to put a simulator on a TPU pod in the first place). Both are
+measured here.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import simulate_network, tpu_like_config
+from repro.api import Simulator, preset_grid
 from repro.core.accelerator import LayoutConfig, SparsityConfig
-from repro.core.engine import gemm_summary_traced
-from repro.core.topology import resnet18
+from repro.core.topology import Op, resnet18
 from .common import timed
 
 
-def run():
+def run(smoke: bool = False):
     rows = []
     wl = resnet18()
-    base_cfg = tpu_like_config(array=32)
+    base = Simulator("paper-32")
 
-    _, us_base = timed(lambda: simulate_network(base_cfg, wl), repeat=3)
+    _, us_base = timed(lambda: base.run(wl), repeat=3)
     feats = {}
-    feats["multicore"] = timed(lambda: simulate_network(
-        tpu_like_config(array=32, cores=16), wl), repeat=3)[1]
-    feats["sparsity24"] = timed(lambda: simulate_network(
-        base_cfg.with_(sparsity=SparsityConfig(enabled=True, n=2, m=4)),
-        wl), repeat=3)[1]
-    feats["layout"] = timed(lambda: simulate_network(
-        base_cfg.with_(layout=LayoutConfig(enabled=True)), wl), repeat=3)[1]
-    feats["dram_cycle"] = timed(lambda: simulate_network(
-        base_cfg, wl[:6], dram_fidelity="cycle"), repeat=1)[1]
+    feats["multicore"] = timed(
+        lambda: Simulator.from_preset("tpu-like", array=32,
+                                      cores=16).run(wl), repeat=3)[1]
+    feats["sparsity24"] = timed(
+        lambda: base.with_(sparsity=SparsityConfig(
+            enabled=True, n=2, m=4)).run(wl), repeat=3)[1]
+    feats["layout"] = timed(
+        lambda: base.with_(layout=LayoutConfig(enabled=True)).run(wl),
+        repeat=3)[1]
+    feats["dram_cycle"] = timed(
+        lambda: Simulator("paper-32", fidelity="cycle").run(wl[:6]),
+        repeat=1)[1]
     over = ";".join(f"{k}={v / us_base:.2f}x" for k, v in feats.items())
     rows.append(("table4_feature_overhead", us_base,
                  f"base_us={us_base:.0f};{over}"))
 
-    # DSE fast path: vmap over 4096 (R, C) designs in one jit
-    Rs = jnp.tile(jnp.array([8, 16, 32, 64]), 1024)
-    Cs = jnp.repeat(jnp.array([8, 16, 32, 64]), 1024)
+    # DSE fast path: a (array x sram) grid through one vmapped sweep call
+    n_arr = (8, 16) if smoke else (8, 16, 32, 64)
+    n_sram = (0.5, 1.0) if smoke else (0.25, 0.5, 1.0, 2.0, 4.0, 8.0,
+                                       12.0, 16.0)
+    grid = preset_grid(array=list(n_arr), sram_mb=list(n_sram),
+                       dataflow=["ws"])
+    big = grid * (4 if smoke else 128)          # thousands of design points
+    op = [Op("g", 512, 4096, 1024)]
 
-    @jax.jit
-    def dse(Rs, Cs):
-        f = jax.vmap(lambda r, c: gemm_summary_traced(
-            "ws", 512, 4096, 1024, r, c, sram_elems=1 << 19,
-            bw_bytes_per_cycle=38.4)["total_cycles"])
-        return f(Rs, Cs)
-
-    out, us_dse = timed(lambda: dse(Rs, Cs).block_until_ready(), repeat=3)
-    rows.append(("dse_vmap_4096_designs", us_dse,
-                 f"designs_per_sec={4096 / (us_dse / 1e6):.0f}"))
+    sweep_res, us_dse = timed(lambda: base.sweep(big, op), repeat=3)
+    assert sweep_res.batched
+    rows.append((f"dse_sweep_{len(big)}_designs", us_dse,
+                 f"designs_per_sec={len(big) / (us_dse / 1e6):.0f}"))
     return rows

@@ -2,26 +2,27 @@
 block-size sweeps."""
 from __future__ import annotations
 
-from repro.core import simulate_network, tpu_like_config
+from repro.api import Simulator
 from repro.core.accelerator import SparsityConfig
 from repro.core.sparsity import storage_report
 from repro.core.topology import resnet18, vit_ffn_only
 from .common import timed
 
 
-def run():
+def run(smoke: bool = False):
     rows = []
+    mbs = (0.25, 1.0, 3.0) if smoke else (0.25, 0.5, 1.0, 2.0, 3.0)
 
     # Fig. 5: total cycles (incl. stalls) vs SRAM for 1:4 / 2:4 / 4:4
     def fig5():
         out = {}
         for nm in ((1, 4), (2, 4), (4, 4)):
-            for mb in (0.25, 0.5, 1.0, 2.0, 3.0):
-                cfg = tpu_like_config(array=32, sram_mb=mb)
+            for mb in mbs:
+                sim = Simulator.from_preset("tpu-like", array=32, sram_mb=mb)
                 if nm != (4, 4):
-                    cfg = cfg.with_(sparsity=SparsityConfig(
+                    sim = sim.with_(sparsity=SparsityConfig(
                         enabled=True, n=nm[0], m=nm[1]))
-                out[(nm, mb)] = simulate_network(cfg, resnet18()).total_cycles
+                out[(nm, mb)] = sim.run(resnet18()).total_cycles
         return out
 
     out, us = timed(fig5, repeat=1)
@@ -61,9 +62,9 @@ def run():
     def fig8():
         res = {}
         for m in (4, 8, 16, 32):
-            cfg = tpu_like_config(array=32).with_(
+            sim = Simulator("paper-32").with_(
                 sparsity=SparsityConfig(enabled=True, n=1, m=m))
-            res[m] = simulate_network(cfg, vit_ffn_only()).total_cycles
+            res[m] = sim.run(vit_ffn_only()).total_cycles
         return res
 
     bs, us8 = timed(fig8, repeat=1)

@@ -1,21 +1,18 @@
 """Design-space exploration — the reason SCALE-Sim v3 exists.
 
-Sweeps (array size x dataflow x SRAM) for an assigned LM architecture's
-operator graph and reports the latency-, energy- and EdP-optimal designs.
-The inner sweep is the traced/vmap fast path: thousands of designs in one
-jit (and pjit-shardable across a pod for workload-scale DSE).
+Sweeps (array size x SRAM) for an assigned LM architecture's operator
+graph through `Simulator.sweep`: the whole grid runs as one jitted/vmapped
+call over the traced stage pipeline, shardable across a device mesh
+(`--shard`) for workload-scale DSE — thousands of designs per second.
 
     PYTHONPATH=src python examples/dse_sweep.py --arch qwen2-1.5b
 """
 import argparse
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Simulator, preset_grid
 from repro.configs import get_config
-from repro.core import simulate_network, tpu_like_config
-from repro.core.engine import energy_traced, gemm_summary_traced
 from repro.core.topology import lm_ops, total_macs
 
 
@@ -24,49 +21,49 @@ def main():
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--seq", type=int, default=1024)
     ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--sram-mb", type=float, nargs="+",
+                    default=[0.5, 2.0, 8.0])
+    ap.add_argument("--shard", action="store_true",
+                    help="shard the design axis over this host's devices")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     ops = [o for o in lm_ops(cfg, seq=args.seq, batch=args.batch,
                              mode="prefill") if o.kind == "gemm"]
-    M = jnp.array([o.M for o in ops])
-    N = jnp.array([o.N for o in ops])
-    K = jnp.array([o.K for o in ops])
-    cnt = jnp.array([o.count for o in ops])
     print(f"{args.arch}: {len(ops)} GEMMs, "
           f"{total_macs(ops) / 1e12:.2f} TMACs per prefill step")
 
-    arrays = jnp.array([8, 16, 32, 64, 128, 256])
+    arrays = [8, 16, 32, 64, 128, 256]
+    grid = preset_grid(array=arrays, sram_mb=args.sram_mb)
 
-    @jax.jit
-    def sweep(arrays):
-        def one_design(a):
-            s = gemm_summary_traced("ws", M, N, K, a, a,
-                                    sram_elems=1 << 20,
-                                    bw_bytes_per_cycle=76.8)
-            cyc = jnp.sum(s["total_cycles"] * cnt)
-            e = jnp.sum(energy_traced(s["compute_cycles"] * cnt,
-                                      M * N * K * cnt,
-                                      s["dram_bytes"] * cnt, a, a))
-            return cyc, e
-        return jax.vmap(one_design)(arrays)
+    mesh = None
+    if args.shard:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
+        print(f"sharding {len(grid)} designs over {mesh.size} devices")
 
-    cyc, e = jax.block_until_ready(sweep(arrays))
-    edp = np.asarray(cyc) * np.asarray(e)
-    print(f"{'array':>6} {'cycles':>12} {'energy mJ':>10} {'EdP':>12}")
-    for i, a in enumerate(np.asarray(arrays)):
-        print(f"{a:>4}x{a:<4} {float(cyc[i]):>12.3e} "
-              f"{float(e[i]) * 1e-9:>10.2f} {float(edp[i]):>12.3e}")
-    best = dict(latency=int(arrays[np.argmin(cyc)]),
-                energy=int(arrays[np.argmin(np.asarray(e))]),
-                edp=int(arrays[np.argmin(edp)]))
+    res = Simulator().sweep(grid, ops, mesh=mesh)
+
+    print(f"{'design':>14} {'cycles':>12} {'energy mJ':>10} {'EdP':>12}")
+    for i, c in enumerate(res.configs):
+        a, mb = c.cores[0].rows, c.memory.ifmap_sram_bytes * 3 / (1 << 20)
+        print(f"{a:>4}x{a:<4}@{mb:4.1f}MB {res.total_cycles[i]:>12.3e} "
+              f"{res.energy_pj[i] * 1e-9:>10.2f} {res.edp[i]:>12.3e}")
+
+    best = {obj: res.best(obj).cores[0].rows
+            for obj in ("latency", "energy", "edp")}
     print(f"\noptimal design: latency -> {best['latency']}^2, "
           f"energy -> {best['energy']}^2, EdP -> {best['edp']}^2")
 
-    # cross-check the EdP winner with the full (cycle-fidelity) engine
-    full = simulate_network(tpu_like_config(array=best['edp']), ops[:40])
-    print(f"full-engine check @ {best['edp']}^2: "
-          f"{full.total_cycles:.3e} cyc, {full.energy_pj * 1e-9:.2f} mJ")
+    # cross-check the EdP winner with the cycle-fidelity DRAM pipeline
+    # (an independent stall model: if the fast path is badly wrong about
+    # memory-boundedness, these disagree)
+    full = Simulator(res.best("edp"), fidelity="cycle").run(ops[:10])
+    fast = Simulator(res.best("edp"), fidelity="fast").run(ops[:10])
+    print(f"cycle-fidelity check @ {best['edp']}^2 (first 10 GEMMs): "
+          f"{full.total_cycles:.3e} cyc vs fast {fast.total_cycles:.3e}")
+    sanity = full.total_cycles > 0 and np.isfinite(res.edp).all()
+    print("sweep sane:", bool(sanity))
 
 
 if __name__ == "__main__":

@@ -1,38 +1,49 @@
-"""Quickstart: simulate one GEMM and one full network on modeled silicon.
+"""Quickstart: simulate one GEMM and one full network on modeled silicon
+through the unified `Simulator` facade (see DESIGN.md).
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import (gemm_summary, simulate_network, simulate_op,
-                        tpu_like_config)
+from repro.api import Simulator
 from repro.core.accelerator import SparsityConfig
-from repro.core.topology import Op, resnet18
+from repro.core.topology import Op
 
 
 def main():
-    # 1. one GEMM on a 32x32 weight-stationary array
-    cfg = tpu_like_config(array=32, dataflow="ws")
-    s = gemm_summary(cfg, M=512, N=4096, K=1024)
-    print("GEMM 512x4096x1024 on 32x32 WS:")
-    print(f"  compute={float(s['compute_cycles']):.3e} cyc  "
-          f"stalls={float(s['stall_cycles']):.3e}  "
-          f"util={float(s['utilization']):.2f}  "
-          f"dram={float(s['dram_bytes'])/1e6:.1f} MB")
+    # 1. one GEMM on a 32x32 weight-stationary array (the "paper-32" preset)
+    sim = Simulator("paper-32")
+    r = sim.run_op(Op("gemm", 512, 4096, 1024))
+    print("GEMM 512x4096x1024 on 32x32 WS "
+          f"(stages: {' -> '.join(sim.stage_names())}):")
+    print(f"  compute={r.compute_cycles:.3e} cyc  "
+          f"stalls={r.stall_cycles:.3e}  "
+          f"util={r.utilization:.2f}  "
+          f"dram={r.dram_bytes/1e6:.1f} MB")
 
-    # 2. the same GEMM with 2:4 weight sparsity
-    sp = cfg.with_(sparsity=SparsityConfig(enabled=True, n=2, m=4))
-    r = simulate_op(sp, Op("gemm24", 512, 4096, 1024))
+    # 2. the same GEMM with 2:4 weight sparsity (swap one stage input,
+    #    same pipeline)
+    sp = sim.with_(sparsity=SparsityConfig(enabled=True, n=2, m=4))
+    r = sp.run_op(Op("gemm24", 512, 4096, 1024))
     print(f"  with 2:4 sparsity: compute={r.compute_cycles:.3e} cyc, "
           f"filter storage {r.sparse_storage['original_bytes']/1e6:.2f} -> "
           f"{r.sparse_storage['total_bytes']/1e6:.2f} MB")
 
-    # 3. a whole network with energy/EdP
-    rep = simulate_network(cfg, resnet18())
+    # 3. a whole network with energy/EdP + per-action breakdown
+    rep = sim.run("resnet18")
     print("\nResNet-18 end-to-end on 32x32 WS:")
     print(f"  cycles={rep.total_cycles:.3e} (stalls {rep.stall_cycles:.2e})")
     print(f"  energy={rep.energy_pj*1e-9:.2f} mJ  "
           f"power={rep.avg_power_w:.2f} W  EdP={rep.edp:.3e}")
+    top = sorted(rep.energy_breakdown.items(), key=lambda kv: -kv[1])[:3]
+    print("  top energy actions: "
+          + ", ".join(f"{k}={v*1e-9:.2f}mJ" for k, v in top))
 
-    # 4. per-layer CSV
+    # 4. cycle-accurate DRAM fidelity: same facade, different pipeline
+    cyc = Simulator("paper-32", fidelity="cycle")
+    r = cyc.run_op(Op("conv1", 64, 112 * 112, 147))
+    print(f"\ncycle-fidelity DRAM: stalls={r.stall_cycles:.3e}, "
+          f"row hits={r.dram_stats['row_hits']}")
+
+    # 5. per-layer CSV (now includes the grouped energy breakdown)
     rep.write_csv("/tmp/quickstart_report.csv")
     print("\nper-layer report -> /tmp/quickstart_report.csv")
 

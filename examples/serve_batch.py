@@ -12,9 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Simulator
 from repro.configs import get_config
-from repro.core import simulate_network, tpu_like_config
-from repro.core.topology import lm_ops
 from repro.models.zoo import ModelBundle
 
 
@@ -64,14 +63,11 @@ def main():
 
     # co-simulation: cost of the same wave on modeled silicon
     full_cfg = get_config(args.arch)          # full-size arch for the model
-    sim = tpu_like_config(array=args.sim_array)
-    pre_ops = lm_ops(full_cfg, seq=args.prompt_len, batch=B, mode="prefill")
-    dec_ops = lm_ops(full_cfg, seq=args.prompt_len, batch=B, mode="decode",
-                     cache_len=max_len)
-    rp = simulate_network(sim, pre_ops)
-    rd = simulate_network(sim, dec_ops)
-    tot_cyc = rp.total_cycles + rd.total_cycles * (args.gen_len - 1)
-    tot_e = rp.energy_pj + rd.energy_pj * (args.gen_len - 1)
+    sim = Simulator.from_preset("tpu-like", array=args.sim_array)
+    rp = sim.run_lm(full_cfg, seq=args.prompt_len, batch=B, mode="prefill")
+    rd = sim.run_lm(full_cfg, seq=args.prompt_len, batch=B, mode="decode",
+                    cache_len=max_len)
+    tot_cyc, tot_e = sim.wave_cost(rp, rd, args.gen_len)
     print(f"\nsimulated on {args.sim_array}x{args.sim_array} WS @1GHz "
           f"({full_cfg.arch_id} full size):")
     print(f"  prefill {rp.total_cycles:.3e} cyc; decode "

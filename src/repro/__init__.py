@@ -1,0 +1,8 @@
+"""repro: SCALE-Sim v3 reproduction — a JAX-native, vectorizable
+cycle-accurate systolic accelerator simulator plus the workload plane
+(models/launchers) it analyzes end to end.
+
+Public simulation API lives in `repro.api` (Simulator facade); the lower
+stage/engine layer in `repro.core`. See DESIGN.md for the map.
+"""
+from . import compat  # noqa: F401  (installs jax API shims on old jax)

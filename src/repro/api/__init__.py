@@ -1,0 +1,24 @@
+"""Public simulation API: the `Simulator` session facade over the stage
+pipeline, the accelerator preset registry, and the batched sweep path.
+
+    from repro.api import Simulator, get_preset, preset_grid
+
+    Simulator("paper-32").run("resnet18")               # one config
+    Simulator(fidelity="cycle").run_op(op)              # cycle-accurate DRAM
+    Simulator().sweep(preset_grid(array=[16, 32, 64],
+                                  sram_mb=[1, 8]), ops) # batched DSE
+
+See DESIGN.md for the stage pipeline and fidelity levels.
+"""
+from ..core.accelerator import AcceleratorConfig
+from ..core.engine import NetworkReport, OpResult
+from ..core.stages import FIDELITIES, build_pipeline
+from .presets import get_preset, list_presets, preset_grid, register_preset
+from .simulator import (Simulator, SweepResult, as_config, as_workload)
+
+__all__ = [
+    "AcceleratorConfig", "FIDELITIES", "NetworkReport", "OpResult",
+    "Simulator", "SweepResult", "as_config", "as_workload",
+    "build_pipeline", "get_preset", "list_presets", "preset_grid",
+    "register_preset",
+]

@@ -1,0 +1,89 @@
+"""Accelerator preset registry: the one way to construct configs.
+
+Benchmarks, examples, launchers and serving all build `AcceleratorConfig`s
+through `get_preset` (or `Simulator(...)` which accepts a preset name), so
+a new accelerator model is registered once and becomes available
+everywhere — including `Simulator.sweep` grids.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Dict, List
+
+from ..core.accelerator import (AcceleratorConfig, CoreConfig, MemoryConfig,
+                                tpu_like_config)
+
+_PRESETS: Dict[str, Callable[..., AcceleratorConfig]] = {}
+
+
+def register_preset(name: str):
+    """Decorator: register a config factory under `name`. Factories may
+    take keyword arguments (forwarded from `get_preset`)."""
+    def deco(fn: Callable[..., AcceleratorConfig]):
+        if name in _PRESETS:
+            raise ValueError(f"preset {name!r} already registered")
+        _PRESETS[name] = fn
+        return fn
+    return deco
+
+
+def get_preset(name: str, **kw) -> AcceleratorConfig:
+    if name not in _PRESETS:
+        raise KeyError(f"unknown preset {name!r}; "
+                       f"available: {sorted(_PRESETS)}")
+    return _PRESETS[name](**kw)
+
+
+def list_presets() -> List[str]:
+    return sorted(_PRESETS)
+
+
+def preset_grid(name: str = "tpu-like", **axes) -> List[AcceleratorConfig]:
+    """Cartesian product of preset kwargs -> list of configs for
+    `Simulator.sweep`, e.g. `preset_grid(array=[8, 16], sram_mb=[1, 8])`."""
+    keys = list(axes)
+    out = []
+    for combo in itertools.product(*(axes[k] for k in keys)):
+        out.append(get_preset(name, **dict(zip(keys, combo))))
+    return out
+
+
+# --- built-ins --------------------------------------------------------------
+
+register_preset("tpu-like")(tpu_like_config)
+
+
+@register_preset("paper-32")
+def _paper_32(**kw) -> AcceleratorConfig:
+    """The paper's default single-core 32x32 WS array."""
+    return tpu_like_config(array=32, **kw)
+
+
+@register_preset("paper-64")
+def _paper_64(**kw) -> AcceleratorConfig:
+    return tpu_like_config(array=64, **kw)
+
+
+@register_preset("paper-128")
+def _paper_128(**kw) -> AcceleratorConfig:
+    """TPU-class 128x128 MXU (Table V's big design point)."""
+    return tpu_like_config(array=128, **kw)
+
+
+@register_preset("multicore-16x32")
+def _multicore(**kw) -> AcceleratorConfig:
+    """Table VI iso-compute partner: 16 cores of 32x32."""
+    kw.setdefault("array", 32)
+    kw.setdefault("cores", 16)
+    return tpu_like_config(**kw)
+
+
+@register_preset("edge-8")
+def _edge(dataflow: str = "ws") -> AcceleratorConfig:
+    """A small edge-class design: 8x8 array, 192 KiB of operand SRAM."""
+    sram = 64 * 1024
+    return AcceleratorConfig(
+        cores=(CoreConfig(rows=8, cols=8, simd_lanes=32),),
+        dataflow=dataflow,
+        memory=MemoryConfig(ifmap_sram_bytes=sram, filter_sram_bytes=sram,
+                            ofmap_sram_bytes=sram))

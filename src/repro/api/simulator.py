@@ -1,0 +1,296 @@
+"""The `Simulator` facade: one session object over the stage pipeline.
+
+    sim = Simulator("paper-32", fidelity="fast")
+    report = sim.run(resnet18())            # NetworkReport
+    res = sim.sweep(configs, ops)           # batched DSE over a config grid
+
+A Simulator binds (config, fidelity, ERT) once; every entrypoint then runs
+the same stage pipeline (`core/stages.py`). `sweep` is the batched path:
+it stacks per-config scalars into arrays, vmaps the *traced* stage twins
+over the design axis inside a single jit, and optionally shards the design
+axis over a device mesh (reusing `launch/mesh.py` meshes) — this is how
+thousands of design points per second are served from one process or a pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import stages as st
+from ..core.accelerator import AcceleratorConfig, MemoryConfig
+from ..core.energy import DEFAULT_ERT, ERT, energy_pj
+from ..core.engine import (NetworkReport, OpResult, simulate_network,
+                           simulate_op)
+from ..core.topology import PAPER_WORKLOADS, Op
+from .presets import get_preset
+
+ConfigLike = Union[AcceleratorConfig, dict, str]
+WorkloadLike = Union[Sequence[Op], str]
+
+
+def as_config(c: ConfigLike) -> AcceleratorConfig:
+    """Preset name | nested dict | AcceleratorConfig -> AcceleratorConfig."""
+    if isinstance(c, AcceleratorConfig):
+        return c
+    if isinstance(c, str):
+        return get_preset(c)
+    if isinstance(c, dict):
+        return AcceleratorConfig.from_dict(c)
+    raise TypeError(f"cannot build AcceleratorConfig from {type(c)!r}")
+
+
+def as_workload(w: WorkloadLike) -> List[Op]:
+    """Op sequence or paper-workload name ('resnet18', 'vit_base', ...)."""
+    if isinstance(w, str):
+        if w not in PAPER_WORKLOADS:
+            raise KeyError(f"unknown workload {w!r}; "
+                           f"available: {sorted(PAPER_WORKLOADS)}")
+        return PAPER_WORKLOADS[w]()
+    return list(w)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Per-design-point totals over one workload (arrays of shape (n,))."""
+    configs: List[AcceleratorConfig]
+    total_cycles: np.ndarray
+    compute_cycles: np.ndarray
+    stall_cycles: np.ndarray
+    dram_bytes: np.ndarray
+    energy_pj: np.ndarray
+    utilization: np.ndarray
+    batched: bool = True          # False when the python fallback ran
+
+    @property
+    def edp(self) -> np.ndarray:
+        return self.energy_pj * 1e-9 * self.total_cycles
+
+    def __len__(self) -> int:
+        return len(self.configs)
+
+    def argbest(self, objective: str = "edp") -> int:
+        key = dict(edp=self.edp, latency=self.total_cycles,
+                   cycles=self.total_cycles, energy=self.energy_pj)
+        return int(np.argmin(key[objective]))
+
+    def best(self, objective: str = "edp") -> AcceleratorConfig:
+        return self.configs[self.argbest(objective)]
+
+
+def _traceable(cfg: AcceleratorConfig) -> bool:
+    """The vmapped fast path covers single-core dense configs (the DSE
+    regime); sparsity/layout/multicore points fall back to the engine."""
+    return (cfg.num_cores == 1 and not cfg.sparsity.enabled
+            and not cfg.layout.enabled)
+
+
+class Simulator:
+    """Unified simulation session: config + fidelity + ERT, one pipeline.
+
+    fidelity: 'fast' (first-order DRAM stalls, traceable/batchable) or
+    'cycle' (lax.scan DRAM timing model per op).
+    """
+
+    def __init__(self, config: ConfigLike = "paper-32", *,
+                 fidelity: str = "fast", ert: ERT = DEFAULT_ERT):
+        if fidelity not in st.FIDELITIES:
+            raise ValueError(f"fidelity must be one of {st.FIDELITIES}")
+        self.config = as_config(config)
+        self.fidelity = fidelity
+        self.ert = ert
+        self.pipeline = st.build_pipeline(fidelity)
+
+    @classmethod
+    def from_preset(cls, name: str, *, fidelity: str = "fast",
+                    ert: ERT = DEFAULT_ERT, **kw) -> "Simulator":
+        return cls(get_preset(name, **kw), fidelity=fidelity, ert=ert)
+
+    def with_(self, **config_fields) -> "Simulator":
+        """New session with dataclass fields replaced on the config."""
+        return Simulator(self.config.with_(**config_fields),
+                         fidelity=self.fidelity, ert=self.ert)
+
+    def stage_names(self) -> List[str]:
+        return [s.name for s in self.pipeline]
+
+    # ---- single-config entrypoints ----------------------------------------
+    def run_op(self, op: Op) -> OpResult:
+        return simulate_op(self.config, op, dram_fidelity=self.fidelity,
+                           ert=self.ert, pipeline=self.pipeline)
+
+    def run(self, workload: WorkloadLike) -> NetworkReport:
+        return simulate_network(self.config, as_workload(workload),
+                                dram_fidelity=self.fidelity, ert=self.ert,
+                                pipeline=self.pipeline)
+
+    def run_lm(self, model_cfg, *, seq: int, batch: int, mode: str,
+               cache_len: Optional[int] = None) -> NetworkReport:
+        """Model one step of an LM architecture (repro.configs ModelConfig)
+        on this accelerator — the co-simulation entrypoint shared by the
+        train/serve/dryrun drivers and examples."""
+        from ..core.topology import lm_ops
+        return self.run(lm_ops(model_cfg, seq=seq, batch=batch, mode=mode,
+                               cache_len=cache_len))
+
+    def seconds(self, cycles: float) -> float:
+        """Accelerator cycles -> wall seconds at this config's clock."""
+        return cycles / (self.config.clock_ghz * 1e9)
+
+    @staticmethod
+    def wave_cost(prefill_rep: NetworkReport, decode_rep: NetworkReport,
+                  gen_len: int) -> tuple:
+        """(cycles, pJ) for one serving wave: a prefill plus gen_len - 1
+        decode steps (the first generated token comes out of prefill)."""
+        steps = max(gen_len - 1, 0)
+        return (prefill_rep.total_cycles + decode_rep.total_cycles * steps,
+                prefill_rep.energy_pj + decode_rep.energy_pj * steps)
+
+    # ---- batched sweep -----------------------------------------------------
+    def sweep(self, configs: Sequence[ConfigLike], workload: WorkloadLike,
+              *, mesh: Optional[jax.sharding.Mesh] = None) -> SweepResult:
+        """Simulate `workload` on every config; one jitted/vmapped call per
+        (dataflow, word_bytes) group of traceable configs.
+
+        mesh: shard the design axis over a device mesh (launch/mesh.py);
+        the grid is padded to a multiple of mesh.size.
+        Non-traceable configs (multicore/sparsity/layout) and 'cycle'
+        fidelity run through the per-op engine instead — same result
+        contract, no batching.
+        """
+        cfgs = [as_config(c) for c in configs]
+        ops = as_workload(workload)
+        n = len(cfgs)
+        out = {k: np.zeros(n) for k in
+               ("total_cycles", "compute_cycles", "stall_cycles",
+                "dram_bytes", "energy_pj", "utilization")}
+
+        batched_idx: Dict[tuple, List[int]] = {}
+        fallback: List[int] = []
+        for i, c in enumerate(cfgs):
+            if self.fidelity == "fast" and _traceable(c):
+                batched_idx.setdefault(
+                    (c.dataflow, c.memory.word_bytes), []).append(i)
+            else:
+                fallback.append(i)
+
+        for (df, wb), idxs in batched_idx.items():
+            vals = _sweep_batched([cfgs[i] for i in idxs], ops, df, wb,
+                                  self.ert, mesh)
+            for k, arr in vals.items():
+                out[k][np.asarray(idxs)] = arr
+
+        for i in fallback:
+            rep = simulate_network(cfgs[i], ops,
+                                   dram_fidelity=self.fidelity,
+                                   ert=self.ert, pipeline=self.pipeline)
+            out["total_cycles"][i] = rep.total_cycles
+            out["compute_cycles"][i] = rep.compute_cycles
+            out["stall_cycles"][i] = rep.stall_cycles
+            out["dram_bytes"][i] = rep.dram_bytes
+            out["energy_pj"][i] = rep.energy_pj
+            out["utilization"][i] = rep.utilization
+
+        return SweepResult(configs=cfgs, batched=not fallback, **out)
+
+
+@functools.lru_cache(maxsize=64)
+def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT):
+    """Jitted (vmap over designs) sweep kernel, cached per pipeline flavor
+    so repeated sweeps (benchmark loops, serving traffic) reuse the
+    compiled executable."""
+
+    def one_design(d, M, N, K, cnt, velems, vcnt):
+        mem = MemoryConfig(ifmap_sram_bytes=d["if_b"],
+                           filter_sram_bytes=d["f_b"],
+                           ofmap_sram_bytes=d["o_b"],
+                           l2_sram_bytes=d["l2_b"], word_bytes=word_bytes)
+        R, C = d["R"], d["C"]
+        s = st.traced_gemm_stats(dataflow, M, N, K, R, C, mem, d["bw"])
+        comp_t = s["compute_cycles"] * cnt
+        stall_t = s["stall_cycles"] * cnt
+        dram_t = s["dram_bytes"] * cnt
+        macs = M * N * K * cnt
+        counts = st.traced_energy_counts(
+            R=R, C=C, mem=mem, cycles=comp_t, macs=macs,
+            ifmap_reads=s["ifmap_reads"] * cnt,
+            filter_reads=s["filter_reads"] * cnt,
+            ofmap_writes=s["ofmap_writes"] * cnt,
+            ofmap_reads=s["ofmap_reads"] * cnt,
+            dram_bytes=dram_t,
+            l2_reads=jnp.where(d["l2_b"] > 0, s["dram_elems"] * cnt, 0.0))
+        energy = jnp.sum(energy_pj(counts, ert)["total"])
+
+        # SIMD sidecar (empty arrays contribute zero); like run_vector,
+        # every component scales with count
+        v = st.traced_vector_stats(velems, d["lanes"], d["lat"], word_bytes)
+        vcyc = v["compute_cycles"] * vcnt
+        vdram = v["dram_bytes"] * vcnt
+        vel_t = velems * vcnt
+        vcounts = st.traced_energy_counts(
+            R=R, C=C, mem=mem, cycles=vcyc, macs=jnp.zeros_like(vcyc),
+            ifmap_reads=vel_t, filter_reads=jnp.zeros_like(vel_t),
+            ofmap_writes=vel_t, ofmap_reads=jnp.zeros_like(vel_t),
+            dram_bytes=vdram)
+        energy = energy + jnp.sum(energy_pj(vcounts, ert)["total"])
+
+        comp = jnp.sum(comp_t) + jnp.sum(vcyc)
+        stall = jnp.sum(stall_t)
+        dram_b = jnp.sum(dram_t) + jnp.sum(vdram)
+        total = comp + stall
+        util = jnp.minimum(1.0, jnp.sum(macs)
+                           / jnp.maximum(1.0, R * C * total))
+        return dict(total_cycles=total, compute_cycles=comp,
+                    stall_cycles=stall, dram_bytes=dram_b,
+                    energy_pj=energy, utilization=util)
+
+    return jax.jit(jax.vmap(one_design,
+                            in_axes=(0, None, None, None, None, None, None)))
+
+
+def _sweep_batched(cfgs: Sequence[AcceleratorConfig], ops: Sequence[Op],
+                   dataflow: str, word_bytes: int, ert: ERT,
+                   mesh: Optional[jax.sharding.Mesh]) -> Dict[str, np.ndarray]:
+    """Stack config scalars, vmap the traced stages over the design axis."""
+    n = len(cfgs)
+    f32 = np.float32
+
+    gemms = [o for o in ops if o.kind == "gemm"]
+    vecs = [o for o in ops if o.kind == "vector"]
+    M = jnp.asarray([o.M for o in gemms], f32)
+    N = jnp.asarray([o.N for o in gemms], f32)
+    K = jnp.asarray([o.K for o in gemms], f32)
+    cnt = jnp.asarray([o.count for o in gemms], f32)
+    velems = jnp.asarray([o.vector_elems for o in vecs], f32)
+    vcnt = jnp.asarray([o.count for o in vecs], f32)
+
+    cols = {
+        "R": [c.cores[0].rows for c in cfgs],
+        "C": [c.cores[0].cols for c in cfgs],
+        "lanes": [c.cores[0].simd_lanes for c in cfgs],
+        "lat": [c.cores[0].simd_latency for c in cfgs],
+        "if_b": [c.memory.ifmap_sram_bytes for c in cfgs],
+        "f_b": [c.memory.filter_sram_bytes for c in cfgs],
+        "o_b": [c.memory.ofmap_sram_bytes for c in cfgs],
+        "l2_b": [c.memory.l2_sram_bytes for c in cfgs],
+        "bw": [c.dram.bandwidth_bytes_per_cycle * c.dram.channels
+               for c in cfgs],
+    }
+    pad = 0
+    if mesh is not None and mesh.size > 1:
+        pad = (-n) % mesh.size
+        for v in cols.values():
+            v.extend([v[-1]] * pad)
+    design = {k: jnp.asarray(v, f32) for k, v in cols.items()}
+    if mesh is not None and mesh.size > 1:
+        sharding = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(tuple(mesh.axis_names)))
+        design = {k: jax.device_put(v, sharding) for k, v in design.items()}
+
+    fn = _batched_design_fn(dataflow, word_bytes, ert)
+    res = fn(design, M, N, K, cnt, velems, vcnt)
+    return {k: np.asarray(v, np.float64)[:n] for k, v in res.items()}

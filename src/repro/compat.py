@@ -1,0 +1,64 @@
+"""Compatibility shims for older jax releases.
+
+The model/launch planes are written against the current jax API
+(`jax.set_mesh`, `jax.shard_map` with `check_vma`). On containers pinned to
+an older jax (< 0.5) those names are missing; this module installs
+equivalents once, at `repro` import time. No-ops on new jax.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+def _install() -> None:
+    if not hasattr(jax, "set_mesh"):
+        # jax.set_mesh(mesh) is used as a context manager; Mesh itself is
+        # the context manager on old jax.
+        jax.set_mesh = lambda mesh: mesh
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        @functools.wraps(_shard_map)
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                      **kw):
+            if check_vma is not None:       # renamed from check_rep
+                kw.setdefault("check_rep", check_vma)
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+
+        jax.shard_map = shard_map
+
+    _install_optimization_barrier_ad()
+
+
+def _install_optimization_barrier_ad() -> None:
+    """Backport the optimization_barrier differentiation rule (upstream in
+    jax >= 0.4.38); models/transformer.py differentiates through the
+    barrier inside its scanned layer body."""
+    try:
+        from jax._src import ad_util
+        from jax._src.lax import lax as lax_internal
+        from jax.interpreters import ad
+    except ImportError:          # pragma: no cover - layout changed upstream
+        return
+    p = getattr(lax_internal, "optimization_barrier_p", None)
+    if p is None or p in ad.primitive_jvps:
+        return
+
+    def _inst(x):
+        return ad_util.instantiate(x) if isinstance(x, ad_util.Zero) else x
+
+    def _jvp(primals, tangents):
+        return p.bind(*primals), p.bind(*(_inst(t) for t in tangents))
+
+    def _transpose(cts, *primals):
+        return [_inst(ct) for ct in cts]
+
+    ad.primitive_jvps[p] = _jvp
+    ad.primitive_transposes[p] = _transpose
+
+
+_install()

@@ -130,6 +130,32 @@ class AcceleratorConfig:
     def with_(self, **kw) -> "AcceleratorConfig":
         return dataclasses.replace(self, **kw)
 
+    def to_dict(self) -> dict:
+        """Plain nested-dict form (JSON/YAML-safe). Inverse of `from_dict`."""
+        d = dataclasses.asdict(self)
+        d["cores"] = list(d["cores"])       # tuple -> list for JSON
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "AcceleratorConfig":
+        """Build a config from `to_dict` output (or any compatible mapping;
+        missing sections fall back to defaults, unknown keys are an error)."""
+        d = dict(d)
+        sections = dict(memory=MemoryConfig, dram=DramConfig,
+                        sparsity=SparsityConfig, layout=LayoutConfig)
+        kw: dict = {}
+        cores = d.pop("cores", None)
+        if cores is not None:
+            kw["cores"] = tuple(
+                c if isinstance(c, CoreConfig) else CoreConfig(**c)
+                for c in cores)
+        for name, typ in sections.items():
+            if name in d:
+                v = d.pop(name)
+                kw[name] = v if isinstance(v, typ) else typ(**v)
+        kw.update(d)
+        return cls(**kw)
+
 
 def tpu_like_config(array: int = 128, cores: int = 1, dataflow: str = "ws",
                     sram_mb: float = 8.0) -> AcceleratorConfig:

@@ -70,17 +70,21 @@ def repeat_fraction(row_bytes: int = 64, word_bytes: int = 2) -> float:
     return 1.0 - 1.0 / per_row
 
 
-def action_counts(cfg: AcceleratorConfig, *, cycles: float, macs: float,
-                  ifmap_reads: float, filter_reads: float,
-                  ofmap_writes: float, ofmap_reads: float,
-                  dram_bytes: float, l2_reads: float = 0.0,
-                  l2_writes: float = 0.0, noc_byte_hops: float = 0.0,
-                  row_bytes: int = 64) -> Dict[str, float]:
-    """Stage 1: simulator statistics -> Accelergy-style action counts."""
-    pes = sum(c.num_pes for c in cfg.cores)
-    dim32 = max(max(c.rows, c.cols) for c in cfg.cores) / 32.0
-    util = min(1.0, macs / max(1.0, pes * cycles))
-    rf = repeat_fraction(row_bytes, cfg.memory.word_bytes)
+def action_counts_raw(*, pes, dim32, sram_kib, word_bytes: int,
+                      cycles, macs, ifmap_reads, filter_reads,
+                      ofmap_writes, ofmap_reads, dram_bytes,
+                      l2_reads=0.0, l2_writes=0.0, noc_byte_hops=0.0,
+                      row_bytes: int = 64) -> Dict[str, float]:
+    """Stage 1 core: simulator statistics -> Accelergy-style action counts.
+
+    Config-derived scalars (`pes`, `dim32`, `sram_kib`) are explicit so the
+    traced DSE path can pass jnp arrays; `action_counts` wraps this for a
+    concrete AcceleratorConfig. Uses jnp min/max so every argument may be a
+    traced array.
+    """
+    import jax.numpy as jnp
+    util = jnp.clip(macs / jnp.maximum(1.0, pes * cycles), 0.0, 1.0)
+    rf = repeat_fraction(row_bytes, word_bytes)
     sram_reads = ifmap_reads + filter_reads + ofmap_reads
     sram_writes = ofmap_writes
     return dict(
@@ -94,12 +98,30 @@ def action_counts(cfg: AcceleratorConfig, *, cycles: float, macs: float,
         sram_read_repeat=sram_reads * rf,
         sram_write_random=sram_writes * (1 - rf),
         sram_write_repeat=sram_writes * rf,
-        sram_idle_kib_cycles=cycles * (
-            cfg.memory.ifmap_sram_bytes + cfg.memory.filter_sram_bytes
-            + cfg.memory.ofmap_sram_bytes) / 1024.0,
+        sram_idle_kib_cycles=cycles * sram_kib,
         l2_read=l2_reads, l2_write=l2_writes,
         dram_bytes=dram_bytes, noc_byte_hops=noc_byte_hops,
     )
+
+
+def action_counts(cfg: AcceleratorConfig, *, cycles: float, macs: float,
+                  ifmap_reads: float, filter_reads: float,
+                  ofmap_writes: float, ofmap_reads: float,
+                  dram_bytes: float, l2_reads: float = 0.0,
+                  l2_writes: float = 0.0, noc_byte_hops: float = 0.0,
+                  row_bytes: int = 64) -> Dict[str, float]:
+    """Stage 1: simulator statistics -> Accelergy-style action counts."""
+    pes = sum(c.num_pes for c in cfg.cores)
+    dim32 = max(max(c.rows, c.cols) for c in cfg.cores) / 32.0
+    sram_kib = (cfg.memory.ifmap_sram_bytes + cfg.memory.filter_sram_bytes
+                + cfg.memory.ofmap_sram_bytes) / 1024.0
+    return action_counts_raw(
+        pes=pes, dim32=dim32, sram_kib=sram_kib,
+        word_bytes=cfg.memory.word_bytes, cycles=cycles, macs=macs,
+        ifmap_reads=ifmap_reads, filter_reads=filter_reads,
+        ofmap_writes=ofmap_writes, ofmap_reads=ofmap_reads,
+        dram_bytes=dram_bytes, l2_reads=l2_reads, l2_writes=l2_writes,
+        noc_byte_hops=noc_byte_hops, row_bytes=row_bytes)
 
 
 _ACTION_TO_ERT = dict(

@@ -1,17 +1,12 @@
 """End-to-end simulation engine: op graph x AcceleratorConfig -> report.
 
-Pipeline per GEMM op (paper Fig. 1, left to right):
-  dataflow mapping -> multi-core partitioning -> compute cycles
-  -> sparsity-compressed streaming (if enabled)
-  -> SRAM traffic -> capacity-based DRAM traffic
-  -> DRAM stalls (simple bandwidth overlap, or the cycle-accurate
-     lax.scan model at `dram_fidelity='cycle'`)
-  -> layout bank-conflict slowdown (if enabled)
-  -> action counts -> energy / power / EdP.
-
-Vector ops run on the SIMD unit. `simulate_network` loops ops in Python
-(graphs are O(100) ops); `gemm_summary_traced` is the fully-traced variant
-used by vmap/pjit DSE sweeps over thousands of accelerator configs.
+Thin wrappers over the shared stage pipeline in `core/stages.py`
+(mapping -> partition -> sparsity -> sram -> dram -> layout -> energy);
+see that module and DESIGN.md for the stage semantics. Vector ops run on
+the SIMD unit. `simulate_network` loops ops in Python (graphs are O(100)
+ops); `gemm_summary_traced` is the fully-traced variant used by vmap/pjit
+DSE sweeps over thousands of accelerator configs — prefer the batched
+`repro.api.Simulator.sweep` facade for new code.
 """
 from __future__ import annotations
 
@@ -20,16 +15,21 @@ import json
 from typing import Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
-import numpy as np
 
-from .accelerator import AcceleratorConfig, SparsityConfig
-from . import dataflow as dfm
-from .dram import simulate_dram, tile_prefetch_trace
-from .energy import DEFAULT_ERT, ERT, action_counts, edp, energy_pj, power_w
-from .layout import evaluate_layout
-from .multicore import best_multicore
-from .sparsity import sparse_compute_cycles, storage_report
+from .accelerator import AcceleratorConfig
+from . import stages as st
+from .energy import DEFAULT_ERT, ERT, edp, power_w
 from .topology import Op
+
+# Grouped CSV columns for the per-op energy breakdown (pJ).
+_ENERGY_GROUPS = {
+    "energy_mac_pj": ("mac_random", "mac_wire", "spad_read", "spad_write"),
+    "energy_sram_pj": ("sram_read_random", "sram_read_repeat",
+                       "sram_write_random", "sram_write_repeat",
+                       "sram_idle_kib_cycles", "l2_read", "l2_write"),
+    "energy_dram_pj": ("dram_bytes", "noc_byte_hops"),
+    "energy_static_pj": ("mac_gated", "pe_leak"),
+}
 
 
 @dataclasses.dataclass
@@ -49,6 +49,13 @@ class OpResult:
     scheme: str = "single"
     dram_stats: Optional[Dict[str, float]] = None
     sparse_storage: Optional[Dict[str, float]] = None
+    energy_by_action: Optional[Dict[str, float]] = None
+
+    def energy_group(self, group: str) -> float:
+        if not self.energy_by_action:
+            return 0.0
+        return sum(self.energy_by_action.get(a, 0.0)
+                   for a in _ENERGY_GROUPS[group])
 
 
 @dataclasses.dataclass
@@ -75,120 +82,51 @@ class NetworkReport:
         cols = ["name", "kind", "compute_cycles", "stall_cycles",
                 "layout_extra_cycles", "total_cycles", "utilization",
                 "dram_bytes", "energy_pj"]
+        groups = list(_ENERGY_GROUPS)
         with open(path, "w") as f:
-            f.write(",".join(cols) + "\n")
+            f.write(",".join(cols + groups) + "\n")
             for o in self.ops:
-                f.write(",".join(str(getattr(o, c)) for c in cols) + "\n")
+                vals = [str(getattr(o, c)) for c in cols]
+                vals += [f"{o.energy_group(g):.6g}" for g in groups]
+                f.write(",".join(vals) + "\n")
 
 
-_DRAM_REQ_CAP = 16384     # cycle-fidelity request cap per op (scaled beyond)
+def _result_from_ctx(ctx: st.OpContext, kind: str) -> OpResult:
+    op = ctx.op
+    return OpResult(
+        op.name, kind, ctx.compute_total, ctx.stall_total, ctx.layout_total,
+        ctx.total, ctx.util, op.macs if kind == "gemm" else 0.0,
+        ctx.sram_reads, ctx.sram_writes, ctx.dram_bytes_total,
+        ctx.energy_total, ctx.scheme, ctx.dram_stats, ctx.sparse_info,
+        ctx.energy_by_action)
 
 
 def simulate_op(cfg: AcceleratorConfig, op: Op, *,
                 dram_fidelity: str = "fast",
-                ert: ERT = DEFAULT_ERT) -> OpResult:
-    core = cfg.cores[0]
-    wb = cfg.memory.word_bytes
+                ert: ERT = DEFAULT_ERT,
+                pipeline: Optional[Sequence[st.Stage]] = None) -> OpResult:
+    """Simulate one op through the stage pipeline.
 
+    `pipeline` lets callers (the Simulator facade, tests) pass a prebuilt
+    or customized stage list; by default it is built from `dram_fidelity`.
+    """
     if op.kind == "vector":
-        cyc = float(dfm.simd_cycles(op.vector_elems, core.simd_lanes,
-                                    core.simd_latency)) * op.count
-        dram_b = op.vector_elems * wb * op.count
-        counts = action_counts(cfg, cycles=cyc, macs=0.0, ifmap_reads=op.vector_elems,
-                               filter_reads=0.0, ofmap_writes=op.vector_elems,
-                               ofmap_reads=0.0, dram_bytes=dram_b)
-        e = energy_pj(counts, ert)
-        return OpResult(op.name, "vector", cyc, 0.0, 0.0, cyc, 0.0, 0.0,
-                        op.vector_elems, op.vector_elems, dram_b, e["total"])
-
-    M, N, K = op.M, op.N, op.K
-    df = cfg.dataflow
-    sp = cfg.sparsity
-    if op.sparsity_nm is not None:
-        sp = SparsityConfig(enabled=True, n=op.sparsity_nm[0],
-                            m=op.sparsity_nm[1], row_wise=sp.row_wise,
-                            representation=sp.representation)
-    sparse_info = None
-    if sp.enabled:
-        comp = float(sparse_compute_cycles(df, M, N, K, core.rows, core.cols, sp))
-        sparse_info = storage_report(M, K, sp, wb)
-        scheme = "single"
-        util = min(1.0, M * N * K / max(1.0, core.num_pes * comp * sp.m / max(sp.n, 1)))
-    elif cfg.num_cores > 1:
-        mc = best_multicore(cfg, M, N, K)
-        comp, scheme = mc.cycles, f"{mc.scheme}({mc.Pr}x{mc.Pc})"
-        util = min(1.0, M * N * K / max(1.0,
-                   sum(c.num_pes for c in cfg.cores) * comp))
-    else:
-        comp = float(dfm.compute_cycles(df, M, N, K, core.rows, core.cols))
-        scheme = "single"
-        util = float(dfm.pe_utilization(df, M, N, K, core.rows, core.cols))
-
-    sram = dfm.sram_traffic(df, M, N, K, core.rows, core.cols)
-    dram = dfm.dram_traffic(df, M, N, K, core.rows, core.cols, cfg.memory)
-    if sp.enabled and sparse_info is not None:
-        shrink = sparse_info["total_bytes"] / max(sparse_info["original_bytes"], 1.0)
-        dram["dram_filter"] = dram["dram_filter"] * shrink
-        sram["filter_reads"] = sram["filter_reads"] * shrink
-    dram_elems = float(dram["dram_ifmap"] + dram["dram_filter"]
-                       + dram["dram_ofmap_writes"] + dram["dram_ofmap_reads"])
-    dram_bytes = dram_elems * wb
-    bw = cfg.dram.bandwidth_bytes_per_cycle * cfg.dram.channels
-
-    dram_stats = None
-    if dram_fidelity == "cycle":
-        gran = 512
-        n_req = max(1, int(dram_bytes) // gran)
-        scale = max(1.0, n_req / _DRAM_REQ_CAP)
-        n_sim = min(n_req, _DRAM_REQ_CAP)
-        folds = max(1, int(np.ceil(n_sim / 32)))
-        t, a, w = tile_prefetch_trace(n_sim * gran // folds, folds,
-                                      comp / max(folds, 1) / scale, gran)
-        res = simulate_dram(t, a, w, cfg.dram, gran)
-        stall = float(res.stall_cycles) * scale
-        dram_stats = dict(row_hits=int(res.row_hits), row_misses=int(res.row_misses),
-                          row_conflicts=int(res.row_conflicts),
-                          throughput_Bpc=float(res.throughput),
-                          mean_latency=float(jnp.mean(res.latency)),
-                          scaled_by=scale)
-    else:
-        stall = float(dfm.dram_stall_cycles_simple(dram_bytes / op.count if op.count
-                                                   else dram_bytes, comp, bw))
-
-    layout_extra = 0.0
-    if cfg.layout.enabled:
-        lr = evaluate_layout(cfg.layout, core.rows,
-                             n_cycles=min(512, max(8, int(min(comp, 512)))),
-                             lead_stride=1, elem_stride=max(1, N), word_bytes=wb)
-        layout_extra = (lr.mean_slowdown - 1.0) * comp
-
-    comp_total = comp * op.count
-    stall_total = stall * op.count
-    layout_total = layout_extra * op.count
-    total = comp_total + stall_total + layout_total
-    macs = op.macs
-    counts = action_counts(
-        cfg, cycles=comp_total, macs=macs,
-        ifmap_reads=float(sram["ifmap_reads"]) * op.count,
-        filter_reads=float(sram["filter_reads"]) * op.count,
-        ofmap_writes=float(sram["ofmap_writes"]) * op.count,
-        ofmap_reads=float(sram["ofmap_reads"]) * op.count,
-        dram_bytes=dram_bytes * op.count,
-        l2_reads=(dram_elems * op.count if cfg.memory.l2_sram_bytes else 0.0))
-    e = energy_pj(counts, ert)
-    return OpResult(op.name, "gemm", comp_total, stall_total, layout_total,
-                    total, util, macs,
-                    float(sram["ifmap_reads"] + sram["filter_reads"]
-                          + sram["ofmap_reads"]) * op.count,
-                    float(sram["ofmap_writes"]) * op.count,
-                    dram_bytes * op.count, e["total"], scheme,
-                    dram_stats, sparse_info)
+        return _result_from_ctx(st.run_vector(cfg, op, ert), "vector")
+    if pipeline is None:
+        pipeline = st.build_pipeline(dram_fidelity)
+    return _result_from_ctx(
+        st.run_gemm_pipeline(cfg, op, pipeline, ert), "gemm")
 
 
 def simulate_network(cfg: AcceleratorConfig, ops: Sequence[Op], *,
                      dram_fidelity: str = "fast",
-                     ert: ERT = DEFAULT_ERT) -> NetworkReport:
-    results = [simulate_op(cfg, o, dram_fidelity=dram_fidelity, ert=ert)
+                     ert: ERT = DEFAULT_ERT,
+                     pipeline: Optional[Sequence[st.Stage]] = None
+                     ) -> NetworkReport:
+    if pipeline is None:
+        pipeline = st.build_pipeline(dram_fidelity)
+    results = [simulate_op(cfg, o, dram_fidelity=dram_fidelity, ert=ert,
+                           pipeline=pipeline)
                for o in ops]
     total = sum(r.total_cycles for r in results)
     comp = sum(r.compute_cycles for r in results)
@@ -199,6 +137,9 @@ def simulate_network(cfg: AcceleratorConfig, ops: Sequence[Op], *,
     macs = sum(r.macs for r in results)
     pes = sum(c.num_pes for c in cfg.cores)
     breakdown: Dict[str, float] = {}
+    for r in results:
+        for k, v in (r.energy_by_action or {}).items():
+            breakdown[k] = breakdown.get(k, 0.0) + float(v)
     return NetworkReport(
         ops=results, total_cycles=total, compute_cycles=comp,
         stall_cycles=stall, layout_extra_cycles=lay, dram_bytes=dram_b,
@@ -216,25 +157,18 @@ def gemm_summary_traced(dataflow: str, M, N, K, R, C, *,
                         sram_elems, bw_bytes_per_cycle, word_bytes=2):
     """Fully-traced single-core summary: every argument may be a jnp array.
 
-    Used by examples/dse_sweep.py: vmap over (R, C) grids and (M, N, K)
-    workloads, then pjit over the production mesh -> thousands of simulated
-    designs per second. Mirrors dataflow.gemm_summary.
+    Legacy entrypoint kept for vmap-over-(R, C)/(M, N, K) call sites; new
+    code should use `repro.api.Simulator.sweep`, which runs the same traced
+    stages (`core.stages.traced_gemm_stats`) over whole config grids.
     """
-    Sr, Sc, T = dfm.map_gemm(dataflow, M, N, K)
-    fr, fc = dfm.cdiv(Sr, R), dfm.cdiv(Sc, C)
-    comp = (2 * R + C + T - 2) * fr * fc
-    util = (1.0 * M * N * K) / (1.0 * R * C * comp)
-    WK, XK, O = 1.0 * M * K, 1.0 * K * N, 1.0 * M * N
-    n_t = jnp.clip(sram_elems // jnp.maximum(K, 1), 1, N)
-    m_t = jnp.clip(sram_elems // jnp.maximum(K, 1), 1, M)
-    total_a = XK + WK * dfm.cdiv(N, n_t)
-    total_b = WK + XK * dfm.cdiv(M, m_t)
-    dram_elems = jnp.minimum(total_a, total_b) + O
-    dram_bytes = dram_elems * word_bytes
-    stall = jnp.maximum(0.0, dram_bytes / bw_bytes_per_cycle - comp)
-    return dict(compute_cycles=comp, stall_cycles=stall,
-                total_cycles=comp + stall, utilization=util,
-                dram_bytes=dram_bytes)
+    mem = st.traced_memory(sram_elems, word_bytes)
+    s = st.traced_gemm_stats(dataflow, M, N, K, R, C, mem,
+                             bw_bytes_per_cycle)
+    return dict(compute_cycles=s["compute_cycles"],
+                stall_cycles=s["stall_cycles"],
+                total_cycles=s["total_cycles"],
+                utilization=s["utilization"],
+                dram_bytes=s["dram_bytes"])
 
 
 def energy_traced(comp_cycles, macs, dram_bytes, R, C,

@@ -1,0 +1,380 @@
+"""The simulation pipeline as explicit, pluggable stages.
+
+One GEMM op flows through (paper Fig. 1, left to right):
+
+    mapping -> partition -> sparsity -> sram -> dram -> layout -> energy
+
+Each stage is a small object with `apply(ctx)` mutating an `OpContext`;
+`build_pipeline(fidelity)` selects concrete stages (today fidelity switches
+the DRAM stage between the first-order bandwidth-overlap model and the
+cycle-accurate lax.scan model; new fidelities or subsystems plug in here
+rather than forking the engine). `repro.core.engine.simulate_op`,
+`simulate_network` and the traced DSE path are all thin wrappers over this
+module, so there is exactly one copy of the mapping/traffic math.
+
+The traced twins (`traced_gemm_stats`, `traced_vector_stats`,
+`traced_energy_counts`) run the *same* dataflow/energy functions on jnp
+arrays, which is what lets `repro.api.Simulator.sweep` vmap/pjit thousands
+of design points per call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .accelerator import AcceleratorConfig, MemoryConfig, SparsityConfig
+from . import dataflow as dfm
+from .dram import simulate_dram, tile_prefetch_trace
+from .energy import DEFAULT_ERT, ERT, action_counts, action_counts_raw, energy_pj
+from .layout import evaluate_layout
+from .multicore import best_multicore
+from .sparsity import sparse_compute_cycles, storage_report
+from .topology import Op
+
+FIDELITIES = ("fast", "cycle")
+
+_DRAM_REQ_CAP = 16384     # cycle-fidelity request cap per op (scaled beyond)
+
+
+@dataclasses.dataclass
+class OpContext:
+    """Mutable working state threaded through the stage pipeline.
+
+    Per-instance quantities (comp, stall, traffic) are for ONE instance of
+    the op; the energy/finalize stage multiplies by `op.count`.
+    """
+    cfg: AcceleratorConfig
+    op: Op
+    ert: ERT
+    sp: SparsityConfig
+    # mapping / partition / sparsity
+    comp: float = 0.0
+    scheme: str = "single"
+    util: float = 0.0
+    sparse_info: Optional[Dict[str, float]] = None
+    filter_shrink: float = 1.0
+    # traffic
+    sram: Optional[Dict[str, float]] = None
+    dram: Optional[Dict[str, float]] = None
+    dram_elems: float = 0.0
+    dram_bytes: float = 0.0           # per instance
+    stall: float = 0.0
+    dram_stats: Optional[Dict[str, float]] = None
+    layout_extra: float = 0.0
+    # finalized totals (x op.count)
+    compute_total: float = 0.0
+    stall_total: float = 0.0
+    layout_total: float = 0.0
+    total: float = 0.0
+    sram_reads: float = 0.0
+    sram_writes: float = 0.0
+    dram_bytes_total: float = 0.0
+    energy_total: float = 0.0
+    energy_by_action: Optional[Dict[str, float]] = None
+
+
+class Stage:
+    """A pipeline stage. Subclasses set `name` and implement `apply`."""
+    name = "stage"
+
+    def apply(self, ctx: OpContext) -> None:
+        raise NotImplementedError
+
+
+class MappingStage(Stage):
+    """Single-core dataflow mapping: analytical compute cycles + PE
+    utilization (SCALE-Sim v2 runtime equations)."""
+    name = "mapping"
+
+    def apply(self, ctx: OpContext) -> None:
+        op, core, df = ctx.op, ctx.cfg.cores[0], ctx.cfg.dataflow
+        ctx.comp = float(dfm.compute_cycles(df, op.M, op.N, op.K,
+                                            core.rows, core.cols))
+        ctx.scheme = "single"
+        ctx.util = float(dfm.pe_utilization(df, op.M, op.N, op.K,
+                                            core.rows, core.cols))
+
+
+class PartitionStage(Stage):
+    """Multi-core partitioning: pick the best spatial/spatio-temporal
+    split over the core grid (skipped for single-core or sparse runs,
+    matching the paper's feature composition)."""
+    name = "partition"
+
+    def apply(self, ctx: OpContext) -> None:
+        if ctx.sp.enabled or ctx.cfg.num_cores <= 1:
+            return
+        op = ctx.op
+        mc = best_multicore(ctx.cfg, op.M, op.N, op.K)
+        ctx.comp = mc.cycles
+        ctx.scheme = f"{mc.scheme}({mc.Pr}x{mc.Pc})"
+        ctx.util = min(1.0, op.M * op.N * op.K / max(
+            1.0, sum(c.num_pes for c in ctx.cfg.cores) * mc.cycles))
+
+
+class SparsityStage(Stage):
+    """N:M weight sparsity: compressed-stream compute cycles + storage
+    report; records the filter-traffic shrink applied downstream."""
+    name = "sparsity"
+
+    def apply(self, ctx: OpContext) -> None:
+        if not ctx.sp.enabled:
+            return
+        op, core, cfg = ctx.op, ctx.cfg.cores[0], ctx.cfg
+        ctx.comp = float(sparse_compute_cycles(
+            cfg.dataflow, op.M, op.N, op.K, core.rows, core.cols, ctx.sp))
+        ctx.sparse_info = storage_report(op.M, op.K, ctx.sp,
+                                         cfg.memory.word_bytes)
+        ctx.scheme = "single"
+        ctx.util = min(1.0, op.M * op.N * op.K / max(
+            1.0, core.num_pes * ctx.comp * ctx.sp.m / max(ctx.sp.n, 1)))
+        ctx.filter_shrink = (ctx.sparse_info["total_bytes"]
+                             / max(ctx.sparse_info["original_bytes"], 1.0))
+
+
+class SramStage(Stage):
+    """Aggregate SRAM demand counts; sparse filters stream compressed."""
+    name = "sram"
+
+    def apply(self, ctx: OpContext) -> None:
+        op, core, cfg = ctx.op, ctx.cfg.cores[0], ctx.cfg
+        sram = dfm.sram_traffic(cfg.dataflow, op.M, op.N, op.K,
+                                core.rows, core.cols)
+        if ctx.filter_shrink != 1.0:
+            sram["filter_reads"] = sram["filter_reads"] * ctx.filter_shrink
+        ctx.sram = sram
+
+
+class DramStage(Stage):
+    """Capacity-based DRAM traffic shared by both fidelities; subclasses
+    supply the stall model."""
+    name = "dram"
+
+    def apply(self, ctx: OpContext) -> None:
+        op, core, cfg = ctx.op, ctx.cfg.cores[0], ctx.cfg
+        dram = dfm.dram_traffic(cfg.dataflow, op.M, op.N, op.K,
+                                core.rows, core.cols, cfg.memory)
+        if ctx.filter_shrink != 1.0:
+            dram["dram_filter"] = dram["dram_filter"] * ctx.filter_shrink
+        ctx.dram = dram
+        ctx.dram_elems = float(dram["dram_ifmap"] + dram["dram_filter"]
+                               + dram["dram_ofmap_writes"]
+                               + dram["dram_ofmap_reads"])
+        ctx.dram_bytes = ctx.dram_elems * cfg.memory.word_bytes
+        self.stalls(ctx)
+
+    def stalls(self, ctx: OpContext) -> None:
+        raise NotImplementedError
+
+
+class FastDramStage(DramStage):
+    """First-order stall: double-buffered transfer time vs compute.
+
+    Operates on per-instance bytes; `op.count` scaling happens once in the
+    finalize stage (the old engine divided by count here as well, silently
+    double-discounting stalls for repeated ops)."""
+    name = "dram[fast]"
+
+    def stalls(self, ctx: OpContext) -> None:
+        bw = ctx.cfg.dram.bandwidth_bytes_per_cycle * ctx.cfg.dram.channels
+        ctx.stall = float(dfm.dram_stall_cycles_simple(
+            ctx.dram_bytes, ctx.comp, bw))
+
+
+class CycleDramStage(DramStage):
+    """Cycle-accurate (Ramulator-like) DRAM: tile-prefetch trace through
+    banked channels with finite queues, folded + scaled beyond the
+    request cap."""
+    name = "dram[cycle]"
+
+    def stalls(self, ctx: OpContext) -> None:
+        cfg = ctx.cfg
+        gran = 512
+        n_req = max(1, int(ctx.dram_bytes) // gran)
+        scale = max(1.0, n_req / _DRAM_REQ_CAP)
+        n_sim = min(n_req, _DRAM_REQ_CAP)
+        folds = max(1, int(np.ceil(n_sim / 32)))
+        t, a, w = tile_prefetch_trace(n_sim * gran // folds, folds,
+                                      ctx.comp / max(folds, 1) / scale, gran)
+        res = simulate_dram(t, a, w, cfg.dram, gran)
+        ctx.stall = float(res.stall_cycles) * scale
+        ctx.dram_stats = dict(
+            row_hits=int(res.row_hits), row_misses=int(res.row_misses),
+            row_conflicts=int(res.row_conflicts),
+            throughput_Bpc=float(res.throughput),
+            mean_latency=float(jnp.mean(res.latency)),
+            scaled_by=scale)
+
+
+class LayoutStage(Stage):
+    """On-chip bank-conflict slowdown on the streaming operand."""
+    name = "layout"
+
+    def apply(self, ctx: OpContext) -> None:
+        cfg, op = ctx.cfg, ctx.op
+        if not cfg.layout.enabled:
+            return
+        core = cfg.cores[0]
+        lr = evaluate_layout(
+            cfg.layout, core.rows,
+            n_cycles=min(512, max(8, int(min(ctx.comp, 512)))),
+            lead_stride=1, elem_stride=max(1, op.N),
+            word_bytes=cfg.memory.word_bytes)
+        ctx.layout_extra = (lr.mean_slowdown - 1.0) * ctx.comp
+
+
+class EnergyStage(Stage):
+    """Finalize: x op.count, action counts, ERT energy lookup."""
+    name = "energy"
+
+    def apply(self, ctx: OpContext) -> None:
+        op, cfg = ctx.op, ctx.cfg
+        ctx.compute_total = ctx.comp * op.count
+        ctx.stall_total = ctx.stall * op.count
+        ctx.layout_total = ctx.layout_extra * op.count
+        ctx.total = ctx.compute_total + ctx.stall_total + ctx.layout_total
+        sram = ctx.sram
+        ctx.sram_reads = float(sram["ifmap_reads"] + sram["filter_reads"]
+                               + sram["ofmap_reads"]) * op.count
+        ctx.sram_writes = float(sram["ofmap_writes"]) * op.count
+        ctx.dram_bytes_total = ctx.dram_bytes * op.count
+        counts = action_counts(
+            cfg, cycles=ctx.compute_total, macs=op.macs,
+            ifmap_reads=float(sram["ifmap_reads"]) * op.count,
+            filter_reads=float(sram["filter_reads"]) * op.count,
+            ofmap_writes=float(sram["ofmap_writes"]) * op.count,
+            ofmap_reads=float(sram["ofmap_reads"]) * op.count,
+            dram_bytes=ctx.dram_bytes_total,
+            l2_reads=(ctx.dram_elems * op.count
+                      if cfg.memory.l2_sram_bytes else 0.0))
+        e = energy_pj(counts, ctx.ert)
+        ctx.energy_total = float(e["total"])
+        ctx.energy_by_action = {k: float(v) for k, v in e.items()
+                                if k != "total"}
+
+
+def build_pipeline(fidelity: str = "fast") -> Tuple[Stage, ...]:
+    """The canonical GEMM pipeline for a fidelity level."""
+    if fidelity not in FIDELITIES:
+        raise ValueError(f"fidelity must be one of {FIDELITIES}, "
+                         f"got {fidelity!r}")
+    dram = CycleDramStage() if fidelity == "cycle" else FastDramStage()
+    return (MappingStage(), PartitionStage(), SparsityStage(), SramStage(),
+            dram, LayoutStage(), EnergyStage())
+
+
+def resolve_sparsity(cfg: AcceleratorConfig, op: Op) -> SparsityConfig:
+    """Per-op N:M override (layer-wise sparsity ratios)."""
+    sp = cfg.sparsity
+    if op.sparsity_nm is not None:
+        sp = SparsityConfig(enabled=True, n=op.sparsity_nm[0],
+                            m=op.sparsity_nm[1], row_wise=sp.row_wise,
+                            representation=sp.representation)
+    return sp
+
+
+def run_gemm_pipeline(cfg: AcceleratorConfig, op: Op,
+                      pipeline: Sequence[Stage],
+                      ert: ERT = DEFAULT_ERT) -> OpContext:
+    ctx = OpContext(cfg=cfg, op=op, ert=ert, sp=resolve_sparsity(cfg, op))
+    for stage in pipeline:
+        stage.apply(ctx)
+    return ctx
+
+
+def run_vector(cfg: AcceleratorConfig, op: Op,
+               ert: ERT = DEFAULT_ERT) -> OpContext:
+    """Vector ops bypass the array pipeline and run on the SIMD unit.
+
+    Like the gemm path, every component — cycles, traffic, action counts —
+    scales linearly with `op.count`.
+    """
+    core = cfg.cores[0]
+    wb = cfg.memory.word_bytes
+    ctx = OpContext(cfg=cfg, op=op, ert=ert, sp=cfg.sparsity)
+    cyc = float(dfm.simd_cycles(op.vector_elems, core.simd_lanes,
+                                core.simd_latency)) * op.count
+    elems = op.vector_elems * op.count
+    ctx.comp = cyc
+    ctx.compute_total = cyc
+    ctx.total = cyc
+    ctx.sram_reads = elems
+    ctx.sram_writes = elems
+    ctx.dram_bytes_total = elems * wb
+    counts = action_counts(cfg, cycles=cyc, macs=0.0,
+                           ifmap_reads=elems, filter_reads=0.0,
+                           ofmap_writes=elems, ofmap_reads=0.0,
+                           dram_bytes=ctx.dram_bytes_total)
+    e = energy_pj(counts, ert)
+    ctx.energy_total = float(e["total"])
+    ctx.energy_by_action = {k: float(v) for k, v in e.items()
+                            if k != "total"}
+    return ctx
+
+
+# --------------------------------------------------------------------------
+# Traced twins: the same stage math on jnp arrays (vmap/pjit-safe).
+# --------------------------------------------------------------------------
+
+_NO_SPILL_BYTES = 1 << 62     # "infinite" psum SRAM: legacy traced semantics
+
+
+def traced_memory(sram_elems, word_bytes=2, *, ifmap_elems=None,
+                  filter_elems=None, ofmap_elems=None,
+                  l2_bytes=0) -> MemoryConfig:
+    """A MemoryConfig whose fields may be traced arrays. With only
+    `sram_elems`, reproduces the legacy traced model: both operand SRAMs
+    sized to sram_elems, psums never spill."""
+    wb = word_bytes
+    return MemoryConfig(
+        ifmap_sram_bytes=(ifmap_elems if ifmap_elems is not None
+                          else sram_elems) * wb,
+        filter_sram_bytes=(filter_elems if filter_elems is not None
+                           else sram_elems) * wb,
+        ofmap_sram_bytes=(ofmap_elems * wb if ofmap_elems is not None
+                          else _NO_SPILL_BYTES),
+        l2_sram_bytes=l2_bytes, word_bytes=wb)
+
+
+def traced_gemm_stats(dataflow: str, M, N, K, R, C, mem: MemoryConfig,
+                      bw_bytes_per_cycle) -> Dict[str, jnp.ndarray]:
+    """mapping + sram + dram(fast) stages, fully traced. Every argument
+    except `dataflow` may be a jnp array; `mem` fields may be arrays."""
+    comp = dfm.compute_cycles(dataflow, M, N, K, R, C)
+    util = dfm.pe_utilization(dataflow, M, N, K, R, C)
+    sram = dfm.sram_traffic(dataflow, M, N, K, R, C)
+    dram = dfm.dram_traffic(dataflow, M, N, K, R, C, mem)
+    dram_elems = (dram["dram_ifmap"] + dram["dram_filter"]
+                  + dram["dram_ofmap_writes"] + dram["dram_ofmap_reads"])
+    dram_bytes = dram_elems * mem.word_bytes
+    stall = dfm.dram_stall_cycles_simple(dram_bytes, comp,
+                                         bw_bytes_per_cycle)
+    return dict(compute_cycles=comp, stall_cycles=stall,
+                total_cycles=comp + stall, utilization=util,
+                dram_bytes=dram_bytes, dram_elems=dram_elems, **sram)
+
+
+def traced_vector_stats(elems, lanes, latency, word_bytes) -> Dict[str, jnp.ndarray]:
+    """SIMD sidecar, traced (per instance; callers scale by count)."""
+    cyc = dfm.simd_cycles(elems, lanes, latency)
+    return dict(compute_cycles=cyc, dram_bytes=elems * word_bytes)
+
+
+def traced_energy_counts(*, R, C, mem: MemoryConfig, cycles, macs,
+                         ifmap_reads, filter_reads, ofmap_writes,
+                         ofmap_reads, dram_bytes, l2_reads=0.0,
+                         row_bytes: int = 64) -> Dict[str, jnp.ndarray]:
+    """The energy stage's action counts with array-valued config fields;
+    identical formulas to `energy.action_counts` (shared core). `mem` must
+    carry real SRAM sizes (not the no-spill sentinel)."""
+    sram_kib = (mem.ifmap_sram_bytes + mem.filter_sram_bytes
+                + mem.ofmap_sram_bytes) / 1024.0
+    return action_counts_raw(
+        pes=R * C, dim32=jnp.maximum(R, C) / 32.0, sram_kib=sram_kib,
+        word_bytes=mem.word_bytes, cycles=cycles, macs=macs,
+        ifmap_reads=ifmap_reads, filter_reads=filter_reads,
+        ofmap_writes=ofmap_writes, ofmap_reads=ofmap_reads,
+        dram_bytes=dram_bytes, l2_reads=l2_reads, row_bytes=row_bytes)

@@ -1,0 +1,15 @@
+"""Distributed substrates: mesh context + logical-axis sharding rules,
+straggler detection, and elastic remesh planning.
+
+`sharding.MeshCtx` is the one object the model stack consumes: it names the
+mesh axes once (data/model, optionally pod) and turns logical parameter axes
+("fsdp", "tp", "batch", "kv_len") into concrete PartitionSpecs.
+"""
+from .elastic import ElasticPlan, plan_elastic_remesh
+from .sharding import MeshCtx, logical_to_spec, make_mesh_ctx
+from .straggler import StragglerDetector
+
+__all__ = [
+    "ElasticPlan", "MeshCtx", "StragglerDetector", "logical_to_spec",
+    "make_mesh_ctx", "plan_elastic_remesh",
+]

@@ -1,0 +1,81 @@
+"""Mesh context: one object naming the mesh axes and the logical->physical
+axis rules used by every model, launcher and test.
+
+Axis conventions (launch/mesh.py):
+  single pod : (data, model)
+  multi-pod  : (pod, data, model)   -- "pod" is an outer data-parallel axis
+
+Logical parameter axes (models/params.ParamDef.logical):
+  "fsdp"   -> the FSDP weight-shard axis ("data")
+  "tp"     -> the tensor-parallel axis ("model")
+  "batch"  -> all data-parallel axes (("pod", "data") when multi-pod)
+  "kv_len" -> cache length sharded over the model axis (decode caches)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+AxisEntry = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    """Everything the model stack needs to know about the device mesh."""
+    mesh: jax.sharding.Mesh
+    dp_axes: Tuple[str, ...] = ("data",)
+    fsdp_axis: Optional[str] = "data"
+    tp_axis: Optional[str] = "model"
+
+    @property
+    def multi_pod(self) -> bool:
+        return "pod" in self.mesh.axis_names
+
+    @property
+    def dp(self) -> int:
+        n = 1
+        for a in self.dp_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def tp(self) -> int:
+        return self.mesh.shape[self.tp_axis] if self.tp_axis else 1
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+
+def make_mesh_ctx(mesh: jax.sharding.Mesh) -> MeshCtx:
+    """Build a MeshCtx from a mesh created by launch/mesh.py (or any mesh
+    using the data/model[/pod] naming convention)."""
+    names = tuple(mesh.axis_names)
+    dp_axes = tuple(a for a in ("pod", "data") if a in names)
+    return MeshCtx(
+        mesh=mesh,
+        dp_axes=dp_axes or (names[0],),
+        fsdp_axis="data" if "data" in names else None,
+        tp_axis="model" if "model" in names else None,
+    )
+
+
+def logical_to_spec(ctx: MeshCtx, *logical: Optional[str]) -> Tuple[AxisEntry, ...]:
+    """Map logical axis names to physical mesh axes (one entry per dim).
+
+    Unknown names map to None (replicated) so new logical axes degrade
+    gracefully instead of crashing the launchers.
+    """
+    rules = {
+        "fsdp": ctx.fsdp_axis,
+        "tp": ctx.tp_axis,
+        "batch": ctx.dp_axes if len(ctx.dp_axes) > 1 else
+                 (ctx.dp_axes[0] if ctx.dp_axes else None),
+        "kv_len": ctx.tp_axis,
+    }
+    return tuple(rules.get(a) if a is not None else None for a in logical)

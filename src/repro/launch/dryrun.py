@@ -47,7 +47,7 @@ def model_flops(cfg, *, seq: int, batch: int, mode: str) -> float:
 
 def run_cell(arch: str, shape: str, mesh_kind: str,
              sp_mode: str = "megatron", serve_params: bool = False,
-             accum: int = 1) -> Dict:
+             accum: int = 1, sim_accel: str = "") -> Dict:
     import dataclasses
     import jax
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -110,6 +110,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str,
 
     ma = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):     # old jax: list of per-exec dicts
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     from .hlocost import HloCost
     hc = HloCost(hlo).totals()
@@ -154,6 +156,19 @@ def run_cell(arch: str, shape: str, mesh_kind: str,
         mfu_vs_roofline=terms["compute_s"] / max(bound, 1e-12),
         ok=True,
     )
+    if sim_accel:
+        # attach the simulation plane's view of the same cell (unified
+        # Simulator API) next to the XLA roofline terms
+        from ..api import Simulator
+        sim = Simulator(sim_accel)
+        rep = sim.run_lm(cfg, seq=seq, batch=batch, mode=mode)
+        result["sim_accel"] = dict(
+            preset=sim_accel,
+            total_cycles=rep.total_cycles,
+            stall_cycles=rep.stall_cycles,
+            energy_pj=rep.energy_pj,
+            utilization=rep.utilization,
+            modeled_s=sim.seconds(rep.total_cycles))
     return result
 
 
@@ -187,6 +202,9 @@ def main():
                     help="decode/prefill: TP-resident weights (no FSDP gather)")
     ap.add_argument("--accum", type=int, default=1,
                     help="train: gradient-accumulation microbatches")
+    ap.add_argument("--sim-accel", default="",
+                    help="accelerator preset (repro.api): attach the "
+                         "simulation plane's cost model to each cell")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
 
@@ -204,6 +222,8 @@ def main():
                 time.sleep(1)
             cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a,
                    "--shape", s, "--mesh", m, "--out", args.out]
+            if args.sim_accel:
+                cmd += ["--sim-accel", args.sim_accel]
             print("launch:", a, s, m, flush=True)
             procs.append(subprocess.Popen(cmd))
         for p in procs:
@@ -211,7 +231,8 @@ def main():
         return
 
     res = run_cell(args.arch, args.shape, args.mesh, sp_mode=args.sp_mode,
-                   serve_params=args.serve_params, accum=args.accum)
+                   serve_params=args.serve_params, accum=args.accum,
+                   sim_accel=args.sim_accel)
     tag = f"__{args.tag}" if args.tag else ""
     path = os.path.join(args.out,
                         f"{args.arch}__{args.shape}__{args.mesh}{tag}.json")

@@ -29,10 +29,18 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--sim-accel", default="",
+                    help="accelerator preset (repro.api): report the modeled"
+                         " hardware cost of the served traffic")
     args = ap.parse_args()
 
     from ..configs import get_config
     from ..models.zoo import ModelBundle
+
+    sim = None
+    if args.sim_accel:
+        from ..api import Simulator
+        sim = Simulator(args.sim_accel)      # fail fast on unknown presets
 
     cfg = get_config(args.arch, smoke=args.smoke)
     bundle = ModelBundle(cfg)
@@ -92,6 +100,21 @@ def main():
     dt = time.time() - t0
     print(f"served {done} requests, {tokens_out} tokens in {dt:.2f}s "
           f"({tokens_out / dt:.1f} tok/s)")
+
+    if sim is not None:
+        # co-simulation: what the same traffic costs on modeled silicon
+        # (one Simulator session; full-size arch, not the smoke config)
+        full_cfg = get_config(args.arch)
+        pre = sim.run_lm(full_cfg, seq=args.prompt_len, batch=B,
+                         mode="prefill")
+        dec = sim.run_lm(full_cfg, seq=args.prompt_len, batch=B,
+                         mode="decode", cache_len=max_len)
+        per_wave, e_wave = sim.wave_cost(pre, dec, args.gen_len)
+        print(f"[sim:{args.sim_accel}] modeled wave: "
+              f"{sim.seconds(per_wave) * 1e3:.2f} ms, "
+              f"{e_wave * 1e-9:.1f} mJ "
+              f"({e_wave * 1e-12 / max(B * args.gen_len, 1) * 1e3:.3f} "
+              f"mJ/token)")
 
 
 if __name__ == "__main__":

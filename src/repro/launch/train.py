@@ -37,6 +37,9 @@ def main():
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--compress-pod-grads", action="store_true")
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--sim-accel", default="",
+                    help="accelerator preset (repro.api): report the modeled"
+                         " per-step hardware cost before training")
     args = ap.parse_args()
 
     from ..checkpoint import CheckpointManager, PreemptionHandler
@@ -52,6 +55,18 @@ def main():
     bundle = ModelBundle(cfg)
     mesh = make_host_mesh(tp=args.tp)
     ctx = make_mesh_ctx(mesh) if mesh.size > 1 else None
+
+    if args.sim_accel:
+        # co-simulation (unified Simulator API): modeled cost of one train
+        # step of the FULL-SIZE arch on the chosen accelerator preset
+        from ..api import Simulator
+        sim = Simulator(args.sim_accel)
+        rep = sim.run_lm(get_config(args.arch), seq=args.seq,
+                         batch=args.batch, mode="train")
+        print(f"[sim:{args.sim_accel}] modeled train step: "
+              f"{sim.seconds(rep.total_cycles) * 1e3:.2f} ms"
+              f", {rep.energy_pj * 1e-9:.1f} mJ, "
+              f"util={rep.utilization:.2f}", flush=True)
 
     key = jax.random.PRNGKey(0)
     params = bundle.init(key)

@@ -44,6 +44,21 @@ def test_layout_slows_down():
     assert lay.total_cycles >= base.total_cycles
 
 
+def test_count_scales_stalls_linearly():
+    """Regression: `count=k` must scale ALL cycle components exactly k-fold.
+    The old engine divided dram_bytes by count before the stall model even
+    though traffic is already per-instance, double-discounting DRAM stalls
+    for repeated ops (attention heads, layer repeats)."""
+    cfg = tpu_like_config(array=32, sram_mb=0.25)
+    r1 = simulate_op(cfg, Op("g", 256, 4096, 2048, count=1.0))
+    r4 = simulate_op(cfg, Op("g", 256, 4096, 2048, count=4.0))
+    assert r1.stall_cycles > 0                    # memory-bound on purpose
+    assert r4.stall_cycles == pytest.approx(4 * r1.stall_cycles)
+    assert r4.compute_cycles == pytest.approx(4 * r1.compute_cycles)
+    assert r4.total_cycles == pytest.approx(4 * r1.total_cycles)
+    assert r4.dram_bytes == pytest.approx(4 * r1.dram_bytes)
+
+
 def test_dram_cycle_fidelity():
     cfg = tpu_like_config(array=32)
     r = simulate_op(cfg, resnet18()[0], dram_fidelity="cycle")
