@@ -5,18 +5,28 @@ event loop). Our adaptation's claim is different: features cost little
 because everything is vectorized/jit-compiled — and the batched
 `Simulator.sweep` path simulates thousands of designs per second (the
 reason to put a simulator on a TPU pod in the first place). Both are
-measured here.
+measured here, plus the trace-fidelity path (dataflow-generated demand
+traces through the cycle-accurate DRAM scan, batched via vmap).
+
+Also emits `BENCH_sim_throughput.json` (sweep points/sec, trace-fidelity
+cycles) so CI can track the perf trajectory across PRs.
 """
 from __future__ import annotations
+
+import json
+import os
 
 from repro.api import Simulator, preset_grid
 from repro.core.accelerator import LayoutConfig, SparsityConfig
 from repro.core.topology import Op, resnet18
 from .common import timed
 
+ARTIFACT = os.environ.get("BENCH_ARTIFACT", "BENCH_sim_throughput.json")
+
 
 def run(smoke: bool = False):
     rows = []
+    artifact = {"smoke": bool(smoke)}
     wl = resnet18()
     base = Simulator("paper-32")
 
@@ -49,6 +59,34 @@ def run(smoke: bool = False):
 
     sweep_res, us_dse = timed(lambda: base.sweep(big, op), repeat=3)
     assert sweep_res.batched
+    dps = len(big) / (us_dse / 1e6)
     rows.append((f"dse_sweep_{len(big)}_designs", us_dse,
-                 f"designs_per_sec={len(big) / (us_dse / 1e6):.0f}"))
+                 f"designs_per_sec={dps:.0f}"))
+    artifact["sweep_designs"] = len(big)
+    artifact["sweep_designs_per_sec"] = dps
+    artifact["base_run_us"] = us_base
+
+    # trace fidelity: one op through the generated-trace DRAM path, and a
+    # batched (vmapped — no per-op fallback) trace-fidelity sweep
+    tsim = Simulator("paper-32", fidelity="trace")
+    trace_rep, us_trace = timed(lambda: tsim.run_op(wl[1]), repeat=3)
+    rows.append(("trace_fidelity_op", us_trace,
+                 f"total_cycles={trace_rep.total_cycles:.0f};"
+                 f"stall={trace_rep.stall_cycles:.0f}"))
+    artifact["trace_op_total_cycles"] = trace_rep.total_cycles
+    artifact["trace_op_stall_cycles"] = trace_rep.stall_cycles
+    artifact["trace_op_us"] = us_trace
+
+    tgrid = big                # same design points as the fast-path sweep,
+    #                            so the two designs_per_sec are comparable
+    tres, us_tsweep = timed(lambda: tsim.sweep(tgrid, op), repeat=3)
+    assert tres.batched, "trace-fidelity sweep must not fall back"
+    tdps = len(tgrid) / (us_tsweep / 1e6)
+    rows.append((f"trace_sweep_{len(tgrid)}_designs", us_tsweep,
+                 f"designs_per_sec={tdps:.0f}"))
+    artifact["trace_sweep_designs"] = len(tgrid)
+    artifact["trace_sweep_designs_per_sec"] = tdps
+
+    with open(ARTIFACT, "w") as f:
+        json.dump(artifact, f, indent=1)
     return rows

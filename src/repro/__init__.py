@@ -6,3 +6,17 @@ Public simulation API lives in `repro.api` (Simulator facade); the lower
 stage/engine layer in `repro.core`. See DESIGN.md for the map.
 """
 from . import compat  # noqa: F401  (installs jax API shims on old jax)
+
+# Trace toolchain at the top level: the legacy synthetic generators from
+# core.dram plus the dataflow-aware repro.trace subsystem.
+from .core.dram import (linear_trace, strided_trace,  # noqa: E402,F401
+                        tile_prefetch_trace)
+from .trace import (TraceSpec, gemm_request_stream,  # noqa: E402,F401
+                    gemm_trace_stats, multicore_contention, trace_op,
+                    trace_op_stats)
+
+__all__ = [
+    "TraceSpec", "gemm_request_stream", "gemm_trace_stats", "linear_trace",
+    "multicore_contention", "strided_trace", "tile_prefetch_trace",
+    "trace_op", "trace_op_stats",
+]

@@ -78,6 +78,23 @@ def _multicore(**kw) -> AcceleratorConfig:
     return tpu_like_config(**kw)
 
 
+@register_preset("mcm-4x32")
+def _mcm(channels: int = 4, dataflow: str = "ws") -> AcceleratorConfig:
+    """MCM-style package for the shared-DRAM contention study: four 32x32
+    cores at increasing NoP hop distance from main memory, sharing
+    `channels` DRAM channels (channels == cores supports the
+    private-channel routing mode of `simulate_multicore_contention`)."""
+    from ..core.accelerator import DramConfig
+    sram = 128 * 1024
+    return AcceleratorConfig(
+        cores=tuple(CoreConfig(rows=32, cols=32, nop_hops=h)
+                    for h in (0, 1, 1, 2)),
+        mesh_rows=2, mesh_cols=2, dataflow=dataflow,
+        memory=MemoryConfig(ifmap_sram_bytes=sram, filter_sram_bytes=sram,
+                            ofmap_sram_bytes=sram),
+        dram=DramConfig(channels=channels))
+
+
 @register_preset("edge-8")
 def _edge(dataflow: str = "ws") -> AcceleratorConfig:
     """A small edge-class design: 8x8 array, 192 KiB of operand SRAM."""

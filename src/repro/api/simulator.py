@@ -21,8 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import dataflow as dfm
 from ..core import stages as st
-from ..core.accelerator import AcceleratorConfig, MemoryConfig
+from ..core.accelerator import AcceleratorConfig, DramConfig, MemoryConfig
 from ..core.energy import DEFAULT_ERT, ERT, energy_pj
 from ..core.engine import (NetworkReport, OpResult, simulate_network,
                            simulate_op)
@@ -92,28 +93,50 @@ def _traceable(cfg: AcceleratorConfig) -> bool:
 class Simulator:
     """Unified simulation session: config + fidelity + ERT, one pipeline.
 
-    fidelity: 'fast' (first-order DRAM stalls, traceable/batchable) or
-    'cycle' (lax.scan DRAM timing model per op).
+    fidelity: 'fast' (first-order DRAM stalls, traceable/batchable),
+    'cycle' (lax.scan DRAM timing over a synthetic prefetch stream) or
+    'trace' (dataflow-aware generated demand traces through the same
+    timing model — batchable like 'fast': the `repro.trace` generators
+    are fixed-shape and vmappable).
+
+    trace_spec: optional `repro.trace.TraceSpec` shared by the per-op
+    pipeline and the batched sweep (so both paths agree bit-for-bit on
+    the generated streams).
+
+    core_index: the core a heterogeneous mesh is analyzed through — every
+    core-dependent stage (mapping, sparsity, sram, dram, layout) models
+    this member.
     """
 
     def __init__(self, config: ConfigLike = "paper-32", *,
-                 fidelity: str = "fast", ert: ERT = DEFAULT_ERT):
+                 fidelity: str = "fast", ert: ERT = DEFAULT_ERT,
+                 trace_spec=None, core_index: int = 0):
         if fidelity not in st.FIDELITIES:
             raise ValueError(f"fidelity must be one of {st.FIDELITIES}")
         self.config = as_config(config)
         self.fidelity = fidelity
         self.ert = ert
-        self.pipeline = st.build_pipeline(fidelity)
+        self.core_index = core_index
+        if trace_spec is None and fidelity == "trace":
+            from ..trace.generator import DEFAULT_SPEC
+            trace_spec = DEFAULT_SPEC
+        self.trace_spec = trace_spec
+        self.pipeline = st.build_pipeline(fidelity, core_index=core_index,
+                                          trace_spec=trace_spec)
 
     @classmethod
     def from_preset(cls, name: str, *, fidelity: str = "fast",
-                    ert: ERT = DEFAULT_ERT, **kw) -> "Simulator":
-        return cls(get_preset(name, **kw), fidelity=fidelity, ert=ert)
+                    ert: ERT = DEFAULT_ERT, trace_spec=None,
+                    core_index: int = 0, **kw) -> "Simulator":
+        return cls(get_preset(name, **kw), fidelity=fidelity, ert=ert,
+                   trace_spec=trace_spec, core_index=core_index)
 
     def with_(self, **config_fields) -> "Simulator":
         """New session with dataclass fields replaced on the config."""
         return Simulator(self.config.with_(**config_fields),
-                         fidelity=self.fidelity, ert=self.ert)
+                         fidelity=self.fidelity, ert=self.ert,
+                         trace_spec=self.trace_spec,
+                         core_index=self.core_index)
 
     def stage_names(self) -> List[str]:
         return [s.name for s in self.pipeline]
@@ -154,10 +177,13 @@ class Simulator:
     def sweep(self, configs: Sequence[ConfigLike], workload: WorkloadLike,
               *, mesh: Optional[jax.sharding.Mesh] = None) -> SweepResult:
         """Simulate `workload` on every config; one jitted/vmapped call per
-        (dataflow, word_bytes) group of traceable configs.
+        (dataflow, word_bytes[, dram]) group of traceable configs.
 
         mesh: shard the design axis over a device mesh (launch/mesh.py);
         the grid is padded to a multiple of mesh.size.
+        Both 'fast' and 'trace' fidelities batch (the trace generators
+        are fixed-shape/vmappable; 'trace' groups additionally share a
+        DramConfig since the timing scan is specialized on it).
         Non-traceable configs (multicore/sparsity/layout) and 'cycle'
         fidelity run through the per-op engine instead — same result
         contract, no batching.
@@ -172,15 +198,20 @@ class Simulator:
         batched_idx: Dict[tuple, List[int]] = {}
         fallback: List[int] = []
         for i, c in enumerate(cfgs):
-            if self.fidelity == "fast" and _traceable(c):
-                batched_idx.setdefault(
-                    (c.dataflow, c.memory.word_bytes), []).append(i)
+            if self.fidelity in ("fast", "trace") and _traceable(c):
+                key = (c.dataflow, c.memory.word_bytes)
+                if self.fidelity == "trace":
+                    key += (c.dram,)
+                batched_idx.setdefault(key, []).append(i)
             else:
                 fallback.append(i)
 
-        for (df, wb), idxs in batched_idx.items():
+        for key, idxs in batched_idx.items():
+            df, wb = key[0], key[1]
+            dram = key[2] if self.fidelity == "trace" else None
             vals = _sweep_batched([cfgs[i] for i in idxs], ops, df, wb,
-                                  self.ert, mesh)
+                                  self.ert, mesh, dram=dram,
+                                  spec=self.trace_spec)
             for k, arr in vals.items():
                 out[k][np.asarray(idxs)] = arr
 
@@ -199,10 +230,20 @@ class Simulator:
 
 
 @functools.lru_cache(maxsize=64)
-def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT):
+def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT,
+                       dram: Optional[DramConfig] = None, spec=None):
     """Jitted (vmap over designs) sweep kernel, cached per pipeline flavor
     so repeated sweeps (benchmark loops, serving traffic) reuse the
-    compiled executable."""
+    compiled executable.
+
+    With `dram` set (trace fidelity), the first-order stall is replaced by
+    the cycle-accurate stall of each op's generated demand trace — the
+    `repro.trace` generators are fixed-shape, so the whole thing still
+    vmaps over the design axis (and over ops) inside one jit.
+    """
+    if dram is not None:
+        from ..trace.generator import DEFAULT_SPEC, gemm_trace_stats
+        spec = spec or DEFAULT_SPEC
 
     def one_design(d, M, N, K, cnt, velems, vcnt):
         mem = MemoryConfig(ifmap_sram_bytes=d["if_b"],
@@ -211,8 +252,20 @@ def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT):
                            l2_sram_bytes=d["l2_b"], word_bytes=word_bytes)
         R, C = d["R"], d["C"]
         s = st.traced_gemm_stats(dataflow, M, N, K, R, C, mem, d["bw"])
+        if dram is not None:
+            def op_stall(m, n, k):
+                dr = dfm.dram_traffic(dataflow, m, n, k, R, C, mem)
+                comp = dfm.compute_cycles(dataflow, m, n, k, R, C)
+                return gemm_trace_stats(
+                    dataflow, m, n, k, R, C, comp, dr["dram_ifmap"],
+                    dr["dram_filter"], dr["dram_ofmap_writes"],
+                    dr["dram_ofmap_reads"], dram, word_bytes,
+                    spec)["stall_cycles"]
+            stall_per_op = jax.vmap(op_stall)(M, N, K)
+        else:
+            stall_per_op = s["stall_cycles"]
         comp_t = s["compute_cycles"] * cnt
-        stall_t = s["stall_cycles"] * cnt
+        stall_t = stall_per_op * cnt
         dram_t = s["dram_bytes"] * cnt
         macs = M * N * K * cnt
         counts = st.traced_energy_counts(
@@ -254,7 +307,9 @@ def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT):
 
 def _sweep_batched(cfgs: Sequence[AcceleratorConfig], ops: Sequence[Op],
                    dataflow: str, word_bytes: int, ert: ERT,
-                   mesh: Optional[jax.sharding.Mesh]) -> Dict[str, np.ndarray]:
+                   mesh: Optional[jax.sharding.Mesh],
+                   dram: Optional[DramConfig] = None,
+                   spec=None) -> Dict[str, np.ndarray]:
     """Stack config scalars, vmap the traced stages over the design axis."""
     n = len(cfgs)
     f32 = np.float32
@@ -291,6 +346,6 @@ def _sweep_batched(cfgs: Sequence[AcceleratorConfig], ops: Sequence[Op],
             mesh, jax.sharding.PartitionSpec(tuple(mesh.axis_names)))
         design = {k: jax.device_put(v, sharding) for k, v in design.items()}
 
-    fn = _batched_design_fn(dataflow, word_bytes, ert)
+    fn = _batched_design_fn(dataflow, word_bytes, ert, dram, spec)
     res = fn(design, M, N, K, cnt, velems, vcnt)
     return {k: np.asarray(v, np.float64)[:n] for k, v in res.items()}

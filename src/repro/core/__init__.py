@@ -5,16 +5,19 @@ from .accelerator import (AcceleratorConfig, CoreConfig, DramConfig,
                           LayoutConfig, MemoryConfig, SparsityConfig,
                           tpu_like_config)
 from .dataflow import (compute_cycles, dram_traffic, gemm_summary, map_gemm,
-                       pe_utilization, sram_traffic)
-from .dram import DramResult, linear_trace, simulate_dram, strided_trace
+                       pe_utilization, sram_traffic, unmap_gemm)
+from .dram import (DramResult, linear_trace, simulate_dram, strided_trace,
+                   tile_prefetch_trace)
 from .energy import (DEFAULT_ERT, ERT, action_counts, action_counts_raw,
                      edp, energy_pj, power_w)
 from .engine import (NetworkReport, OpResult, gemm_summary_traced,
                      simulate_network, simulate_op)
 from .stages import (FIDELITIES, OpContext, Stage, build_pipeline,
                      traced_gemm_stats)
-from .layout import evaluate_layout, flat_ids, slowdown_per_cycle
-from .multicore import best_multicore, simulate_multicore
+from .layout import (evaluate_layout, flat_ids, operand_linear_index,
+                     slowdown_per_cycle)
+from .multicore import (best_multicore, simulate_multicore,
+                        simulate_multicore_contention)
 from .partition import (best_plan, enumerate_plans, partition_cycles,
                         partition_footprint)
 from .sparsity import (effective_K, pack_ellpack_block, sparse_compute_cycles,

@@ -35,6 +35,20 @@ def map_gemm(dataflow: str, M, N, K) -> Tuple:
     raise ValueError(f"unknown dataflow {dataflow!r}")
 
 
+def unmap_gemm(dataflow: str, Sr, Sc, T) -> Tuple:
+    """Inverse of `map_gemm`: mapping dims (Sr, Sc, T) -> (M, N, K).
+
+    Used by the trace/contention path to turn a per-core share of the
+    split dimensions back into a GEMM sub-problem."""
+    if dataflow == "is":          # (Sr, Sc, T) = (K, N, M)
+        return T, Sc, Sr
+    if dataflow == "ws":          # (K, M, N)
+        return Sc, T, Sr
+    if dataflow == "os":          # (M, N, K)
+        return Sr, Sc, T
+    raise ValueError(f"unknown dataflow {dataflow!r}")
+
+
 def fold_counts(Sr, Sc, R: int, C: int):
     return cdiv(Sr, R), cdiv(Sc, C)
 

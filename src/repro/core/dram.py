@@ -50,79 +50,103 @@ class DramResult:
     throughput: jnp.ndarray       # bytes / cycle over the busy window
 
 
-@partial(jax.jit, static_argnames=("cfg", "gran_bytes"))
-def simulate_dram(t_issue: jnp.ndarray, addr: jnp.ndarray,
-                  is_write: jnp.ndarray, cfg: DramConfig,
-                  gran_bytes: int = 64) -> DramResult:
-    """Run the timing model over a request stream (sorted by t_issue).
-
-    gran_bytes: bytes moved per request (trace fidelity uses burst_bytes;
-    fast fidelity coarsens to larger transfers with bandwidth-equivalent
-    bus occupancy).
-    """
-    n = t_issue.shape[0]
+def decode_requests(addr: jnp.ndarray, cfg: DramConfig):
+    """Byte address -> (flat_bank, channel, row) under the interleaved
+    channel/bank/row decode. Shared by every DRAM scan in the repo (this
+    module's `simulate_dram` and `repro.trace.contention`'s shared-channel
+    scan) — change the decode here and both models follow."""
     ch_n, bk_n = cfg.channels, cfg.banks_per_channel
     bursts_per_row = max(1, cfg.row_bytes // cfg.burst_bytes)
-    busy = jnp.maximum(1.0, gran_bytes / cfg.bandwidth_bytes_per_cycle)
-
     b = addr // cfg.burst_bytes
     ch = (b % ch_n).astype(jnp.int32)
     r = b // ch_n
     bank = ((r // bursts_per_row) % bk_n).astype(jnp.int32)
     row = (r // (bursts_per_row * bk_n)).astype(jnp.int32)
-    flat_bank = ch * bk_n + bank
+    return ch * bk_n + bank, ch, row
+
+
+def row_buffer_latency(cfg: DramConfig, open_row_val, rw):
+    """(latency, hit, empty) of one access against a bank's open row —
+    the tCAS / tRCD+tCAS / tRP+tRCD+tCAS selection shared by both scans."""
+    hit = open_row_val == rw
+    empty = open_row_val < 0
+    lat = jnp.where(hit, cfg.tCAS,
+                    jnp.where(empty, cfg.tRCD + cfg.tCAS,
+                              cfg.tRP + cfg.tRCD + cfg.tCAS))
+    return lat, hit, empty
+
+
+@partial(jax.jit, static_argnames=("cfg", "gran_bytes"))
+def simulate_dram(t_issue: jnp.ndarray, addr: jnp.ndarray,
+                  is_write: jnp.ndarray, cfg: DramConfig,
+                  gran_bytes: int = 64,
+                  valid: jnp.ndarray = None) -> DramResult:
+    """Run the timing model over a request stream (sorted by t_issue).
+
+    gran_bytes: bytes moved per request (trace fidelity uses burst_bytes;
+    fast fidelity coarsens to larger transfers with bandwidth-equivalent
+    bus occupancy).
+
+    valid: optional bool mask. Invalid entries are no-ops: they leave the
+    bank/bus/queue state untouched, contribute zero latency and zero
+    bytes. This is what lets `repro.trace` generators emit fixed-shape
+    (vmappable) request buffers whose live length is a traced value.
+    """
+    n = t_issue.shape[0]
+    if valid is None:
+        valid = jnp.ones((n,), dtype=bool)
+    ch_n, bk_n = cfg.channels, cfg.banks_per_channel
+    busy = jnp.maximum(1.0, gran_bytes / cfg.bandwidth_bytes_per_cycle)
+    flat_bank, ch, row = decode_requests(addr, cfg)
 
     Qr, Qw = cfg.read_queue, cfg.write_queue
 
     def step(carry, x):
         (bank_free, open_row, bus_free, ring_r, ring_w, ir, iw, shift,
          hits, misses, conflicts) = carry
-        t, fb, c, rw, w = x
+        t, fb, c, rw, w, v = x
         t_eff = t + shift
         # finite in-flight window per direction
         head_r = ring_r[ir % Qr]
         head_w = ring_w[iw % Qw]
         issue_ok = jnp.maximum(t_eff, jnp.where(w, head_w, head_r))
         ready = jnp.maximum(issue_ok, bank_free[fb])
-        cur = open_row[fb]
-        hit = cur == rw
-        empty = cur < 0
-        lat = jnp.where(hit, cfg.tCAS,
-                        jnp.where(empty, cfg.tRCD + cfg.tCAS,
-                                  cfg.tRP + cfg.tRCD + cfg.tCAS))
+        lat, hit, empty = row_buffer_latency(cfg, open_row[fb], rw)
         # RAS/CAS latency pipelines across banks; only the data burst
         # serializes on the channel bus.
         done = jnp.maximum(ready + lat, bus_free[c]) + busy
-        bank_free = bank_free.at[fb].set(done)
-        bus_free = bus_free.at[c].set(done)
-        open_row = open_row.at[fb].set(rw)
-        ring_r = jnp.where(w, ring_r, ring_r.at[ir % Qr].set(done))
-        ring_w = jnp.where(w, ring_w.at[iw % Qw].set(done), ring_w)
-        ir = ir + jnp.where(w, 0, 1)
-        iw = iw + jnp.where(w, 1, 0)
+        bank_free = jnp.where(v, bank_free.at[fb].set(done), bank_free)
+        bus_free = jnp.where(v, bus_free.at[c].set(done), bus_free)
+        open_row = jnp.where(v, open_row.at[fb].set(rw), open_row)
+        ring_r = jnp.where(v & ~w, ring_r.at[ir % Qr].set(done), ring_r)
+        ring_w = jnp.where(v & w, ring_w.at[iw % Qw].set(done), ring_w)
+        ir = ir + jnp.where(v & ~w, 1, 0)
+        iw = iw + jnp.where(v & w, 1, 0)
         # queue-full backpressure shifts everything downstream
-        shift = shift + jnp.maximum(0.0, issue_ok - t_eff)
-        hits += hit
-        misses += empty
-        conflicts += (~hit) & (~empty)
+        shift = shift + jnp.where(v, jnp.maximum(0.0, issue_ok - t_eff), 0.0)
+        hits += hit & v
+        misses += empty & v
+        conflicts += (~hit) & (~empty) & v
         return ((bank_free, open_row, bus_free, ring_r, ring_w, ir, iw, shift,
                  hits, misses, conflicts),
-                (done, done - t))
+                (jnp.where(v, done, t), jnp.where(v, done - t, 0.0)))
 
     carry0 = (jnp.zeros(ch_n * bk_n), -jnp.ones(ch_n * bk_n, jnp.int32),
               jnp.zeros(ch_n), jnp.zeros(Qr), jnp.zeros(Qw),
               jnp.int32(0), jnp.int32(0), jnp.float32(0.0),
               jnp.int32(0), jnp.int32(0), jnp.int32(0))
-    xs = (t_issue.astype(jnp.float32), flat_bank, ch, row, is_write)
+    xs = (t_issue.astype(jnp.float32), flat_bank, ch, row, is_write, valid)
     carry, (done, rt) = jax.lax.scan(step, carry0, xs)
     (_, _, _, _, _, _, _, shift, hits, misses, conflicts) = carry
 
-    last = jnp.max(done)
-    first = jnp.min(t_issue).astype(jnp.float32)
+    ti = t_issue.astype(jnp.float32)
+    last = jnp.max(jnp.where(valid, done, 0.0))
+    first = jnp.min(jnp.where(valid, ti, jnp.inf))
     span = jnp.maximum(1.0, last - first)
     nominal = cfg.tRCD + cfg.tCAS + busy
-    tail = jnp.maximum(0.0, last - (jnp.max(t_issue) + shift + nominal))
-    bytes_moved = jnp.float32(n * gran_bytes)
+    last_issue = jnp.max(jnp.where(valid, ti, 0.0))
+    tail = jnp.maximum(0.0, last - (last_issue + shift + nominal))
+    bytes_moved = jnp.sum(valid).astype(jnp.float32) * gran_bytes
     return DramResult(
         latency=rt, complete=done,
         stall_cycles=shift + tail,

@@ -79,6 +79,40 @@ def streaming_access_pattern(R: int, n_cycles: int, lead_stride: int,
     return t * lead_stride + r * elem_stride
 
 
+DRAM_LAYOUTS = ("row", "col", "tiled", "strided")
+
+
+def operand_linear_index(row, col, rows, cols, order: str = "row",
+                         tile_r: int = 32, tile_c: int = 32):
+    """DRAM-side storage layout: operand element (row, col) of a
+    rows x cols matrix -> linear element offset within its region.
+
+    - 'row':   row-major (C order) — a streaming walk down a column is
+               strided by `cols` elements (row-buffer hostile for large
+               matrices).
+    - 'col':   column-major (Fortran order) — the same walk is contiguous.
+    - 'tiled': tile_r x tile_c blocks laid out row-major, row-major inside
+               each block — the blocked layouts SCALE-Sim's trace studies
+               compare against.
+
+    All arguments may be traced jnp arrays except `order`/`tile_r`/`tile_c`
+    (static), so `repro.trace` generators stay vmappable. ('strided' is
+    synthesized directly from the stream position in the generator, not
+    from coordinates, so it is not handled here.)
+    """
+    if order == "row":
+        return row * cols + col
+    if order == "col":
+        return col * rows + row
+    if order == "tiled":
+        tiles_per_row = -(-cols // tile_c)
+        tile_id = (row // tile_r) * tiles_per_row + (col // tile_c)
+        return (tile_id * (tile_r * tile_c)
+                + (row % tile_r) * tile_c + (col % tile_c))
+    raise ValueError(f"unknown DRAM layout order {order!r}; "
+                     f"known: {DRAM_LAYOUTS}")
+
+
 @dataclasses.dataclass(frozen=True)
 class LayoutResult:
     mean_slowdown: float

@@ -133,6 +133,23 @@ def simulate_multicore(cfg: AcceleratorConfig, M: int, N: int, K: int,
         reduce_elems=float(fp_l1["reduce_elems"]))
 
 
+def simulate_multicore_contention(cfg: AcceleratorConfig, M: int, N: int,
+                                  K: int, scheme: str = "spatial",
+                                  private_channels: bool = False,
+                                  spec=None):
+    """Shared-DRAM contention for one partitioned GEMM: per-core demand
+    traces (from `repro.trace`) merged through the shared channels, vs
+    each core alone on the memory system. Returns a
+    `repro.trace.ContentionResult` with per-core stall inflation.
+
+    private_channels: pin core c's bursts to channel c — the contention
+    path then decomposes exactly into the isolated model (tested).
+    """
+    from ..trace.contention import multicore_contention
+    return multicore_contention(cfg, M, N, K, scheme=scheme,
+                                private_channels=private_channels, spec=spec)
+
+
 def best_multicore(cfg: AcceleratorConfig, M: int, N: int, K: int,
                    objective: str = "cycles") -> MultiCoreResult:
     results = [simulate_multicore(cfg, M, N, K, s)

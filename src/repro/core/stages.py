@@ -34,7 +34,7 @@ from .multicore import best_multicore
 from .sparsity import sparse_compute_cycles, storage_report
 from .topology import Op
 
-FIDELITIES = ("fast", "cycle")
+FIDELITIES = ("fast", "cycle", "trace")
 
 _DRAM_REQ_CAP = 16384     # cycle-fidelity request cap per op (scaled beyond)
 
@@ -84,13 +84,26 @@ class Stage:
         raise NotImplementedError
 
 
-class MappingStage(Stage):
+class CoreStage(Stage):
+    """A stage whose model depends on one core's geometry. `core_index`
+    selects the core a heterogeneous mesh is analyzed through; every
+    core-dependent stage in one pipeline shares the same index so the
+    report describes an actual core, not a mix."""
+
+    def __init__(self, core_index: int = 0):
+        self.core_index = core_index
+
+    def core(self, ctx: OpContext):
+        return ctx.cfg.cores[self.core_index]
+
+
+class MappingStage(CoreStage):
     """Single-core dataflow mapping: analytical compute cycles + PE
     utilization (SCALE-Sim v2 runtime equations)."""
     name = "mapping"
 
     def apply(self, ctx: OpContext) -> None:
-        op, core, df = ctx.op, ctx.cfg.cores[0], ctx.cfg.dataflow
+        op, core, df = ctx.op, self.core(ctx), ctx.cfg.dataflow
         ctx.comp = float(dfm.compute_cycles(df, op.M, op.N, op.K,
                                             core.rows, core.cols))
         ctx.scheme = "single"
@@ -115,7 +128,7 @@ class PartitionStage(Stage):
             1.0, sum(c.num_pes for c in ctx.cfg.cores) * mc.cycles))
 
 
-class SparsityStage(Stage):
+class SparsityStage(CoreStage):
     """N:M weight sparsity: compressed-stream compute cycles + storage
     report; records the filter-traffic shrink applied downstream."""
     name = "sparsity"
@@ -123,7 +136,7 @@ class SparsityStage(Stage):
     def apply(self, ctx: OpContext) -> None:
         if not ctx.sp.enabled:
             return
-        op, core, cfg = ctx.op, ctx.cfg.cores[0], ctx.cfg
+        op, core, cfg = ctx.op, self.core(ctx), ctx.cfg
         ctx.comp = float(sparse_compute_cycles(
             cfg.dataflow, op.M, op.N, op.K, core.rows, core.cols, ctx.sp))
         ctx.sparse_info = storage_report(op.M, op.K, ctx.sp,
@@ -135,12 +148,12 @@ class SparsityStage(Stage):
                              / max(ctx.sparse_info["original_bytes"], 1.0))
 
 
-class SramStage(Stage):
+class SramStage(CoreStage):
     """Aggregate SRAM demand counts; sparse filters stream compressed."""
     name = "sram"
 
     def apply(self, ctx: OpContext) -> None:
-        op, core, cfg = ctx.op, ctx.cfg.cores[0], ctx.cfg
+        op, core, cfg = ctx.op, self.core(ctx), ctx.cfg
         sram = dfm.sram_traffic(cfg.dataflow, op.M, op.N, op.K,
                                 core.rows, core.cols)
         if ctx.filter_shrink != 1.0:
@@ -148,13 +161,16 @@ class SramStage(Stage):
         ctx.sram = sram
 
 
-class DramStage(Stage):
-    """Capacity-based DRAM traffic shared by both fidelities; subclasses
-    supply the stall model."""
+class DramStage(CoreStage):
+    """Capacity-based DRAM traffic shared by all fidelities; subclasses
+    supply the stall model. The analyzed core comes from `core_index` —
+    heterogeneous meshes model a specific member instead of silently
+    modeling core 0."""
     name = "dram"
 
     def apply(self, ctx: OpContext) -> None:
-        op, core, cfg = ctx.op, ctx.cfg.cores[0], ctx.cfg
+        op, cfg = ctx.op, ctx.cfg
+        core = self.core(ctx)
         dram = dfm.dram_traffic(cfg.dataflow, op.M, op.N, op.K,
                                 core.rows, core.cols, cfg.memory)
         if ctx.filter_shrink != 1.0:
@@ -209,7 +225,43 @@ class CycleDramStage(DramStage):
             scaled_by=scale)
 
 
-class LayoutStage(Stage):
+class TraceDramStage(DramStage):
+    """Trace fidelity: the demand-request stream is synthesized from the
+    mapping itself (`repro.trace` — tile schedule, double-buffered
+    prefetch deadlines, per-dataflow operand walks, layout-aware
+    addresses) and replayed through the cycle-accurate DRAM scan. Unlike
+    `CycleDramStage`'s synthetic linear prefetch, row-buffer statistics
+    here respond to dataflow, tiling and layout."""
+    name = "dram[trace]"
+
+    def __init__(self, core_index: int = 0, spec=None):
+        super().__init__(core_index)
+        if spec is None:
+            from ..trace.generator import DEFAULT_SPEC
+            spec = DEFAULT_SPEC
+        self.spec = spec
+
+    def stalls(self, ctx: OpContext) -> None:
+        from ..trace.generator import gemm_trace_stats
+        op, cfg = ctx.op, ctx.cfg
+        core = self.core(ctx)
+        dram = ctx.dram
+        res = gemm_trace_stats(
+            cfg.dataflow, op.M, op.N, op.K, core.rows, core.cols, ctx.comp,
+            dram["dram_ifmap"], dram["dram_filter"],
+            dram["dram_ofmap_writes"], dram["dram_ofmap_reads"],
+            cfg.dram, cfg.memory.word_bytes, self.spec)
+        ctx.stall = float(res["stall_cycles"])
+        ctx.dram_stats = dict(
+            row_hits=int(res["row_hits"]), row_misses=int(res["row_misses"]),
+            row_conflicts=int(res["row_conflicts"]),
+            row_hit_rate=float(res["row_hit_rate"]),
+            throughput_Bpc=float(res["throughput_Bpc"]),
+            mean_latency=float(res["mean_latency"]),
+            scaled_by=float(res["scaled_by"]))
+
+
+class LayoutStage(CoreStage):
     """On-chip bank-conflict slowdown on the streaming operand."""
     name = "layout"
 
@@ -217,7 +269,7 @@ class LayoutStage(Stage):
         cfg, op = ctx.cfg, ctx.op
         if not cfg.layout.enabled:
             return
-        core = cfg.cores[0]
+        core = self.core(ctx)
         lr = evaluate_layout(
             cfg.layout, core.rows,
             n_cycles=min(512, max(8, int(min(ctx.comp, 512)))),
@@ -256,14 +308,27 @@ class EnergyStage(Stage):
                                 if k != "total"}
 
 
-def build_pipeline(fidelity: str = "fast") -> Tuple[Stage, ...]:
-    """The canonical GEMM pipeline for a fidelity level."""
+def build_pipeline(fidelity: str = "fast", *, core_index: int = 0,
+                   trace_spec=None) -> Tuple[Stage, ...]:
+    """The canonical GEMM pipeline for a fidelity level.
+
+    core_index: the core whose geometry every core-dependent stage
+    (mapping, sparsity, sram, dram, layout) analyzes — heterogeneous
+    meshes model one consistent member. trace_spec: optional
+    `repro.trace.TraceSpec` for the trace fidelity.
+    """
     if fidelity not in FIDELITIES:
         raise ValueError(f"fidelity must be one of {FIDELITIES}, "
                          f"got {fidelity!r}")
-    dram = CycleDramStage() if fidelity == "cycle" else FastDramStage()
-    return (MappingStage(), PartitionStage(), SparsityStage(), SramStage(),
-            dram, LayoutStage(), EnergyStage())
+    if fidelity == "cycle":
+        dram: DramStage = CycleDramStage(core_index)
+    elif fidelity == "trace":
+        dram = TraceDramStage(core_index, trace_spec)
+    else:
+        dram = FastDramStage(core_index)
+    return (MappingStage(core_index), PartitionStage(),
+            SparsityStage(core_index), SramStage(core_index), dram,
+            LayoutStage(core_index), EnergyStage())
 
 
 def resolve_sparsity(cfg: AcceleratorConfig, op: Op) -> SparsityConfig:

@@ -1,0 +1,28 @@
+"""repro.trace: dataflow-aware DRAM demand-trace generation.
+
+The subsystem behind `fidelity="trace"`: per-dataflow (OS/WS/IS) request
+generators that walk the tile schedule, a double-buffered prefetch
+scheduler that turns tile deadlines into issue times, layout-aware
+address mapping (composing with `core.layout`), and a shared-DRAM
+multi-core contention path over merged per-core traces.
+
+Request-stream contract: fixed-shape (TraceSpec.cap) buffers of
+(t_issue, addr, is_write, valid) sorted by issue time, plus a real-valued
+`scale` such that sum(valid) * gran_bytes * scale equals the
+`dataflow.dram_traffic` byte total exactly (conservation; with a
+caller-supplied common scale, per-region bytes quantize to whole model
+requests instead — see generator.py). Everything is traced, so
+generators vmap over ops and design points.
+"""
+from .generator import (DEFAULT_SPEC, REGION_SPAN, TraceSpec,
+                        gemm_request_stream, gemm_trace_stats, trace_op,
+                        trace_op_stats)
+from .contention import (ContentionResult, SharedDramResult, core_subgemm,
+                         multicore_contention, simulate_shared_dram)
+
+__all__ = [
+    "DEFAULT_SPEC", "REGION_SPAN", "TraceSpec", "gemm_request_stream",
+    "gemm_trace_stats", "trace_op", "trace_op_stats", "ContentionResult",
+    "SharedDramResult", "core_subgemm", "multicore_contention",
+    "simulate_shared_dram",
+]

@@ -1,0 +1,293 @@
+"""Shared-DRAM multi-core contention over merged per-core traces.
+
+`simulate_multicore` balances compute + NoP offsets but models each core's
+memory as free. Here every core's share of the GEMM becomes its own
+generated demand trace (offset in time by its NoP hop latency, offset in
+address space so cores occupy disjoint DRAM regions), the traces are
+merged into one stream, and a banked-channel scan with *per-channel*
+request queues and *per-core* backpressure shifts times the whole thing.
+
+Two routing modes:
+  - shared (default): every core's bursts interleave over all channels —
+    cores contend for channel buses, banks and queue slots.
+  - private_channels: core c's bursts are pinned to channel `c % channels`
+    (burst-index transform `b -> b * channels + c`). With one core per
+    channel the merged scan decomposes *exactly* into the isolated
+    per-core runs — the contention path then equals the isolated model,
+    which is the invariant `tests/test_trace.py` checks.
+
+Per-core stall inflation (shared stall / isolated stall) is the quantity
+the paper's end-to-end system analysis needs: how much of the partition's
+balance survives a real memory system.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import dataflow as dfm
+from ..core.accelerator import AcceleratorConfig, DramConfig
+from ..core.dram import decode_requests, row_buffer_latency
+from .generator import (_BIG_T, DEFAULT_SPEC, REGION_SPAN, TraceSpec,
+                        gemm_request_stream)
+
+_CORE_SPAN = 4 * REGION_SPAN      # address space per core (shared routing)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SharedDramResult:
+    per_core_stall: jnp.ndarray     # (n_cores,)
+    per_core_last: jnp.ndarray      # (n_cores,) last completion time
+    row_hits: jnp.ndarray
+    row_misses: jnp.ndarray
+    row_conflicts: jnp.ndarray
+    total_cycles: jnp.ndarray
+
+
+@partial(jax.jit, static_argnames=("n_cores", "cfg", "gran_bytes"))
+def simulate_shared_dram(t_issue: jnp.ndarray, addr: jnp.ndarray,
+                         is_write: jnp.ndarray, core_id: jnp.ndarray,
+                         valid: jnp.ndarray, n_cores: int, cfg: DramConfig,
+                         gran_bytes: int = 64) -> SharedDramResult:
+    """The `simulate_dram` scan generalized to a merged multi-core stream.
+
+    Differences from the single-stream scan (both matter for contention):
+    - request queues are per *channel* (a core hammering channel 0 cannot
+      exhaust channel 1's in-flight window), and
+    - the backpressure `shift` is per *core* — one core's queue stalls
+      delay that core's later requests, not its neighbors' issue times
+      (their delay comes physically, through bus/bank/queue occupancy).
+
+    With disjoint channel pinning the per-core state never couples, so
+    the scan decomposes exactly into per-core isolated runs.
+    """
+    ch_n, bk_n = cfg.channels, cfg.banks_per_channel
+    busy = jnp.maximum(1.0, gran_bytes / cfg.bandwidth_bytes_per_cycle)
+    flat_bank, ch, row = decode_requests(addr, cfg)
+
+    Qr, Qw = cfg.read_queue, cfg.write_queue
+
+    def step(carry, x):
+        (bank_free, open_row, bus_free, ring_r, ring_w, ir, iw, shift,
+         hits, misses, conflicts) = carry
+        t, fb, c, rw, w, v, cid = x
+        t_eff = t + shift[cid]
+        head_r = ring_r[c, ir[c] % Qr]
+        head_w = ring_w[c, iw[c] % Qw]
+        issue_ok = jnp.maximum(t_eff, jnp.where(w, head_w, head_r))
+        ready = jnp.maximum(issue_ok, bank_free[fb])
+        lat, hit, empty = row_buffer_latency(cfg, open_row[fb], rw)
+        done = jnp.maximum(ready + lat, bus_free[c]) + busy
+        bank_free = jnp.where(v, bank_free.at[fb].set(done), bank_free)
+        bus_free = jnp.where(v, bus_free.at[c].set(done), bus_free)
+        open_row = jnp.where(v, open_row.at[fb].set(rw), open_row)
+        ring_r = jnp.where(v & ~w, ring_r.at[c, ir[c] % Qr].set(done), ring_r)
+        ring_w = jnp.where(v & w, ring_w.at[c, iw[c] % Qw].set(done), ring_w)
+        ir = jnp.where(v & ~w, ir.at[c].add(1), ir)
+        iw = jnp.where(v & w, iw.at[c].add(1), iw)
+        shift = jnp.where(
+            v, shift.at[cid].add(jnp.maximum(0.0, issue_ok - t_eff)), shift)
+        hits += hit & v
+        misses += empty & v
+        conflicts += (~hit) & (~empty) & v
+        return ((bank_free, open_row, bus_free, ring_r, ring_w, ir, iw,
+                 shift, hits, misses, conflicts),
+                jnp.where(v, done, 0.0))
+
+    carry0 = (jnp.zeros(ch_n * bk_n), -jnp.ones(ch_n * bk_n, jnp.int32),
+              jnp.zeros(ch_n), jnp.zeros((ch_n, Qr)), jnp.zeros((ch_n, Qw)),
+              jnp.zeros(ch_n, jnp.int32), jnp.zeros(ch_n, jnp.int32),
+              jnp.zeros(n_cores, jnp.float32),
+              jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    xs = (t_issue.astype(jnp.float32), flat_bank, ch, row, is_write, valid,
+          core_id.astype(jnp.int32))
+    carry, done = jax.lax.scan(step, carry0, xs)
+    shift = carry[7]
+    hits, misses, conflicts = carry[8], carry[9], carry[10]
+
+    nominal = cfg.tRCD + cfg.tCAS + busy
+    ti = t_issue.astype(jnp.float32)
+    onehot = (core_id[None, :] == jnp.arange(n_cores)[:, None]) & valid
+    last_done = jnp.max(jnp.where(onehot, done[None, :], 0.0), axis=1)
+    last_issue = jnp.max(jnp.where(onehot, ti[None, :], 0.0), axis=1)
+    tail = jnp.maximum(0.0, last_done - (last_issue + shift + nominal))
+    return SharedDramResult(
+        per_core_stall=shift + tail,
+        per_core_last=last_done,
+        row_hits=hits, row_misses=misses, row_conflicts=conflicts,
+        total_cycles=jnp.max(jnp.where(valid, done, 0.0)))
+
+
+# --------------------------------------------------------------------------
+# Per-core sub-problems and the end-to-end contention report
+# --------------------------------------------------------------------------
+
+def core_subgemm(dataflow: str, M: int, N: int, K: int, share: int,
+                 scheme: str, Pr: int, Pc: int) -> Tuple[int, int, int]:
+    """(M, N, K) of the sub-GEMM a core with `share` units of the split
+    dimension executes under a partition scheme (mirrors the per-core
+    cycle formulas in `simulate_multicore`)."""
+    Sr, Sc, T = dfm.map_gemm(dataflow, M, N, K)
+    if scheme == "spatial":
+        sub = (share, -(-Sc // Pc), T)
+    elif scheme == "st1":
+        sub = (share, Sc, -(-T // Pc))
+    elif scheme == "st2":
+        sub = (Sr, share, -(-T // Pr))
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    m, n, k = dfm.unmap_gemm(dataflow, *sub)
+    return max(1, int(m)), max(1, int(n)), max(1, int(k))
+
+
+def _route(addr: jnp.ndarray, core: int, channels: int, burst: int,
+           private: bool) -> jnp.ndarray:
+    """Place core `core`'s local addresses in the shared address space."""
+    if private:
+        b = addr // burst
+        # Cores pinned to the same channel (when num_cores > channels)
+        # get disjoint row regions — without this, cores 0 and `channels`
+        # would alias onto byte-identical banks/rows and harvest spurious
+        # row hits from each other's streams.
+        b = b + (core // channels) * (_CORE_SPAN // burst)
+        return (b * channels + core % channels) * burst + addr % burst
+    return addr + core * _CORE_SPAN
+
+
+@dataclasses.dataclass(frozen=True)
+class ContentionResult:
+    """Isolated vs shared-DRAM stalls per core (+ merged row stats)."""
+    per_core_stall_isolated: Tuple[float, ...]
+    per_core_stall_shared: Tuple[float, ...]
+    per_core_compute: Tuple[float, ...]
+    scheme: str
+    private_channels: bool
+    row_hits: int
+    row_misses: int
+    row_conflicts: int
+    makespan_isolated: float          # max over cores: compute + NoP + stall
+    makespan_shared: float
+    # row stats count the scale-compressed merged stream (they saturate
+    # near spec.cap * n_cores); multiply by this factor for absolute-scale
+    # estimates, as with gemm_trace_stats' scaled_by
+    scaled_by: float = 1.0
+
+    @property
+    def stall_inflation(self) -> Tuple[float, ...]:
+        """Shared / isolated stall per core (1.0 = no contention; inf when
+        a core that never stalled alone is delayed by neighbors)."""
+        return tuple(s / i if i > 0 else
+                     (float("inf") if s > 1e-9 else 1.0)
+                     for s, i in zip(self.per_core_stall_shared,
+                                     self.per_core_stall_isolated))
+
+
+def multicore_contention(cfg: AcceleratorConfig, M: int, N: int, K: int,
+                         scheme: str = "spatial",
+                         private_channels: bool = False,
+                         spec: Optional[TraceSpec] = None) -> ContentionResult:
+    """Generate per-core traces for one partitioned GEMM and compare the
+    isolated DRAM model against the merged shared-channel model.
+
+    Both the isolated and the shared numbers come from the same
+    per-channel-queue scan (`simulate_shared_dram`), so the comparison is
+    apples-to-apples; absolute stall values are not directly comparable
+    with `simulate_dram`'s single global-queue model (TraceDramStage),
+    which bounds in-flight requests across all channels together.
+    """
+    from ..core.multicore import simulate_multicore
+    spec = spec or DEFAULT_SPEC
+    mc = simulate_multicore(cfg, M, N, K, scheme)
+    df = cfg.dataflow
+    wb = cfg.memory.word_bytes
+    n_cores = cfg.num_cores
+
+    # trace addresses are int32; fail loudly instead of silently wrapping
+    # core regions onto each other (shared routing spans n_cores regions,
+    # private routing spans ceil(n_cores/channels) * channels)
+    ch = cfg.dram.channels
+    groups = (n_cores - 1) // ch + 1
+    span_factor = groups * ch if private_channels else n_cores
+    if span_factor * _CORE_SPAN > 2 ** 31:
+        raise ValueError(
+            f"{n_cores} cores over {ch} channels needs "
+            f"{span_factor} x {_CORE_SPAN} bytes of shared address space, "
+            "which overflows the int32 trace addresses; reduce the core "
+            "count (<= 16 cores fit)")
+
+    # per-core sub-GEMMs, traffic and compute windows --------------------
+    subs, comps, regions = [], [], []
+    for idx, core in enumerate(cfg.cores):
+        m, n, k = core_subgemm(df, M, N, K, mc.per_core_share[idx],
+                               scheme, mc.Pr, mc.Pc)
+        subs.append((m, n, k))
+        comps.append(float(dfm.compute_cycles(df, m, n, k,
+                                              core.rows, core.cols)))
+        dram = dfm.dram_traffic(df, m, n, k, core.rows, core.cols,
+                                cfg.memory)
+        regions.append(tuple(float(dram[key]) for key in
+                             ("dram_ifmap", "dram_filter",
+                              "dram_ofmap_writes", "dram_ofmap_reads")))
+
+    # one common compression factor so every core's stream (and compute
+    # window) is squeezed coherently before merging
+    n_totals = [sum(r) * wb / spec.gran_bytes for r in regions]
+    common_scale = max(1.0, max(n_totals) / spec.cap)
+
+    per_core = []
+    for idx, core in enumerate(cfg.cores):
+        m, n, k = subs[idx]
+        t, addr, w, valid, _ = gemm_request_stream(
+            df, m, n, k, core.rows, core.cols, comps[idx],
+            *regions[idx], wb, spec, scale=common_scale)
+        # issue times live on the scale-compressed axis; the real-cycle
+        # NoP offset must be compressed the same way or it decorrelates
+        # the cores by cap-dependent amounts after the final rescale
+        t = jnp.where(
+            valid,
+            t + core.nop_hops * cfg.nop_cycles_per_hop / common_scale,
+            _BIG_T)
+        addr = _route(addr, idx, cfg.dram.channels,
+                      cfg.dram.burst_bytes, private_channels)
+        per_core.append((t, addr, w, valid))
+
+    def run(t, a, w, v, cid, nc):
+        order = jnp.argsort(jnp.where(v, t, _BIG_T))
+        return simulate_shared_dram(t[order], a[order], w[order],
+                                    cid[order], v[order], nc, cfg.dram,
+                                    spec.gran_bytes)
+
+    # isolated: each core alone on the (same-routed) memory system
+    iso = []
+    for idx, (t, a, w, v) in enumerate(per_core):
+        res = run(t, a, w, v, jnp.zeros(spec.cap, jnp.int32), 1)
+        iso.append(float(res.per_core_stall[0]) * common_scale)
+
+    # shared: merged stream, per-core attribution
+    t = jnp.concatenate([pc[0] for pc in per_core])
+    a = jnp.concatenate([pc[1] for pc in per_core])
+    w = jnp.concatenate([pc[2] for pc in per_core])
+    v = jnp.concatenate([pc[3] for pc in per_core])
+    cid = jnp.concatenate([jnp.full(spec.cap, i, jnp.int32)
+                           for i in range(n_cores)])
+    shared = run(t, a, w, v, cid, n_cores)
+    shared_stalls = [float(s) * common_scale for s in shared.per_core_stall]
+
+    nop = [c.nop_hops * cfg.nop_cycles_per_hop for c in cfg.cores]
+    return ContentionResult(
+        per_core_stall_isolated=tuple(iso),
+        per_core_stall_shared=tuple(shared_stalls),
+        per_core_compute=tuple(comps),
+        scheme=scheme, private_channels=private_channels,
+        row_hits=int(shared.row_hits), row_misses=int(shared.row_misses),
+        row_conflicts=int(shared.row_conflicts),
+        makespan_isolated=max(c + o + s for c, o, s in
+                              zip(comps, nop, iso)),
+        makespan_shared=max(c + o + s for c, o, s in
+                            zip(comps, nop, shared_stalls)),
+        scaled_by=common_scale)
