@@ -86,6 +86,18 @@ def run(smoke: bool = False):
                  f"designs_per_sec={tdps:.0f}"))
     artifact["trace_sweep_designs"] = len(tgrid)
     artifact["trace_sweep_designs_per_sec"] = tdps
+    artifact["trace_engine"] = Simulator("paper-32",
+                                         fidelity="trace").engine
+
+    # the retained reference scan on the same grid, for the ISSUE 3
+    # chunked-vs-reference engine comparison (single repeat: it is slow)
+    rsim = Simulator("paper-32", fidelity="trace", engine="reference")
+    _, us_ref = timed(lambda: rsim.sweep(tgrid, op), repeat=1)
+    rdps = len(tgrid) / (us_ref / 1e6)
+    rows.append((f"trace_sweep_reference_{len(tgrid)}_designs", us_ref,
+                 f"designs_per_sec={rdps:.0f};"
+                 f"chunked_speedup={tdps / rdps:.2f}x"))
+    artifact["trace_sweep_reference_designs_per_sec"] = rdps
 
     with open(ARTIFACT, "w") as f:
         json.dump(artifact, f, indent=1)

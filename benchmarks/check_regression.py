@@ -1,0 +1,63 @@
+"""CI benchmark regression gate (ISSUE 3 satellite).
+
+Compares a fresh `BENCH_sim_throughput.json` against the committed
+`benchmarks/baseline.json` and fails (exit 1) if a tracked throughput
+metric regressed by more than the allowed fraction.  Throughput gains
+never fail; the gate only guards the floor.
+
+    python -m benchmarks.check_regression \
+        [--bench BENCH_sim_throughput.json] \
+        [--baseline benchmarks/baseline.json] [--tolerance 0.2]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# metric -> max allowed regression fraction vs baseline
+GATES = {
+    "trace_sweep_designs_per_sec": 0.2,
+    "sweep_designs_per_sec": 0.2,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="BENCH_sim_throughput.json")
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="override the per-metric regression tolerance")
+    args = ap.parse_args(argv)
+
+    with open(args.bench) as f:
+        bench = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    failures = []
+    for metric, tol in GATES.items():
+        tol = args.tolerance if args.tolerance is not None else tol
+        if metric not in base:
+            continue
+        if metric not in bench:
+            failures.append(f"{metric}: missing from {args.bench}")
+            continue
+        got, floor = float(bench[metric]), float(base[metric]) * (1.0 - tol)
+        ratio = float(bench[metric]) / max(float(base[metric]), 1e-9)
+        status = "FAIL" if got < floor else "ok"
+        print(f"{status}: {metric} = {got:.1f} "
+              f"(baseline {float(base[metric]):.1f}, x{ratio:.2f}, "
+              f"floor {floor:.1f})")
+        if got < floor:
+            failures.append(
+                f"{metric} regressed: {got:.1f} < floor {floor:.1f}")
+    if failures:
+        print("benchmark regression gate FAILED:", "; ".join(failures))
+        return 1
+    print("benchmark regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,8 +6,10 @@ from .accelerator import (AcceleratorConfig, CoreConfig, DramConfig,
                           tpu_like_config)
 from .dataflow import (compute_cycles, dram_traffic, gemm_summary, map_gemm,
                        pe_utilization, sram_traffic, unmap_gemm)
-from .dram import (DramResult, linear_trace, simulate_dram, strided_trace,
+from .dram import (DramResult, decode_requests, linear_trace,
+                   replay_requests, simulate_dram, strided_trace,
                    tile_prefetch_trace)
+from .replay import DEFAULT_CHUNK, DEFAULT_ENGINE, ENGINES, resolve_engine
 from .energy import (DEFAULT_ERT, ERT, action_counts, action_counts_raw,
                      edp, energy_pj, power_w)
 from .engine import (NetworkReport, OpResult, gemm_summary_traced,

@@ -1,10 +1,16 @@
 """Cycle-accurate main-memory timing model (paper Sec. V) — Ramulator, in JAX.
 
-A `lax.scan` over a demand-request stream reproduces the statistics the paper
-gets from Ramulator: per-request round-trip latency, row-buffer hits / misses
-(empty row) / conflicts, per-channel throughput, and — via finite read/write
-request queues — the accelerator stall cycles that the queues' backpressure
+The timing model reproduces the statistics the paper gets from Ramulator:
+per-request round-trip latency, row-buffer hits / misses (empty row) /
+conflicts, per-channel throughput, and — via finite read/write request
+queues — the accelerator stall cycles that the queues' backpressure
 creates (Sec. V-A2/V-A3).
+
+Two replay engines implement the model (see `core.replay`):
+  - the chunked bank-parallel engine (default; `engine="xla"` or
+    `engine="pallas"`), which resolves requests in vectorized chunks, and
+  - the original per-request `lax.scan` (`engine="reference"`), retained
+    as the semantics oracle for differential testing.
 
 Address mapping (documented; DDR-style interleave):
   burst index  b   = addr // burst_bytes
@@ -19,21 +25,23 @@ Timing per request on its (channel, bank):
   done  = ready + lat + busy   (busy = gran_bytes / per-channel bandwidth)
 
 Finite queues: a request cannot issue until the request Q-back *in its
-direction* has completed (in-flight window, mirroring the AXI-style window the
-paper validates against). Backpressure accumulates into a `shift` carried
-through the scan: every later request (and the compute stream) is delayed by
-it — this is the "systolic array waits on the scratchpad" stall.
+direction* has completed (in-flight window, mirroring the AXI-style window
+the paper validates against). Backpressure accumulates into a `shift`:
+every later request (and the compute stream) is delayed by it — this is
+the "systolic array waits on the scratchpad" stall.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .accelerator import DramConfig
+
+_ADDR_LIMIT = 2 ** 31
 
 
 @jax.tree_util.register_dataclass
@@ -50,14 +58,42 @@ class DramResult:
     throughput: jnp.ndarray       # bytes / cycle over the busy window
 
 
+def _addr_dtype():
+    """int64 burst-index math when the jax config allows it, int32 else."""
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+
+
+def check_addresses(addr) -> None:
+    """Loud int32 address-space guard: every byte address must sit in
+    [0, 2^31).  A negative address is the tell-tale of silent int32 wrap
+    upstream.  Value checks only work on concrete arrays — under jit/vmap
+    tracing this is a no-op (the eager entry points run it before
+    tracing, which is where streams are built in practice)."""
+    if isinstance(addr, jax.core.Tracer):
+        return
+    a = jnp.asarray(addr)
+    if a.size == 0:
+        return
+    lo, hi = int(jnp.min(a)), int(jnp.max(a))
+    if lo < 0 or hi >= _ADDR_LIMIT:
+        raise ValueError(
+            f"request addresses span [{lo}, {hi}], outside the int32 trace "
+            f"address space [0, 2^31). A negative bound means the address "
+            f"arithmetic wrapped upstream; shrink the stream's address "
+            f"span (e.g. fewer cores / smaller regions) or enable "
+            f"jax_enable_x64 for wider trace construction.")
+
+
 def decode_requests(addr: jnp.ndarray, cfg: DramConfig):
     """Byte address -> (flat_bank, channel, row) under the interleaved
-    channel/bank/row decode. Shared by every DRAM scan in the repo (this
+    channel/bank/row decode. Shared by every DRAM replay in the repo (this
     module's `simulate_dram` and `repro.trace.contention`'s shared-channel
-    scan) — change the decode here and both models follow."""
+    model) — change the decode here and both models follow.  Concrete
+    (non-traced) addresses are guarded against int32 overflow loudly."""
+    check_addresses(addr)
     ch_n, bk_n = cfg.channels, cfg.banks_per_channel
     bursts_per_row = max(1, cfg.row_bytes // cfg.burst_bytes)
-    b = addr // cfg.burst_bytes
+    b = jnp.asarray(addr).astype(_addr_dtype()) // cfg.burst_bytes
     ch = (b % ch_n).astype(jnp.int32)
     r = b // ch_n
     bank = ((r // bursts_per_row) % bk_n).astype(jnp.int32)
@@ -67,7 +103,7 @@ def decode_requests(addr: jnp.ndarray, cfg: DramConfig):
 
 def row_buffer_latency(cfg: DramConfig, open_row_val, rw):
     """(latency, hit, empty) of one access against a bank's open row —
-    the tCAS / tRCD+tCAS / tRP+tRCD+tCAS selection shared by both scans."""
+    the tCAS / tRCD+tCAS / tRP+tRCD+tCAS selection shared by both engines."""
     hit = open_row_val == rw
     empty = open_row_val < 0
     lat = jnp.where(hit, cfg.tCAS,
@@ -76,29 +112,33 @@ def row_buffer_latency(cfg: DramConfig, open_row_val, rw):
     return lat, hit, empty
 
 
-@partial(jax.jit, static_argnames=("cfg", "gran_bytes"))
-def simulate_dram(t_issue: jnp.ndarray, addr: jnp.ndarray,
-                  is_write: jnp.ndarray, cfg: DramConfig,
-                  gran_bytes: int = 64,
-                  valid: jnp.ndarray = None) -> DramResult:
-    """Run the timing model over a request stream (sorted by t_issue).
+def _finalize(t_issue, valid, done, rt, shift, hits, misses, conflicts,
+              cfg: DramConfig, gran_bytes: int, busy) -> DramResult:
+    """Aggregate per-request completions into a DramResult (shared by the
+    reference scan and the chunked replay so both report identically).
+    Batch-native: inputs may carry leading batch dims before the request
+    axis; aggregates reduce over the last axis only."""
+    ti = t_issue.astype(jnp.float32)
+    last = jnp.max(jnp.where(valid, done, 0.0), axis=-1)
+    first = jnp.min(jnp.where(valid, ti, jnp.inf), axis=-1)
+    span = jnp.maximum(1.0, last - first)
+    nominal = cfg.tRCD + cfg.tCAS + busy
+    last_issue = jnp.max(jnp.where(valid, ti, 0.0), axis=-1)
+    tail = jnp.maximum(0.0, last - (last_issue + shift + nominal))
+    bytes_moved = jnp.sum(valid, axis=-1).astype(jnp.float32) * gran_bytes
+    return DramResult(
+        latency=rt, complete=done,
+        stall_cycles=shift + tail,
+        row_hits=hits, row_misses=misses, row_conflicts=conflicts,
+        total_cycles=last, bytes_moved=bytes_moved,
+        throughput=bytes_moved / span)
 
-    gran_bytes: bytes moved per request (trace fidelity uses burst_bytes;
-    fast fidelity coarsens to larger transfers with bandwidth-equivalent
-    bus occupancy).
 
-    valid: optional bool mask. Invalid entries are no-ops: they leave the
-    bank/bus/queue state untouched, contribute zero latency and zero
-    bytes. This is what lets `repro.trace` generators emit fixed-shape
-    (vmappable) request buffers whose live length is a traced value.
-    """
-    n = t_issue.shape[0]
-    if valid is None:
-        valid = jnp.ones((n,), dtype=bool)
+def _reference_scan(t_issue, flat_bank, ch, row, is_write, valid,
+                    cfg: DramConfig, busy):
+    """The original per-request scan (engine='reference'); the semantics
+    oracle the chunked engine is differential-tested against."""
     ch_n, bk_n = cfg.channels, cfg.banks_per_channel
-    busy = jnp.maximum(1.0, gran_bytes / cfg.bandwidth_bytes_per_cycle)
-    flat_bank, ch, row = decode_requests(addr, cfg)
-
     Qr, Qw = cfg.read_queue, cfg.write_queue
 
     def step(carry, x):
@@ -138,28 +178,86 @@ def simulate_dram(t_issue: jnp.ndarray, addr: jnp.ndarray,
     xs = (t_issue.astype(jnp.float32), flat_bank, ch, row, is_write, valid)
     carry, (done, rt) = jax.lax.scan(step, carry0, xs)
     (_, _, _, _, _, _, _, shift, hits, misses, conflicts) = carry
+    return done, rt, shift, hits, misses, conflicts
 
+
+def replay_requests(t_issue, flat_bank, ch, row, is_write, valid,
+                    cfg: DramConfig, gran_bytes: int = 64,
+                    engine: Optional[str] = None,
+                    chunk: Optional[int] = None) -> DramResult:
+    """Run the timing model over a *pre-decoded* request stream.
+
+    This is the decode-hoisted entry point: `Simulator.sweep`'s batched
+    trace path decodes the whole (designs, ops, cap) address batch in one
+    call and replays the decoded streams here, instead of re-deriving
+    bank/channel/row inside every per-design closure.  Pure traced
+    function; `cfg`/`gran_bytes`/`engine`/`chunk` must be static under an
+    outer jit.  The chunked engines are batch-native: leading batch dims
+    on the request arrays replay as one batch ("reference"/"pallas" are
+    per-stream — vmap them for batches).
+    """
+    from . import replay as rp
+    engine = rp.resolve_engine(engine)
+    if valid is None:
+        valid = jnp.ones(t_issue.shape, dtype=bool)
     ti = t_issue.astype(jnp.float32)
-    last = jnp.max(jnp.where(valid, done, 0.0))
-    first = jnp.min(jnp.where(valid, ti, jnp.inf))
-    span = jnp.maximum(1.0, last - first)
-    nominal = cfg.tRCD + cfg.tCAS + busy
-    last_issue = jnp.max(jnp.where(valid, ti, 0.0))
-    tail = jnp.maximum(0.0, last - (last_issue + shift + nominal))
-    bytes_moved = jnp.sum(valid).astype(jnp.float32) * gran_bytes
-    return DramResult(
-        latency=rt, complete=done,
-        stall_cycles=shift + tail,
-        row_hits=hits, row_misses=misses, row_conflicts=conflicts,
-        total_cycles=last, bytes_moved=bytes_moved,
-        throughput=bytes_moved / span)
+    busy = jnp.maximum(1.0, gran_bytes / cfg.bandwidth_bytes_per_cycle)
+    if engine == "reference":
+        done, rt, shift, hits, misses, conflicts = _reference_scan(
+            ti, flat_bank, ch, row, is_write, valid, cfg, busy)
+    else:
+        out = rp.replay_decoded(ti, flat_bank, ch, row, is_write, valid,
+                                cfg, gran_bytes, engine=engine, chunk=chunk)
+        done = jnp.where(valid, out["done"], ti)
+        rt = out["latency"]
+        shift = out["shift"][..., 0]
+        hits, misses, conflicts = out["hits"], out["misses"], out["conflicts"]
+    return _finalize(ti, valid, done, rt, shift, hits, misses, conflicts,
+                     cfg, gran_bytes, busy)
+
+
+@partial(jax.jit, static_argnames=("cfg", "gran_bytes", "engine", "chunk"))
+def _simulate_dram(t_issue, addr, is_write, cfg, gran_bytes, valid, engine,
+                   chunk):
+    flat_bank, ch, row = decode_requests(addr, cfg)
+    return replay_requests(t_issue, flat_bank, ch, row, is_write, valid,
+                           cfg, gran_bytes, engine=engine, chunk=chunk)
+
+
+def simulate_dram(t_issue: jnp.ndarray, addr: jnp.ndarray,
+                  is_write: jnp.ndarray, cfg: DramConfig,
+                  gran_bytes: int = 64,
+                  valid: jnp.ndarray = None,
+                  engine: Optional[str] = None,
+                  chunk: Optional[int] = None) -> DramResult:
+    """Run the timing model over a request stream (sorted by t_issue).
+
+    gran_bytes: bytes moved per request (trace fidelity uses burst_bytes;
+    fast fidelity coarsens to larger transfers with bandwidth-equivalent
+    bus occupancy).
+
+    valid: optional bool mask. Invalid entries are no-ops: they leave the
+    bank/bus/queue state untouched, contribute zero latency and zero
+    bytes. This is what lets `repro.trace` generators emit fixed-shape
+    (vmappable) request buffers whose live length is a traced value.
+
+    engine: None -> `replay.DEFAULT_ENGINE`; "xla" | "pallas" select the
+    chunked bank-parallel replay (see `core.replay`), "reference" the
+    original per-request scan.  chunk: requests per chunk step for the
+    chunked engines (default `replay.DEFAULT_CHUNK`).
+    """
+    from . import replay as rp
+    engine = rp.resolve_engine(engine)
+    check_addresses(addr)      # loud guard before tracing hides the values
+    return _simulate_dram(t_issue, addr, is_write, cfg, gran_bytes, valid,
+                          engine, chunk)
 
 
 def linear_trace(n_requests: int, start_addr: int = 0, gran_bytes: int = 64,
                  t0: float = 0.0, issue_gap: float = 1.0,
                  write_every: int = 0) -> Tuple[jnp.ndarray, ...]:
     """Streaming (prefetch-like) trace: consecutive addresses, steady issue."""
-    i = jnp.arange(n_requests)
+    i = jnp.arange(n_requests, dtype=_addr_dtype())
     t = t0 + issue_gap * i.astype(jnp.float32)
     addr = start_addr + i * gran_bytes
     w = (i % write_every == write_every - 1) if write_every else jnp.zeros_like(i, bool)
@@ -169,7 +267,7 @@ def linear_trace(n_requests: int, start_addr: int = 0, gran_bytes: int = 64,
 def strided_trace(n_requests: int, stride_bytes: int, gran_bytes: int = 64,
                   t0: float = 0.0, issue_gap: float = 1.0):
     """Row-conflict-heavy trace: large strides thrash row buffers."""
-    i = jnp.arange(n_requests)
+    i = jnp.arange(n_requests, dtype=_addr_dtype())
     t = t0 + issue_gap * i.astype(jnp.float32)
     addr = i * stride_bytes
     return t, addr, jnp.zeros_like(i, dtype=bool)
@@ -185,7 +283,7 @@ def tile_prefetch_trace(tile_bytes: int, n_tiles: int, compute_per_tile: float,
     ofmap_fraction of requests are writes.
     """
     per = max(1, int(tile_bytes) // gran_bytes)
-    i = jnp.arange(per * n_tiles)
+    i = jnp.arange(per * n_tiles, dtype=_addr_dtype())
     tile = i // per
     # the whole next-tile prefetch is posted at the window start (true
     # double-buffer behavior): small queues block the producer immediately,

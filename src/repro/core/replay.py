@@ -1,0 +1,661 @@
+"""Chunked bank-parallel DRAM replay (the trace-fidelity hot path).
+
+`core.dram.simulate_dram` and `trace.contention.simulate_shared_dram`
+originally replayed demand streams with a per-request `lax.scan` —
+thousands of sequential steps, each a handful of dynamic `.at[fb]`
+updates.  That serialization is what made trace-fidelity sweeps ~27x
+slower than fast fidelity.  This module replays the same timing model in
+fixed-size request chunks; inside a chunk everything is vectorized, and
+the chunk scan carries only the true architectural state (per-bank
+free/open-row, per-channel bus time, in-flight rings, queue counters,
+per-core shift) so chunk boundaries are invisible.
+
+The implementation is shaped by what a backend executes efficiently:
+fused elementwise chains, `take_along_axis` gathers, and log-step
+shift-reduce prefixes.  There are no sorts and no scatters on the hot
+path, and every function is *batch-native* — leading batch dimensions
+(design grids, op batches) flow through the same ops instead of a vmap
+wrapper, so a sweep replays a whole (designs, ops) stream batch in one
+scan.
+
+  order-only precompute (exact, hoisted out of the chunk scan)
+    Row-buffer state is "last writer wins" per bank, so each request's
+    open-row comparison depends only on *stream order*.  The previous
+    same-bank link is built in two exact levels: shifted compares find
+    links closer than a subblock, and a per-(bank, subblock)
+    last-occurrence summary (one masked reduce + a tiny prefix over
+    subblocks) finds the rest — no (banks x chunk) prefix scans on the
+    wide path.  Classification (hit / empty / conflict) follows from
+    the links and is bit-identical to the reference scan by
+    construction.  Queue-slot indices, ring survivors (request d is the
+    last writer of slot (d + idx0) %% Q iff no later d' = d + kQ in the
+    chunk), weighted channel prefixes and per-bank/per-channel last
+    requests are likewise order-only and computed for the whole stream
+    in wide fused ops *before* the scan.
+
+  chunk resolve (two exact closures + fixed point)
+    Completion times obey
+        done_i = max(max(issue_ok_i, bankdone_prev(i)) + lat_i,
+                     done_prev_on_channel) + busy
+    Per pass, the channel chain D_m = max(s_m, D_{m-1} + w_m) is closed
+    exactly as a weighted max-plus prefix (D = W + cummax(s - W),
+    W = cumsum(w), with the row-buffer lat of contiguous same-bank runs
+    folded into the channel edge — a bank maps to exactly one channel,
+    so bank chains live inside a channel's subsequence), and same-bank
+    chains are closed by one masked (chunk, chunk) row reduction over
+    the per-bank weighted prefix.  Queue backpressure `shift` is a
+    per-core running max of (queue_head - t).  Each pass seeds the
+    closures with the previous iterate (so bank-raised completions of
+    other banks propagate down the channel chain), plus a pruned
+    same-bank gather (links whose channel path already outweighs their
+    lat are provably dominated and dropped) and intra-chunk queue
+    heads when a queue is shorter than the chunk.  The operator is
+    monotone from below and each pass finalizes at least the first
+    not-yet-exact request, so its least fixed point *is* the serial
+    result.  Three passes are statically unrolled (realistic streams
+    converge within them); if the third pass still moved a completion
+    by more than `tol` cycles (default 0.25) a lax.cond escapes into a
+    while_loop capped at chunk + 2 passes, so adversarial streams
+    still reach the fixed point.
+
+Bit-exactness: classification counts are exact.  Completion/stall times
+agree with the reference scan up to f32 rounding (the closed-form
+chains compute `s + W` where the scan repeatedly adds `busy`), which is
+why the differential suite pins counts exactly and times to a tight
+relative tolerance — and bit-for-bit when `busy` is exactly
+representable.
+
+Engines:
+  "xla"       chunked replay, segmented closures (default; batch-native)
+  "pallas"    same chunking, but the inner resolve runs as a Pallas
+              kernel: the gathers/segment scans become masked (C, C)
+              row-max contractions over VMEM-resident matrices
+              (interpret-mode fallback off-TPU; 1-D streams — vmap for
+              batches)
+  "reference" the original per-request scan, kept for differential
+              testing and as the semantics oracle (1-D streams)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .accelerator import DramConfig
+from .dram import row_buffer_latency
+
+ENGINES = ("xla", "pallas", "reference")
+# The one-line default switch (ISSUE 3): the chunked engine is the default
+# now that tests/test_replay.py's differential suite passes against the
+# reference scan.  Set to "reference" to restore the legacy per-request scan.
+DEFAULT_ENGINE = "xla"
+DEFAULT_CHUNK = 64
+# Fixed-point stopping threshold (cycles): a pass that moves no completion
+# by more than this ends the iteration.  tol=0.0 = exact fixed point.
+DEFAULT_TOL = 0.25
+_SUB = 16                     # subblock size for the prev-bank summaries
+
+
+def resolve_engine(engine: Optional[str]) -> str:
+    eng = DEFAULT_ENGINE if engine is None else engine
+    if eng not in ENGINES:
+        raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+    return eng
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _shifted(x: jnp.ndarray, k: int, fill) -> jnp.ndarray:
+    """x shifted right by k along the last axis, filled with `fill`."""
+    pad = [(0, 0)] * (x.ndim - 1) + [(k, 0)]
+    return jnp.pad(x, pad, constant_values=fill)[..., :-k]
+
+
+def _cummax(x: jnp.ndarray, *, exclusive: bool = False,
+            fill=-jnp.inf) -> jnp.ndarray:
+    """Running max along the last axis via log-step shift-reduce (fused
+    pad/max chains instead of the generic associative-scan recursion)."""
+    if exclusive:
+        x = _shifted(x, 1, fill)
+    n = x.shape[-1]
+    k = 1
+    while k < n:
+        x = jnp.maximum(x, _shifted(x, k, fill))
+        k *= 2
+    return x
+
+
+def _cumsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive running sum along the last axis (log-step doubling)."""
+    n = x.shape[-1]
+    fill = 0 if jnp.issubdtype(x.dtype, jnp.integer) else 0.0
+    k = 1
+    while k < n:
+        x = x + _shifted(x, k, fill)
+        k *= 2
+    return x
+
+
+def _take(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Batched gather along the last axis."""
+    return jnp.take_along_axis(x, idx, axis=-1)
+
+
+def _take_guard(x: jnp.ndarray, idx: jnp.ndarray, default) -> jnp.ndarray:
+    """Gather along the last axis; idx < 0 yields `default`."""
+    got = _take(x, jnp.maximum(idx, 0))
+    return jnp.where(idx >= 0, got, default)
+
+
+# --------------------------------------------------------------------------
+# Pallas inner resolve: the closures as masked (C, C) row-max contractions
+# in VMEM (bank-grouped gather + segmented scans as matrices).
+# --------------------------------------------------------------------------
+
+def _fixed_point_kernel(t_ref, lat_ref, head0_ref, bank0_ref, bus0_ref,
+                        shift0_ref, w_ref, v_ref, ghead_ref, gprev_ref,
+                        mbank_ref, mshift_ref, mchan_ref, done_ref, *,
+                        busy: float, max_passes: int, tol: float):
+    t = t_ref[...]
+    lat = lat_ref[...]
+    head0 = head0_ref[...]
+    bank0 = bank0_ref[...]
+    bus0 = bus0_ref[...]
+    shift0 = shift0_ref[...]
+    w = w_ref[...]                  # per-request channel edge weight
+    v = v_ref[...]
+    ghead = ghead_ref[...]          # one-hot: intra-chunk queue-head source
+    gprev = gprev_ref[...]          # one-hot: unpruned previous same-bank
+    mbank = mbank_ref[...]          # incl-lower & same-bank & valid
+    mshift = mshift_ref[...]        # strict-lower & same-core & valid
+    mchan = mchan_ref[...]          # incl-lower & same-channel & valid
+    neg = jnp.float32(-jnp.inf)
+    # segmented prefixes as masked row contractions
+    W = jnp.sum(jnp.where(mchan, w[None, :], 0.0), axis=1)
+    V = jnp.sum(jnp.where(mbank, lat[None, :] + busy, 0.0), axis=1)
+
+    def rowmax(mask, x):
+        return jnp.max(jnp.where(mask, x[None, :], neg), axis=1)
+
+    def one_pass(done):
+        head = jnp.maximum(head0, rowmax(ghead, done))
+        g = jnp.where(v, head - t, neg)
+        ss = jnp.maximum(shift0, rowmax(mshift, g))
+        issue_ok = jnp.maximum(t + ss, head)
+        bankp = jnp.maximum(bank0, rowmax(gprev, done))
+        # seed with the previous iterate so cross-bank raises propagate
+        # down the channel chain (see the xla one_pass)
+        s = jnp.maximum(jnp.maximum(issue_ok, bankp) + lat + busy, done)
+        # channel closure
+        u = jnp.maximum(rowmax(mchan, jnp.where(v, s - W, neg)) + W,
+                        bus0 + W)
+        # bank closure
+        d = rowmax(mbank, jnp.where(v, u - V, neg)) + V
+        return jnp.where(v, d, 0.0)
+
+    d0 = one_pass(jnp.zeros_like(t))
+    d1 = one_pass(d0)
+
+    def cond(s):
+        return jnp.logical_and(s[2] < max_passes,
+                               jnp.any(s[1] - s[0] > tol))
+
+    def body(s):
+        return (s[1], one_pass(s[1]), s[2] + 1)
+
+    _, done, _ = jax.lax.while_loop(cond, body, (d0, d1, jnp.int32(2)))
+    done_ref[...] = done
+
+
+def _pallas_fixed_point(t, lat, head0, bank0, bus0, shift0, w, v, ghead,
+                        gprev, mbank, mshift, mchan, *, busy: float,
+                        max_passes: int, tol: float,
+                        interpret: Optional[bool]):
+    interpret = _default_interpret() if interpret is None else interpret
+    C = t.shape[0]
+    return pl.pallas_call(
+        functools.partial(_fixed_point_kernel, busy=busy,
+                          max_passes=max_passes, tol=tol),
+        out_shape=jax.ShapeDtypeStruct((C,), jnp.float32),
+        interpret=interpret,
+    )(t, lat.astype(jnp.float32), head0, bank0, bus0, shift0, w, v,
+      ghead, gprev, mbank, mshift, mchan)
+
+
+# --------------------------------------------------------------------------
+# Order-only stream precompute (wide fused ops, outside the scan).  All
+# inputs are (..., C) with arbitrary leading batch dims (the chunk axis
+# is just another batch dim here).
+# --------------------------------------------------------------------------
+
+def _precompute_chunk(t, fb, ch, row, w, v, cid, *, cfg: DramConfig,
+                      busy: float, n_cores: int, n_qg: int):
+    C = t.shape[-1]
+    f32 = jnp.float32
+    ch_n = cfg.channels
+    n_banks = ch_n * cfg.banks_per_channel
+    Qr, Qw = cfg.read_queue, cfg.write_queue
+    i_idx = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), fb.shape)
+    neg = f32(-jnp.inf)
+    r_mask = v & ~w
+    w_mask = v & w
+    qg = ch if n_qg > 1 else jnp.zeros_like(fb)
+
+    # ---- previous same-bank link, two exact levels ------------------------
+    # near links (closer than a subblock) by shifted compares; the same
+    # shifted masks also accumulate the near part of the bank-closure
+    # prefix Vr (filled in after lat_intra exists, via the saved masks)
+    prev_near = jnp.full(fb.shape, -1, jnp.int32)
+    near_hits = []
+    for k in range(1, _SUB):
+        hitk = (_shifted(fb, k, -1) == fb) & _shifted(v, k, False)
+        near_hits.append(hitk)
+        prev_near = jnp.maximum(prev_near,
+                                jnp.where(hitk, i_idx - k, -1))
+    # far: per-(bank, subblock) last occurrence, prefixed over subblocks
+    nsub = -(-C // _SUB)
+    pad_c = nsub * _SUB - C
+
+    def _sb(x, fill, red):
+        if pad_c:
+            x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad_c)],
+                        constant_values=fill)
+        return red(x.reshape(x.shape[:-1] + (nsub, _SUB)), axis=-1)
+
+    bank_oh = (jnp.arange(n_banks)[:, None] == fb[..., None, :]) & \
+        v[..., None, :]                                     # (..., B, C)
+    marked = jnp.where(bank_oh, i_idx[..., None, :], -1)
+    last_sb = _sb(marked, -1, jnp.max)                      # (..., B, nsub)
+    prev_sb = _cummax(last_sb, exclusive=True, fill=-1)
+    last_b = jnp.max(last_sb, axis=-1)                      # (..., B)
+    sb_idx = i_idx // _SUB
+
+    def _from_sb(tbl):
+        """tbl (..., B, nsub) -> per-request value at (fb_i, subblock_i):
+        gather each request's bank row, then its subblock column."""
+        rows = jnp.take_along_axis(
+            tbl, jnp.broadcast_to(fb[..., :, None],
+                                  fb.shape + (tbl.shape[-1],)), axis=-2)
+        return jnp.take_along_axis(rows, sb_idx[..., None],
+                                   axis=-1)[..., 0]
+
+    prev_far = _from_sb(prev_sb)
+    prev_bank = jnp.maximum(prev_near, prev_far)
+
+    intra = prev_bank >= 0
+    row_prev = _take(row, jnp.maximum(prev_bank, 0))
+    # lat of intra-linked requests is order-only (first-per-bank requests
+    # read the carried open row instead — classified inside the scan)
+    lat_intra, _, _ = row_buffer_latency(cfg, row_prev, row)
+    lat_intra = jnp.where(intra, lat_intra, 0).astype(f32)
+
+    # bank-closure prefix Vr_i = sum of (lat + busy) over same-bank j <= i,
+    # with the same near/far split (offsets cancel within a bank)
+    w_bank = jnp.where(v & intra, lat_intra + busy, 0.0)
+    v_near = w_bank
+    sb_pos = i_idx % _SUB
+    for k in range(1, _SUB):
+        ok = near_hits[k - 1] & (sb_pos >= k)
+        v_near = v_near + jnp.where(ok, _shifted(w_bank, k, 0.0), 0.0)
+    wsb = _sb(jnp.where(bank_oh, w_bank[..., None, :], 0.0), 0.0, jnp.sum)
+    Vfar_sb = _cumsum(wsb) - wsb                            # exclusive
+    Vr = v_near + _from_sb(Vfar_sb)
+
+    # channel segments (thin, stacked over the few channels): weighted
+    # edge prefixes fold the lat of contiguous same-bank runs into the
+    # channel chain
+    chan_oh = (jnp.arange(ch_n)[:, None] == ch[..., None, :]) & \
+        v[..., None, :]                                     # (..., ch_n, C)
+    pin = _cummax(jnp.where(chan_oh, i_idx[..., None, :], -1),
+                  exclusive=True, fill=-1)
+    fb_pin = _take(fb, jnp.maximum(pin, 0).reshape(
+        pin.shape[:-2] + (ch_n * C,))).reshape(pin.shape)
+    linked = chan_oh & (pin >= 0) & (fb_pin == fb[..., None, :])
+    we = jnp.where(chan_oh,
+                   busy + jnp.where(linked, lat_intra[..., None, :], 0.0),
+                   0.0)
+    chan_W = _cumsum(we)                                    # (..., ch_n, C)
+    chan_last = jnp.max(jnp.where(chan_oh, i_idx[..., None, :], -1),
+                        axis=-1)                            # (..., ch_n)
+    flatW = chan_W.reshape(chan_W.shape[:-2] + (ch_n * C,))
+    W_all = _take(flatW, ch * C + i_idx)
+    we_req = _take(we.reshape(we.shape[:-2] + (ch_n * C,)),
+                   ch * C + i_idx)
+
+    # Bank links whose channel path already outweighs their lat can never
+    # dominate (completions grow by >= W_i - W_p along the path): prune
+    # them from the iterated gather.  Exact — only provably-dominated
+    # max() terms go; what survives feeds the next pass's channel
+    # closure so bank-raised completions propagate into channel chains.
+    W_prev = jnp.where(intra, _take(W_all, jnp.maximum(prev_bank, 0)), 0.0)
+    prev_link = jnp.where(intra & (lat_intra + busy > W_all - W_prev),
+                          prev_bank, -1)
+
+    # ---- in-flight-window direction indices per queue group ---------------
+    rdx = jnp.zeros_like(fb)
+    wdx = jnp.zeros_like(fb)
+    nr, nw = [], []
+    for g in range(n_qg):
+        rm = r_mask & (qg == g)
+        d = _cumsum(rm.astype(jnp.int32)) - rm
+        rdx = jnp.where(rm, d, rdx)
+        nr.append(jnp.sum(rm, axis=-1))
+        wm = w_mask & (qg == g)
+        d = _cumsum(wm.astype(jnp.int32)) - wm
+        wdx = jnp.where(wm, d, wdx)
+        nw.append(jnp.sum(wm, axis=-1))
+    nr = jnp.stack(nr, axis=-1)                             # (..., n_qg)
+    nw = jnp.stack(nw, axis=-1)
+
+    # intra-chunk queue-head sources exist only when a queue is shorter
+    # than the chunk (src = request of the read/write Q back)
+    src = jnp.full(fb.shape, -1, jnp.int32)
+    if Qr < C or Qw < C:
+        same_g = qg[..., None, :] == qg[..., :, None]
+        eq_r = (rdx[..., None, :] == (rdx[..., :, None] - Qr)) & \
+            r_mask[..., None, :] & r_mask[..., :, None] & same_g
+        eq_w = (wdx[..., None, :] == (wdx[..., :, None] - Qw)) & \
+            w_mask[..., None, :] & w_mask[..., :, None] & same_g
+        eq = jnp.where(w[..., :, None], eq_w, eq_r)
+        src = jnp.max(jnp.where(eq, i_idx[..., None, :], -1), axis=-1)
+
+    # ring survivors: for residue s0 = d %% Q, the surviving writer is the
+    # request with the largest direction index d >= n_dir - Q (if any);
+    # the slot it lands in is (s0 + idx0) %% Q — a rotation applied at
+    # scan time with the carried queue counter.
+    def survivors(mask, dix, ndir, Q):
+        if Q >= C:
+            # every chunk request survives (dix < C <= Q) and residues
+            # are the direction indices themselves: a (C, C) equality
+            # map padded to Q slots, no occupancy test needed
+            oh = (jnp.arange(C)[:, None] == dix[..., None, :]) & \
+                mask[..., None, :]                          # (..., C, C)
+            got = jnp.max(jnp.where(oh, i_idx[..., None, :], -1), axis=-1)
+            padq = [(0, 0)] * (got.ndim - 1) + [(0, Q - C)]
+            return jnp.pad(got, padq, constant_values=-1)
+        surv = mask & (dix + Q >= _take(ndir, qg))
+        oh = (jnp.arange(Q)[:, None] == (dix % Q)[..., None, :]) & \
+            surv[..., None, :]                              # (..., Q, C)
+        return jnp.max(jnp.where(oh, i_idx[..., None, :], -1), axis=-1)
+
+    ring_src_r = jnp.stack(
+        [survivors(r_mask & (qg == g), rdx, nr, Qr)
+         for g in range(n_qg)], axis=-2)                    # (..., n_qg, Q)
+    ring_src_w = jnp.stack(
+        [survivors(w_mask & (qg == g), wdx, nw, Qw)
+         for g in range(n_qg)], axis=-2)
+
+    core_mask = jnp.stack([v & (cid == s) for s in range(n_cores)],
+                          axis=-2)                          # (..., cores, C)
+    return dict(
+        intra=intra, row_prev=row_prev, prev_link=prev_link,
+        Vr=Vr, we=we_req, chan_oh=chan_oh, chan_W=chan_W,
+        last_b=last_b, chan_last=chan_last,
+        qg=qg, rdx=rdx, wdx=wdx, src=src, nr=nr, nw=nw,
+        ring_src_r=ring_src_r, ring_src_w=ring_src_w,
+        core_mask=core_mask)
+
+
+# --------------------------------------------------------------------------
+# One chunk: carry-dependent resolve (runs inside the scan; batch-native)
+# --------------------------------------------------------------------------
+
+def _chunk_step(carry, x, *, cfg: DramConfig, busy: float, engine: str,
+                max_passes: int, tol: float, n_cores: int, n_qg: int,
+                interpret: Optional[bool]):
+    (bank_free, open_row, bus_free, ring_r, ring_w, ir, iw, shift,
+     hits, misses, conflicts) = carry
+    t, fb, ch, row, w, v, cid, pre = x
+    C = t.shape[-1]
+    ch_n = cfg.channels
+    Qr, Qw = cfg.read_queue, cfg.write_queue
+    f32 = jnp.float32
+    neg = f32(-jnp.inf)
+    i_idx = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), fb.shape)
+
+    # classification: intra links are precomputed; only first-per-bank
+    # requests consult the carried open row
+    seen = jnp.where(pre["intra"], pre["row_prev"], _take(open_row, fb))
+    lat, hit, empty = row_buffer_latency(cfg, seen, row)
+    lat = lat.astype(f32)
+
+    qg = pre["qg"]
+    ir_g = ir[..., 0:1] if n_qg == 1 else _take(ir, qg)
+    iw_g = iw[..., 0:1] if n_qg == 1 else _take(iw, qg)
+    sl_r = (pre["rdx"] + ir_g) % Qr
+    sl_w = (pre["wdx"] + iw_g) % Qw
+    flat_rr = ring_r.reshape(ring_r.shape[:-2] + (n_qg * Qr,))
+    flat_rw = ring_w.reshape(ring_w.shape[:-2] + (n_qg * Qw,))
+    head0 = jnp.where(w, _take(flat_rw, qg * Qw + sl_w),
+                      _take(flat_rr, qg * Qr + sl_r))
+    head_src = pre["src"]
+    prev_link = pre["prev_link"]
+    Vr = pre["Vr"]
+    chan_oh, chan_W = pre["chan_oh"], pre["chan_W"]
+    core_mask = pre["core_mask"]
+    bank0 = _take(bank_free, fb)
+    shift0 = shift[..., 0:1] if n_cores == 1 else _take(shift, cid)
+    bus_W = bus_free[..., None] + chan_W
+    # bank-closure mask: order-only, rebuilt per step (cheap broadcast
+    # compares; materializing it in the hoisted precompute would stream
+    # (chunks, C, C) tensors through memory instead)
+    jlt = jnp.arange(C, dtype=jnp.int32)
+    mbank = (fb[..., None, :] == fb[..., :, None]) & v[..., None, :] & \
+        (jlt[None, :] <= jlt[:, None])
+    intra_heads = Qr < C or Qw < C
+
+    def one_pass(done):
+        if intra_heads:
+            head = jnp.maximum(head0, _take_guard(done, head_src, neg))
+        else:
+            head = head0
+        g = jnp.where(v, head - t, neg)
+        if n_cores == 1:
+            ss = jnp.maximum(shift0,
+                             _cummax(jnp.where(v, g, neg), exclusive=True))
+        else:
+            gs = jnp.where(core_mask, g[..., None, :], neg)
+            ss_c = jnp.maximum(shift[..., None],
+                               _cummax(gs, exclusive=True))
+            ss = _take(ss_c.reshape(ss_c.shape[:-2] + (n_cores * C,)),
+                       cid * C + i_idx)
+        issue_ok = jnp.maximum(t + ss, head)
+        bankp = jnp.maximum(bank0, _take_guard(done, prev_link, neg))
+        # seed the closures with the previous iterate: completions grow
+        # by at least the channel edge weights, so done_j + (W_i - W_j)
+        # is a true lower bound — this is how bank-raised completions of
+        # *other* banks propagate down the channel chain across passes
+        s_src = jnp.maximum(jnp.maximum(issue_ok, bankp) + lat + busy,
+                            done)
+        # channel closure: weighted max-plus prefix, stacked over the
+        # few channels (thin log-step scans; un-stacked by a masked sum
+        # over the short channel axis — cheaper than a gather)
+        gg = jnp.where(chan_oh, s_src[..., None, :] - chan_W, neg)
+        u_c = jnp.maximum(_cummax(gg) + chan_W, bus_W)
+        u = jnp.sum(jnp.where(chan_oh, u_c, 0.0), axis=-2)
+        # bank closure: one masked (C, C) row reduction (banks are many,
+        # so the matrix contraction beats a per-bank stacked scan)
+        d = jnp.max(jnp.where(mbank, jnp.where(v, u - Vr, neg)[
+            ..., None, :], neg), axis=-1) + Vr
+        return jnp.where(v, d, 0.0)
+
+    if engine == "pallas":
+        ghead = jlt[None, :] == head_src[:, None]
+        gprev = jlt[None, :] == prev_link[:, None]
+        mchan_m = (ch[None, :] == ch[:, None]) & v[None, :] & \
+            (jlt[None, :] <= jlt[:, None])
+        mshift_m = (cid[None, :] == cid[:, None]) & v[None, :] & \
+            (jlt[None, :] < jlt[:, None])
+        done = _pallas_fixed_point(
+            t, lat, head0, bank0, _take(bus_free, ch), shift0, pre["we"],
+            v, ghead, gprev, mbank, mshift_m, mchan_m, busy=busy,
+            max_passes=(C + 2) if max_passes is None else max_passes,
+            tol=tol, interpret=interpret)
+    elif max_passes is None:
+        # adaptive: three statically-unrolled passes cover realistic
+        # streams (the closures resolve whole chains per pass); if the
+        # third pass still moved something by more than tol, fall into a
+        # while_loop until the fixed point (monotone from below, so the
+        # residual is bounded; capped at C + 2 passes).  The cond keeps
+        # the expensive loop off the hot path — the scan body is
+        # batch-native, so only the taken branch executes.
+        d_prev = one_pass(jnp.zeros(t.shape, f32))
+        for _ in range(2):
+            d_prev = one_pass(d_prev)
+        d_last = one_pass(d_prev)
+
+        def slow(dd):
+            def cond(s):
+                return jnp.logical_and(s[2] < C + 2,
+                                       jnp.any(s[1] - s[0] > tol))
+
+            def body(s):
+                return (s[1], one_pass(s[1]), s[2] + 1)
+
+            _, dn, _ = jax.lax.while_loop(cond, body,
+                                          (dd[0], dd[1], jnp.int32(4)))
+            return dn
+
+        done = jax.lax.cond(jnp.any(d_last - d_prev > tol), slow,
+                            lambda dd: dd[1], (d_prev, d_last))
+    else:
+        # statically unrolled fixed pass count (opt-in fast path: a
+        # data-dependent while_loop in the scan body costs extra on CPU
+        # backends and defeats fusion)
+        done = one_pass(jnp.zeros(t.shape, f32))
+        for _ in range(max_passes - 1):
+            done = one_pass(done)
+
+    # ---- final derived state + carry update (gathers only) ---------------
+    if intra_heads:
+        head = jnp.maximum(head0, _take_guard(done, head_src, neg))
+    else:
+        head = head0
+    g = jnp.where(v, head - t, neg)
+    shift = jnp.maximum(
+        shift, jnp.max(jnp.where(pre["core_mask"], g[..., None, :], neg),
+                       axis=-1))
+
+    hits = hits + jnp.sum(hit & v, axis=-1)
+    misses = misses + jnp.sum(empty & v, axis=-1)
+    conflicts = conflicts + jnp.sum((~hit) & (~empty) & v, axis=-1)
+
+    lb = pre["last_b"]
+    bank_free = jnp.where(lb >= 0, _take(done, jnp.maximum(lb, 0)),
+                          bank_free)
+    open_row = jnp.where(lb >= 0, _take(row, jnp.maximum(lb, 0)),
+                         open_row)
+
+    lc = pre["chan_last"]
+    bus_free = jnp.where(lc >= 0, _take(done, jnp.maximum(lc, 0)),
+                         bus_free)
+
+    # rings: rotate the carry-free survivor map by the carried counter
+    def ring_update(ring, ring_src, idx0, Q):
+        s0 = (jnp.arange(Q) - idx0[..., None]) % Q          # (..., n_qg, Q)
+        srcs = jnp.take_along_axis(ring_src, s0, axis=-1)
+        flat = srcs.reshape(srcs.shape[:-2] + (n_qg * Q,))
+        got = _take_guard(done, flat, 0.0).reshape(srcs.shape)
+        return jnp.where(srcs >= 0, got, ring)
+
+    ring_r = ring_update(ring_r, pre["ring_src_r"], ir, Qr)
+    ring_w = ring_update(ring_w, pre["ring_src_w"], iw, Qw)
+    ir = ir + pre["nr"]
+    iw = iw + pre["nw"]
+
+    new_carry = (bank_free, open_row, bus_free, ring_r, ring_w, ir, iw,
+                 shift, hits, misses, conflicts)
+    return new_carry, (done, jnp.where(v, done - t, 0.0))
+
+
+# --------------------------------------------------------------------------
+# Stream-level driver: hoisted precompute + scan over chunks
+# --------------------------------------------------------------------------
+
+def replay_decoded(t_issue, flat_bank, ch, row, is_write, valid,
+                   cfg: DramConfig, gran_bytes: int = 64, *,
+                   engine: str = "xla", chunk: Optional[int] = None,
+                   max_passes: Optional[int] = None,
+                   tol: float = DEFAULT_TOL, n_cores: int = 1,
+                   core_id=None, per_channel_queues: bool = False,
+                   interpret: Optional[bool] = None):
+    """Chunked replay of a pre-decoded request stream.
+
+    Batch-native: every input may carry leading batch dimensions
+    (`(..., n)`) and the replay processes the whole batch in one chunk
+    scan — this is how `Simulator.sweep` replays a (designs, ops) stream
+    batch without a vmap wrapper.  Pure traced function (safe under
+    jit/vmap; `cfg`, `gran_bytes` and the keyword knobs must be static
+    in a jitted caller).  Returns a dict with the raw per-request
+    completion times `done` (undefined where ~valid — callers
+    substitute their engine's no-op value), per-request round-trip
+    `latency`, the per-core backpressure `shift` (shape
+    (..., n_cores)), and the exact row hit/empty/conflict counters.
+
+    per_channel_queues selects the shared-DRAM semantics (per-channel
+    in-flight rings, per-core shift) of `simulate_shared_dram`; the
+    default matches `simulate_dram`'s single global ring pair.  tol is
+    the fixed-point stopping threshold in cycles (0.0 = iterate to the
+    exact fixed point).  The "pallas" engine expects 1-D streams.
+    """
+    n = t_issue.shape[-1]
+    batch = t_issue.shape[:-1]
+    C = DEFAULT_CHUNK if chunk is None else int(chunk)
+    C = max(1, min(C, max(n, 1)))
+    ch_n, bk_n = cfg.channels, cfg.banks_per_channel
+    Qr, Qw = cfg.read_queue, cfg.write_queue
+    passes = None if max_passes is None else max(1, int(max_passes))
+    n_qg = ch_n if per_channel_queues else 1
+    busy = float(max(1.0, gran_bytes / cfg.bandwidth_bytes_per_cycle))
+    f32 = jnp.float32
+
+    if core_id is None:
+        core_id = jnp.zeros(t_issue.shape, jnp.int32)
+
+    pad = (-n) % C
+    nc = (n + pad) // C
+
+    def _prep(x, fill, dtype):
+        x = jnp.broadcast_to(jnp.asarray(x, dtype), batch + (n,))
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.full(batch + (pad,), fill, dtype)], axis=-1)
+        # (..., nc, C) -> (nc, ..., C): the chunk axis leads for the scan
+        return jnp.moveaxis(x.reshape(batch + (nc, C)), -2, 0)
+
+    xs = (_prep(t_issue, 0.0, f32), _prep(flat_bank, 0, jnp.int32),
+          _prep(ch, 0, jnp.int32), _prep(row, 0, jnp.int32),
+          _prep(is_write, False, bool), _prep(valid, False, bool),
+          _prep(core_id, 0, jnp.int32))
+
+    pre = _precompute_chunk(*xs, cfg=cfg, busy=busy, n_cores=n_cores,
+                            n_qg=n_qg)
+
+    carry0 = (jnp.zeros(batch + (ch_n * bk_n,), f32),
+              -jnp.ones(batch + (ch_n * bk_n,), jnp.int32),
+              jnp.zeros(batch + (ch_n,), f32),
+              jnp.zeros(batch + (n_qg, Qr), f32),
+              jnp.zeros(batch + (n_qg, Qw), f32),
+              jnp.zeros(batch + (n_qg,), jnp.int32),
+              jnp.zeros(batch + (n_qg,), jnp.int32),
+              jnp.zeros(batch + (n_cores,), f32),
+              jnp.zeros(batch, jnp.int32), jnp.zeros(batch, jnp.int32),
+              jnp.zeros(batch, jnp.int32))
+
+    step = functools.partial(
+        _chunk_step, cfg=cfg, busy=busy, engine=engine,
+        max_passes=passes, tol=float(tol), n_cores=n_cores, n_qg=n_qg,
+        interpret=interpret)
+    carry, (done, rt) = jax.lax.scan(step, carry0, xs + (pre,))
+
+    def _unchunk(y):
+        return jnp.moveaxis(y, 0, -2).reshape(batch + (nc * C,))[..., :n]
+
+    return dict(done=_unchunk(done), latency=_unchunk(rt),
+                shift=carry[7], hits=carry[8], misses=carry[9],
+                conflicts=carry[10])

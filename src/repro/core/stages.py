@@ -203,8 +203,12 @@ class FastDramStage(DramStage):
 class CycleDramStage(DramStage):
     """Cycle-accurate (Ramulator-like) DRAM: tile-prefetch trace through
     banked channels with finite queues, folded + scaled beyond the
-    request cap."""
+    request cap. `engine` selects the replay engine (core.replay)."""
     name = "dram[cycle]"
+
+    def __init__(self, core_index: int = 0, engine: Optional[str] = None):
+        super().__init__(core_index)
+        self.engine = engine
 
     def stalls(self, ctx: OpContext) -> None:
         cfg = ctx.cfg
@@ -215,7 +219,7 @@ class CycleDramStage(DramStage):
         folds = max(1, int(np.ceil(n_sim / 32)))
         t, a, w = tile_prefetch_trace(n_sim * gran // folds, folds,
                                       ctx.comp / max(folds, 1) / scale, gran)
-        res = simulate_dram(t, a, w, cfg.dram, gran)
+        res = simulate_dram(t, a, w, cfg.dram, gran, engine=self.engine)
         ctx.stall = float(res.stall_cycles) * scale
         ctx.dram_stats = dict(
             row_hits=int(res.row_hits), row_misses=int(res.row_misses),
@@ -234,12 +238,14 @@ class TraceDramStage(DramStage):
     here respond to dataflow, tiling and layout."""
     name = "dram[trace]"
 
-    def __init__(self, core_index: int = 0, spec=None):
+    def __init__(self, core_index: int = 0, spec=None,
+                 engine: Optional[str] = None):
         super().__init__(core_index)
         if spec is None:
             from ..trace.generator import DEFAULT_SPEC
             spec = DEFAULT_SPEC
         self.spec = spec
+        self.engine = engine
 
     def stalls(self, ctx: OpContext) -> None:
         from ..trace.generator import gemm_trace_stats
@@ -250,7 +256,8 @@ class TraceDramStage(DramStage):
             cfg.dataflow, op.M, op.N, op.K, core.rows, core.cols, ctx.comp,
             dram["dram_ifmap"], dram["dram_filter"],
             dram["dram_ofmap_writes"], dram["dram_ofmap_reads"],
-            cfg.dram, cfg.memory.word_bytes, self.spec)
+            cfg.dram, cfg.memory.word_bytes, self.spec,
+            engine=self.engine)
         ctx.stall = float(res["stall_cycles"])
         ctx.dram_stats = dict(
             row_hits=int(res["row_hits"]), row_misses=int(res["row_misses"]),
@@ -309,21 +316,24 @@ class EnergyStage(Stage):
 
 
 def build_pipeline(fidelity: str = "fast", *, core_index: int = 0,
-                   trace_spec=None) -> Tuple[Stage, ...]:
+                   trace_spec=None,
+                   engine: Optional[str] = None) -> Tuple[Stage, ...]:
     """The canonical GEMM pipeline for a fidelity level.
 
     core_index: the core whose geometry every core-dependent stage
     (mapping, sparsity, sram, dram, layout) analyzes — heterogeneous
     meshes model one consistent member. trace_spec: optional
-    `repro.trace.TraceSpec` for the trace fidelity.
+    `repro.trace.TraceSpec` for the trace fidelity. engine: DRAM replay
+    engine for the cycle/trace stages (`core.replay.ENGINES`;
+    None = default, i.e. the chunked bank-parallel replay).
     """
     if fidelity not in FIDELITIES:
         raise ValueError(f"fidelity must be one of {FIDELITIES}, "
                          f"got {fidelity!r}")
     if fidelity == "cycle":
-        dram: DramStage = CycleDramStage(core_index)
+        dram: DramStage = CycleDramStage(core_index, engine)
     elif fidelity == "trace":
-        dram = TraceDramStage(core_index, trace_spec)
+        dram = TraceDramStage(core_index, trace_spec, engine)
     else:
         dram = FastDramStage(core_index)
     return (MappingStage(core_index), PartitionStage(),

@@ -30,8 +30,9 @@ import jax
 import jax.numpy as jnp
 
 from ..core import dataflow as dfm
+from ..core import replay as rp
 from ..core.accelerator import AcceleratorConfig, DramConfig
-from ..core.dram import decode_requests, row_buffer_latency
+from ..core.dram import check_addresses, decode_requests, row_buffer_latency
 from .generator import (_BIG_T, DEFAULT_SPEC, REGION_SPAN, TraceSpec,
                         gemm_request_stream)
 
@@ -49,14 +50,17 @@ class SharedDramResult:
     total_cycles: jnp.ndarray
 
 
-@partial(jax.jit, static_argnames=("n_cores", "cfg", "gran_bytes"))
 def simulate_shared_dram(t_issue: jnp.ndarray, addr: jnp.ndarray,
                          is_write: jnp.ndarray, core_id: jnp.ndarray,
                          valid: jnp.ndarray, n_cores: int, cfg: DramConfig,
-                         gran_bytes: int = 64) -> SharedDramResult:
-    """The `simulate_dram` scan generalized to a merged multi-core stream.
+                         gran_bytes: int = 64,
+                         engine: Optional[str] = None,
+                         chunk: Optional[int] = None,
+                         max_passes: Optional[int] = None,
+                         tol: Optional[float] = None) -> SharedDramResult:
+    """The `simulate_dram` model generalized to a merged multi-core stream.
 
-    Differences from the single-stream scan (both matter for contention):
+    Differences from the single-stream model (both matter for contention):
     - request queues are per *channel* (a core hammering channel 0 cannot
       exhaust channel 1's in-flight window), and
     - the backpressure `shift` is per *core* — one core's queue stalls
@@ -64,11 +68,61 @@ def simulate_shared_dram(t_issue: jnp.ndarray, addr: jnp.ndarray,
       (their delay comes physically, through bus/bank/queue occupancy).
 
     With disjoint channel pinning the per-core state never couples, so
-    the scan decomposes exactly into per-core isolated runs.
+    the model decomposes exactly into per-core isolated runs.
+
+    engine: None -> `replay.DEFAULT_ENGINE`; "xla" | "pallas" run the
+    chunked bank-parallel replay with per-channel queues and per-core
+    shift folded into the chunk carry; "reference" keeps the original
+    per-request scan.
     """
-    ch_n, bk_n = cfg.channels, cfg.banks_per_channel
+    engine = rp.resolve_engine(engine)
+    check_addresses(addr)
+    return _simulate_shared_dram(t_issue, addr, is_write, core_id, valid,
+                                 n_cores, cfg, gran_bytes, engine, chunk,
+                                 max_passes, tol)
+
+
+@partial(jax.jit, static_argnames=("n_cores", "cfg", "gran_bytes", "engine",
+                                   "chunk", "max_passes", "tol"))
+def _simulate_shared_dram(t_issue, addr, is_write, core_id, valid,
+                          n_cores: int, cfg: DramConfig, gran_bytes: int,
+                          engine: str, chunk, max_passes,
+                          tol) -> SharedDramResult:
     busy = jnp.maximum(1.0, gran_bytes / cfg.bandwidth_bytes_per_cycle)
     flat_bank, ch, row = decode_requests(addr, cfg)
+    if engine == "reference":
+        done, shift, hits, misses, conflicts = _reference_shared_scan(
+            t_issue, flat_bank, ch, row, is_write, valid, core_id,
+            n_cores, cfg, busy)
+    else:
+        out = rp.replay_decoded(
+            t_issue.astype(jnp.float32), flat_bank, ch, row, is_write,
+            valid, cfg, gran_bytes, engine=engine, chunk=chunk,
+            max_passes=max_passes,
+            **({} if tol is None else dict(tol=tol)),
+            n_cores=n_cores, core_id=core_id.astype(jnp.int32),
+            per_channel_queues=True)
+        done = jnp.where(valid, out["done"], 0.0)
+        shift = out["shift"]
+        hits, misses, conflicts = out["hits"], out["misses"], out["conflicts"]
+
+    nominal = cfg.tRCD + cfg.tCAS + busy
+    ti = t_issue.astype(jnp.float32)
+    onehot = (core_id[None, :] == jnp.arange(n_cores)[:, None]) & valid
+    last_done = jnp.max(jnp.where(onehot, done[None, :], 0.0), axis=1)
+    last_issue = jnp.max(jnp.where(onehot, ti[None, :], 0.0), axis=1)
+    tail = jnp.maximum(0.0, last_done - (last_issue + shift + nominal))
+    return SharedDramResult(
+        per_core_stall=shift + tail,
+        per_core_last=last_done,
+        row_hits=hits, row_misses=misses, row_conflicts=conflicts,
+        total_cycles=jnp.max(jnp.where(valid, done, 0.0)))
+
+
+def _reference_shared_scan(t_issue, flat_bank, ch, row, is_write, valid,
+                           core_id, n_cores: int, cfg: DramConfig, busy):
+    """Original per-request shared-stream scan (engine='reference')."""
+    ch_n, bk_n = cfg.channels, cfg.banks_per_channel
 
     Qr, Qw = cfg.read_queue, cfg.write_queue
 
@@ -107,20 +161,7 @@ def simulate_shared_dram(t_issue: jnp.ndarray, addr: jnp.ndarray,
     xs = (t_issue.astype(jnp.float32), flat_bank, ch, row, is_write, valid,
           core_id.astype(jnp.int32))
     carry, done = jax.lax.scan(step, carry0, xs)
-    shift = carry[7]
-    hits, misses, conflicts = carry[8], carry[9], carry[10]
-
-    nominal = cfg.tRCD + cfg.tCAS + busy
-    ti = t_issue.astype(jnp.float32)
-    onehot = (core_id[None, :] == jnp.arange(n_cores)[:, None]) & valid
-    last_done = jnp.max(jnp.where(onehot, done[None, :], 0.0), axis=1)
-    last_issue = jnp.max(jnp.where(onehot, ti[None, :], 0.0), axis=1)
-    tail = jnp.maximum(0.0, last_done - (last_issue + shift + nominal))
-    return SharedDramResult(
-        per_core_stall=shift + tail,
-        per_core_last=last_done,
-        row_hits=hits, row_misses=misses, row_conflicts=conflicts,
-        total_cycles=jnp.max(jnp.where(valid, done, 0.0)))
+    return done, carry[7], carry[8], carry[9], carry[10]
 
 
 # --------------------------------------------------------------------------
@@ -190,7 +231,8 @@ class ContentionResult:
 def multicore_contention(cfg: AcceleratorConfig, M: int, N: int, K: int,
                          scheme: str = "spatial",
                          private_channels: bool = False,
-                         spec: Optional[TraceSpec] = None) -> ContentionResult:
+                         spec: Optional[TraceSpec] = None,
+                         engine: Optional[str] = None) -> ContentionResult:
     """Generate per-core traces for one partitioned GEMM and compare the
     isolated DRAM model against the merged shared-channel model.
 
@@ -258,9 +300,14 @@ def multicore_contention(cfg: AcceleratorConfig, M: int, N: int, K: int,
 
     def run(t, a, w, v, cid, nc):
         order = jnp.argsort(jnp.where(v, t, _BIG_T))
+        # The isolated-vs-shared comparison (and the exact private-channel
+        # decomposition invariant) needs both runs at the true fixed point,
+        # not the sweep default's tolerance-bounded relaxation: this is an
+        # eager analysis path, so iterate the adaptive escape to tol=0.
         return simulate_shared_dram(t[order], a[order], w[order],
                                     cid[order], v[order], nc, cfg.dram,
-                                    spec.gran_bytes)
+                                    spec.gran_bytes, engine=engine,
+                                    tol=0.0)
 
     # isolated: each core alone on the (same-routed) memory system
     iso = []

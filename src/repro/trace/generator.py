@@ -258,18 +258,21 @@ def gemm_request_stream(dataflow: str, M, N, K, R, C, comp,
 
 
 @partial(jax.jit, static_argnames=("dataflow", "dram_cfg", "word_bytes",
-                                   "spec"))
+                                   "spec", "engine"))
 def gemm_trace_stats(dataflow: str, M, N, K, R, C, comp,
                      ifmap_elems, filter_elems, ofmap_write_elems,
                      ofmap_read_elems, dram_cfg: DramConfig,
                      word_bytes: int = 2,
-                     spec: TraceSpec = TraceSpec()) -> Dict[str, jnp.ndarray]:
+                     spec: TraceSpec = TraceSpec(),
+                     engine: str = None) -> Dict[str, jnp.ndarray]:
     """Generate the op's trace and run it through the cycle-accurate DRAM
-    scan. Fully traced (vmappable over ops and design points)."""
+    replay. Fully traced (vmappable over ops and design points). engine
+    selects the replay engine (`core.replay.ENGINES`; None = default)."""
     t, addr, w, valid, scale = gemm_request_stream(
         dataflow, M, N, K, R, C, comp, ifmap_elems, filter_elems,
         ofmap_write_elems, ofmap_read_elems, word_bytes, spec)
-    res = simulate_dram(t, addr, w, dram_cfg, spec.gran_bytes, valid=valid)
+    res = simulate_dram(t, addr, w, dram_cfg, spec.gran_bytes, valid=valid,
+                        engine=engine)
     nval = jnp.maximum(1.0, jnp.sum(valid).astype(jnp.float32))
     refs = jnp.maximum(1, res.row_hits + res.row_misses + res.row_conflicts)
     return dict(
@@ -308,10 +311,12 @@ def trace_op(cfg: AcceleratorConfig, op: Op, spec: TraceSpec = TraceSpec(),
 
 def trace_op_stats(cfg: AcceleratorConfig, op: Op,
                    spec: TraceSpec = TraceSpec(),
-                   core_index: int = 0) -> Dict[str, jnp.ndarray]:
+                   core_index: int = 0,
+                   engine: str = None) -> Dict[str, jnp.ndarray]:
     """Row-buffer / stall statistics of one op's generated trace."""
     core, comp, dram = _op_regions(cfg, op, core_index)
     return gemm_trace_stats(
         cfg.dataflow, op.M, op.N, op.K, core.rows, core.cols, comp,
         dram["dram_ifmap"], dram["dram_filter"], dram["dram_ofmap_writes"],
-        dram["dram_ofmap_reads"], cfg.dram, cfg.memory.word_bytes, spec)
+        dram["dram_ofmap_reads"], cfg.dram, cfg.memory.word_bytes, spec,
+        engine=engine)

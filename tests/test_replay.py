@@ -1,0 +1,301 @@
+"""ISSUE 3 differential suite: chunked bank-parallel replay vs reference.
+
+The chunked engines ("xla", "pallas") must reproduce the retained
+per-request reference scan: row hit/empty/conflict counts exactly
+(classification is order-only and shared), completion/stall/total times
+to a tight relative tolerance (the closed-form closures re-associate the
+f32 `busy` accumulation), and bit-exactly when the timing constants are
+exactly representable.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Simulator, preset_grid
+from repro.core import replay
+from repro.core.accelerator import DramConfig
+from repro.core.dram import (decode_requests, linear_trace, replay_requests,
+                             simulate_dram, strided_trace,
+                             tile_prefetch_trace)
+from repro.core.topology import Op
+from repro.trace.contention import simulate_shared_dram
+
+ENGINES = ("xla", "pallas")
+RTOL = 1e-3            # acceptance tolerance on stall/total cycles
+
+
+def assert_matches(ref, new, rtol=RTOL):
+    # classification is exact by construction
+    for k in ("row_hits", "row_misses", "row_conflicts"):
+        assert int(getattr(new, k)) == int(getattr(ref, k)), k
+    assert float(new.bytes_moved) == float(ref.bytes_moved)
+    np.testing.assert_allclose(float(new.stall_cycles),
+                               float(ref.stall_cycles), rtol=rtol, atol=5e-2)
+    np.testing.assert_allclose(float(new.total_cycles),
+                               float(ref.total_cycles), rtol=rtol, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(new.complete),
+                               np.asarray(ref.complete), rtol=rtol, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(new.latency),
+                               np.asarray(ref.latency), rtol=rtol, atol=5e-2)
+
+
+def random_stream(seed, n=768, span=1 << 22, p_write=0.3, p_valid=0.9):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    t = jnp.sort(jax.random.uniform(ks[0], (n,)) * 4.0 * n)
+    addr = (jax.random.randint(ks[1], (n,), 0, span) // 64) * 64
+    w = jax.random.bernoulli(ks[2], p_write, (n,))
+    valid = jax.random.bernoulli(ks[3], p_valid, (n,))
+    return t, addr, w, valid
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_random_streams_match_reference(engine, seed):
+    """Randomized mixed read/write streams with valid masks."""
+    t, a, w, valid = random_stream(seed)
+    cfg = DramConfig()
+    ref = simulate_dram(t, a, w, cfg, valid=valid, engine="reference")
+    new = simulate_dram(t, a, w, cfg, valid=valid, engine=engine)
+    assert_matches(ref, new)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_adversarial_same_bank_bursts(engine):
+    """Alternating rows in a single bank: an unbroken row-conflict chain
+    (the worst case for naive chunk relaxation — the bank closure must
+    resolve the whole chain)."""
+    n = 512
+    t = jnp.arange(n, dtype=jnp.float32) * 0.5
+    a = (jnp.arange(n) % 2) * (1 << 21)       # two rows, same bank
+    w = jnp.zeros((n,), bool)
+    cfg = DramConfig(channels=1, banks_per_channel=1)
+    ref = simulate_dram(t, a, w, cfg, engine="reference")
+    new = simulate_dram(t, a, w, cfg, engine=engine)
+    assert int(ref.row_conflicts) > n // 2    # the chain is real
+    assert_matches(ref, new)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_adversarial_alternating_banks(engine):
+    """Two banks alternating within one channel: every same-bank link
+    skips a request, so nothing is contiguous and the closures + pruned
+    gather must still converge."""
+    n = 512
+    t = jnp.arange(n, dtype=jnp.float32) * 0.5
+    a = (jnp.arange(n) % 2) * (1 << 17) + (jnp.arange(n) // 2 % 2) * (1 << 21)
+    w = jnp.zeros((n,), bool)
+    cfg = DramConfig(channels=1, banks_per_channel=4)
+    assert_matches(simulate_dram(t, a, w, cfg, engine="reference"),
+                   simulate_dram(t, a, w, cfg, engine=engine))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_queue_saturating_bursts(engine):
+    """Whole-tile prefetch bursts against tiny in-flight windows: the
+    backpressure shift dominates and intra-chunk queue-head chains appear
+    (queues shorter than the chunk)."""
+    t, a, w = tile_prefetch_trace(tile_bytes=20 * 1024, n_tiles=48,
+                                  compute_per_tile=400, gran_bytes=64)
+    cfg = DramConfig(channels=2, read_queue=8, write_queue=4)
+    ref = simulate_dram(t, a, w, cfg, engine="reference")
+    new = simulate_dram(t, a, w, cfg, engine=engine)
+    assert float(ref.stall_cycles) > 1e4      # saturated, not idle
+    assert_matches(ref, new)
+
+
+def test_bit_exact_when_busy_is_representable():
+    """With bandwidth such that the bus occupancy is an exact f32 (and
+    integer DRAM timings), the closed-form closures commit the same
+    rounding as the serial scan: results are bit-identical."""
+    t, a, w = tile_prefetch_trace(tile_bytes=20 * 1024, n_tiles=64,
+                                  compute_per_tile=400, gran_bytes=64)
+    cfg = DramConfig(channels=2, read_queue=8, write_queue=4,
+                     bandwidth_bytes_per_cycle=16.0)   # busy = 4.0 exact
+    ref = simulate_dram(t, a, w, cfg, engine="reference")
+    new = simulate_dram(t, a, w, cfg, engine="xla")
+    assert np.array_equal(np.asarray(ref.complete), np.asarray(new.complete))
+    assert float(ref.stall_cycles) == float(new.stall_cycles)
+
+
+def test_chunk_boundaries_are_invisible():
+    """The same stream replayed with different chunk sizes agrees (the
+    scan carry is exactly the reference state)."""
+    t, a, w, valid = random_stream(7)
+    cfg = DramConfig()
+    ref = simulate_dram(t, a, w, cfg, valid=valid, engine="reference")
+    for chunk in (32, 64, 128):
+        assert_matches(ref, simulate_dram(t, a, w, cfg, valid=valid,
+                                          engine="xla", chunk=chunk))
+
+
+def test_streaming_and_strided_statistics():
+    """The qualitative row-buffer contracts survive the new engine."""
+    res = simulate_dram(*linear_trace(2048), DramConfig(channels=1),
+                        engine="xla")
+    assert int(res.row_hits) > 0.9 * 2048
+    st = simulate_dram(*strided_trace(1024, stride_bytes=1 << 16),
+                       DramConfig(channels=1, banks_per_channel=4),
+                       engine="xla")
+    assert int(st.row_conflicts) > int(res.row_conflicts)
+
+
+def test_vmap_over_designs():
+    """The replay stays vmappable over a leading design axis (and agrees
+    with per-stream reference runs)."""
+    t0, a0, w0, v0 = random_stream(3, n=512)
+    t1, a1, w1, v1 = random_stream(4, n=512)
+    cfg = DramConfig()
+    f = jax.vmap(lambda t, a, w, v:
+                 simulate_dram(t, a, w, cfg, valid=v,
+                               engine="xla").stall_cycles)
+    got = np.asarray(f(jnp.stack([t0, t1]), jnp.stack([a0, a1]),
+                       jnp.stack([w0, w1]), jnp.stack([v0, v1])))
+    for i, (t, a, w, v) in enumerate([(t0, a0, w0, v0), (t1, a1, w1, v1)]):
+        ref = simulate_dram(t, a, w, cfg, valid=v, engine="reference")
+        np.testing.assert_allclose(got[i], float(ref.stall_cycles),
+                                   rtol=RTOL, atol=5e-2)
+
+
+def test_batch_native_replay_requests():
+    """`replay_requests` is batch-native: a (2, n) decoded batch replays
+    in one scan and matches per-stream runs (the decode-hoisted entry
+    `Simulator.sweep` uses)."""
+    streams = [random_stream(s, n=512) for s in (5, 6)]
+    cfg = DramConfig()
+    fb, ch, row = [], [], []
+    for t, a, w, v in streams:
+        f, c, r = decode_requests(a, cfg)
+        fb.append(f), ch.append(c), row.append(r)
+    batched = replay_requests(
+        jnp.stack([s[0] for s in streams]), jnp.stack(fb), jnp.stack(ch),
+        jnp.stack(row), jnp.stack([s[2] for s in streams]),
+        jnp.stack([s[3] for s in streams]), cfg, 64, engine="xla")
+    assert batched.stall_cycles.shape == (2,)
+    for i, (t, a, w, v) in enumerate(streams):
+        ref = simulate_dram(t, a, w, cfg, valid=v, engine="reference")
+        np.testing.assert_allclose(float(batched.stall_cycles[i]),
+                                   float(ref.stall_cycles),
+                                   rtol=RTOL, atol=5e-2)
+        assert int(batched.row_hits[i]) + int(batched.row_misses[i]) + \
+            int(batched.row_conflicts[i]) == int(ref.row_hits) + \
+            int(ref.row_misses) + int(ref.row_conflicts)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_shared_dram_matches_reference(engine):
+    """Merged multi-core stream: per-channel queues + per-core shift."""
+    n = 600
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    t = jnp.sort(jax.random.uniform(ks[0], (n,)) * 1000)
+    a = (jax.random.randint(ks[1], (n,), 0, 1 << 20) // 64) * 64
+    w = jax.random.bernoulli(ks[2], 0.3, (n,))
+    cid = jax.random.randint(ks[3], (n,), 0, 4)
+    valid = jax.random.bernoulli(ks[4], 0.9, (n,))
+    cfg = DramConfig(channels=2, read_queue=8, write_queue=4)
+    ref = simulate_shared_dram(t, a, w, cid, valid, 4, cfg,
+                               engine="reference")
+    new = simulate_shared_dram(t, a, w, cid, valid, 4, cfg, engine=engine)
+    assert int(new.row_hits) == int(ref.row_hits)
+    assert int(new.row_misses) == int(ref.row_misses)
+    assert int(new.row_conflicts) == int(ref.row_conflicts)
+    np.testing.assert_allclose(np.asarray(new.per_core_stall),
+                               np.asarray(ref.per_core_stall),
+                               rtol=RTOL, atol=5e-2)
+    np.testing.assert_allclose(float(new.total_cycles),
+                               float(ref.total_cycles), rtol=RTOL)
+
+
+def test_shared_dram_private_channel_decomposition():
+    """With each core pinned to its own channel the merged replay must
+    decompose into the isolated per-core runs on the new engine (the
+    contention invariant, exercised directly on `simulate_shared_dram`)."""
+    n = 256
+    cfg = DramConfig(channels=2)
+    t0 = jnp.sort(jax.random.uniform(jax.random.PRNGKey(0), (n,)) * 800)
+    t1 = jnp.sort(jax.random.uniform(jax.random.PRNGKey(1), (n,)) * 800)
+    # channel pinning: burst index b -> b * channels + core
+    b0 = jnp.arange(n) * 3 % 512
+    b1 = jnp.arange(n) * 7 % 512
+    a0 = (b0 * 2 + 0) * cfg.burst_bytes
+    a1 = (b1 * 2 + 1) * cfg.burst_bytes
+    w = jnp.zeros((n,), bool)
+    ones = jnp.ones((n,), bool)
+
+    def run(t, a, cid, nc):
+        order = jnp.argsort(t)
+        return simulate_shared_dram(
+            t[order], a[order], w, cid[order], ones, nc, cfg,
+            engine="xla", tol=0.0)
+
+    iso0 = run(t0, a0, jnp.zeros((n,), jnp.int32), 1)
+    iso1 = run(t1, a1, jnp.zeros((n,), jnp.int32), 1)
+    tm = jnp.concatenate([t0, t1])
+    am = jnp.concatenate([a0, a1])
+    cm = jnp.concatenate([jnp.zeros((n,), jnp.int32),
+                          jnp.ones((n,), jnp.int32)])
+    order = jnp.argsort(tm)
+    merged = simulate_shared_dram(
+        tm[order], am[order], jnp.zeros((2 * n,), bool), cm[order],
+        jnp.ones((2 * n,), bool), 2, cfg, engine="xla", tol=0.0)
+    np.testing.assert_allclose(
+        float(merged.per_core_stall[0]), float(iso0.per_core_stall[0]),
+        rtol=1e-5, atol=1e-2)
+    np.testing.assert_allclose(
+        float(merged.per_core_stall[1]), float(iso1.per_core_stall[0]),
+        rtol=1e-5, atol=1e-2)
+
+
+# ---- engine plumb-through ---------------------------------------------------
+
+def test_default_engine_is_chunked():
+    """ISSUE 3 satellite: the chunked engine is the default."""
+    assert replay.DEFAULT_ENGINE == "xla"
+    assert replay.resolve_engine(None) == "xla"
+
+
+def test_engine_validation():
+    with pytest.raises(ValueError):
+        replay.resolve_engine("turbo")
+    with pytest.raises(ValueError):
+        Simulator("paper-32", fidelity="trace", engine="turbo")
+
+
+def test_simulator_engine_plumbs_to_stages():
+    sim = Simulator("paper-32", fidelity="trace", engine="reference")
+    assert sim.engine == "reference"
+    assert any(getattr(s, "engine", None) == "reference"
+               for s in sim.pipeline)
+    assert sim.with_(dataflow="os").engine == "reference"
+    assert Simulator.from_preset("paper-32", fidelity="trace").engine == "xla"
+
+
+def test_trace_sweep_engines_agree():
+    """The batched (decode-hoisted, stream-deduped) sweep on the chunked
+    engine matches the reference engine's sweep."""
+    grid = preset_grid(array=[8, 16], sram_mb=[0.5], dataflow=["ws"]) * 2
+    ops = [Op("g", 96, 192, 128), Op("g", 64, 64, 256)]
+    fast = Simulator("paper-32", fidelity="trace").sweep(grid, ops)
+    ref = Simulator("paper-32", fidelity="trace",
+                    engine="reference").sweep(grid, ops)
+    assert fast.batched and ref.batched
+    np.testing.assert_allclose(fast.stall_cycles, ref.stall_cycles,
+                               rtol=RTOL, atol=1.0)
+    np.testing.assert_allclose(fast.total_cycles, ref.total_cycles,
+                               rtol=RTOL)
+
+
+# ---- int32 address-space guard (ISSUE 3 satellite) --------------------------
+
+def test_decode_guard_rejects_oversized_addresses():
+    cfg = DramConfig()
+    with pytest.raises(ValueError, match="int32"):
+        decode_requests(jnp.asarray([0.0, 2.0 ** 31]), cfg)
+
+
+def test_decode_guard_rejects_wrapped_addresses():
+    """Negative addresses are the tell-tale of silent int32 overflow."""
+    cfg = DramConfig()
+    with pytest.raises(ValueError, match="wrapped"):
+        simulate_dram(jnp.zeros((2,)), jnp.asarray([-64, 0], jnp.int32),
+                      jnp.zeros((2,), bool), cfg)
