@@ -89,6 +89,23 @@ def run(smoke: bool = False):
     artifact["trace_engine"] = Simulator("paper-32",
                                          fidelity="trace").engine
 
+    # Study layer: designs x 2 workloads x {fast, trace} compiled into
+    # batched groups — the cross-product path CI gates via
+    # study_cells_per_sec (benchmarks/baseline.json)
+    from repro.api import Study
+    study = (Study("bench")
+             .designs(grid)
+             .workloads({"g": op, "g2": [Op("g2", 256, 2048, 512)]})
+             .fidelity("fast", "trace"))
+    sres, us_study = timed(lambda: study.run(), repeat=3)
+    assert (sres["batched"] == 1.0).all(), \
+        "study cells must run through the batched plan"
+    cps = len(sres) / (us_study / 1e6)
+    rows.append((f"study_{len(sres)}_cells", us_study,
+                 f"cells_per_sec={cps:.0f}"))
+    artifact["study_cells"] = len(sres)
+    artifact["study_cells_per_sec"] = cps
+
     # the retained reference scan on the same grid, for the ISSUE 3
     # chunked-vs-reference engine comparison (single repeat: it is slow)
     rsim = Simulator("paper-32", fidelity="trace", engine="reference")

@@ -19,6 +19,7 @@ import sys
 GATES = {
     "trace_sweep_designs_per_sec": 0.2,
     "sweep_designs_per_sec": 0.2,
+    "study_cells_per_sec": 0.2,
 }
 
 

@@ -1,17 +1,13 @@
-"""Design-space exploration — the reason SCALE-Sim v3 exists.
-
-Sweeps (array size x SRAM) for an assigned LM architecture's operator
-graph through `Simulator.sweep`: the whole grid runs as one jitted/vmapped
-call over the traced stage pipeline, shardable across a device mesh
-(`--shard`) for workload-scale DSE — thousands of designs per second.
+"""Design-space exploration on the Study API — the reason SCALE-Sim v3
+exists: a designs x workload cross-product compiled into batched
+jitted/vmapped sweep kernels, optionally sharded over a device mesh
+(`--shard`), reduced to a columnar frame.
 
     PYTHONPATH=src python examples/dse_sweep.py --arch qwen2-1.5b
 """
 import argparse
 
-import numpy as np
-
-from repro.api import Simulator, preset_grid
+from repro.api import Study, preset_grid
 from repro.configs import get_config
 from repro.core.topology import lm_ops, total_macs
 
@@ -20,50 +16,42 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--seq", type=int, default=1024)
-    ap.add_argument("--batch", type=int, default=1)
-    ap.add_argument("--sram-mb", type=float, nargs="+",
-                    default=[0.5, 2.0, 8.0])
+    ap.add_argument("--sram-mb", type=float, nargs="+", default=[0.5, 2.0, 8.0])
+    ap.add_argument("--fidelity", nargs="+", default=["fast"],
+                    help="one or more of fast/trace — extra frame rows per level")
     ap.add_argument("--shard", action="store_true",
-                    help="shard the design axis over this host's devices")
+                    help="shard each batched group over this host's devices")
+    ap.add_argument("--cache", help="on-disk cell cache directory")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    ops = [o for o in lm_ops(cfg, seq=args.seq, batch=args.batch,
+    ops = [o for o in lm_ops(get_config(args.arch), seq=args.seq, batch=1,
                              mode="prefill") if o.kind == "gemm"]
     print(f"{args.arch}: {len(ops)} GEMMs, "
           f"{total_macs(ops) / 1e12:.2f} TMACs per prefill step")
-
-    arrays = [8, 16, 32, 64, 128, 256]
-    grid = preset_grid(array=arrays, sram_mb=args.sram_mb)
 
     mesh = None
     if args.shard:
         from repro.launch.mesh import make_host_mesh
         mesh = make_host_mesh()
-        print(f"sharding {len(grid)} designs over {mesh.size} devices")
 
-    res = Simulator().sweep(grid, ops, mesh=mesh)
+    study = (Study(f"dse-{args.arch}")
+             .designs(preset_grid(array=[8, 16, 32, 64, 128],
+                                  sram_mb=args.sram_mb))
+             .workloads({args.arch: ops})
+             .fidelity(*args.fidelity))
+    if args.cache:
+        study.cache(args.cache)
+    res = study.run(mesh=mesh)
 
-    print(f"{'design':>14} {'cycles':>12} {'energy mJ':>10} {'EdP':>12}")
-    for i, c in enumerate(res.configs):
-        a, mb = c.cores[0].rows, c.memory.ifmap_sram_bytes * 3 / (1 << 20)
-        print(f"{a:>4}x{a:<4}@{mb:4.1f}MB {res.total_cycles[i]:>12.3e} "
-              f"{res.energy_pj[i] * 1e-9:>10.2f} {res.edp[i]:>12.3e}")
-
-    best = {obj: res.best(obj).cores[0].rows
-            for obj in ("latency", "energy", "edp")}
-    print(f"\noptimal design: latency -> {best['latency']}^2, "
-          f"energy -> {best['energy']}^2, EdP -> {best['edp']}^2")
-
-    # cross-check the EdP winner with the cycle-fidelity DRAM pipeline
-    # (an independent stall model: if the fast path is badly wrong about
-    # memory-boundedness, these disagree)
-    full = Simulator(res.best("edp"), fidelity="cycle").run(ops[:10])
-    fast = Simulator(res.best("edp"), fidelity="fast").run(ops[:10])
-    print(f"cycle-fidelity check @ {best['edp']}^2 (first 10 GEMMs): "
-          f"{full.total_cycles:.3e} cyc vs fast {fast.total_cycles:.3e}")
-    sanity = full.total_cycles > 0 and np.isfinite(res.edp).all()
-    print("sweep sane:", bool(sanity))
+    print(res.summary())
+    for obj in ("latency", "energy", "edp"):
+        rows = res.best(obj, by="fidelity")
+        for fid, row in rows.items():
+            print(f"best {obj} @ {fid}: {row['design']} "
+                  f"({row['total_cycles']:.3e} cyc, "
+                  f"{row['energy_pj'] * 1e-9:.2f} mJ)")
+    print("pareto front:",
+          [r["design"] for r in res.pareto("total_cycles", "energy_pj").rows()])
 
 
 if __name__ == "__main__":

@@ -1,24 +1,36 @@
 """Public simulation API: the `Simulator` session facade over the stage
-pipeline, the accelerator preset registry, and the batched sweep path.
+pipeline, the accelerator preset registry, and the declarative Study
+layer (cross-product experiment plans -> columnar result frames).
 
-    from repro.api import Simulator, get_preset, preset_grid
+    from repro.api import Simulator, Study, preset_grid, studies
 
     Simulator("paper-32").run("resnet18")               # one config
     Simulator(fidelity="cycle").run_op(op)              # cycle-accurate DRAM
-    Simulator().sweep(preset_grid(array=[16, 32, 64],
-                                  sram_mb=[1, 8]), ops) # batched DSE
 
-See DESIGN.md for the stage pipeline and fidelity levels.
+    res = (Study()                                      # batched DSE study
+           .designs(preset_grid(array=[16, 32, 64], sram_mb=[1, 8]))
+           .workloads("resnet18")
+           .fidelity("fast", "trace")
+           .run())
+    res.best("edp")
+
+    studies.edp_array_size().run().check_claims()       # paper claims
+
+See DESIGN.md for the stage pipeline, fidelity levels and the Study
+layer (plan -> groups -> frame).
 """
 from ..core.accelerator import AcceleratorConfig
 from ..core.engine import NetworkReport, OpResult
 from ..core.stages import FIDELITIES, build_pipeline
 from .presets import get_preset, list_presets, preset_grid, register_preset
 from .simulator import (Simulator, SweepResult, as_config, as_workload)
+from .study import (Study, StudyPlan, StudyResult, get_study, list_studies,
+                    register_study, studies)
 
 __all__ = [
     "AcceleratorConfig", "FIDELITIES", "NetworkReport", "OpResult",
-    "Simulator", "SweepResult", "as_config", "as_workload",
-    "build_pipeline", "get_preset", "list_presets", "preset_grid",
-    "register_preset",
+    "Simulator", "Study", "StudyPlan", "StudyResult", "SweepResult",
+    "as_config", "as_workload", "build_pipeline", "get_preset",
+    "get_study", "list_presets", "list_studies", "preset_grid",
+    "register_preset", "register_study", "studies",
 ]

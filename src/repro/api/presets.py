@@ -38,13 +38,30 @@ def list_presets() -> List[str]:
     return sorted(_PRESETS)
 
 
-def preset_grid(name: str = "tpu-like", **axes) -> List[AcceleratorConfig]:
+def preset_grid(name: str = "tpu-like", *, preset=None, dataflow=None,
+                **axes) -> List[AcceleratorConfig]:
     """Cartesian product of preset kwargs -> list of configs for
-    `Simulator.sweep`, e.g. `preset_grid(array=[8, 16], sram_mb=[1, 8])`."""
+    `Study.designs` / `Simulator.sweep`, e.g.
+    `preset_grid(array=[8, 16], sram_mb=[1, 8])`.
+
+    Two first-class axes beyond factory kwargs, so study grids span
+    presets and dataflows without manual list building:
+
+    - `preset=[...]` crosses preset *names* (outermost axis), replacing
+      the single `name`;
+    - `dataflow=[...]` (innermost axis) is applied to the built config
+      via `with_(dataflow=...)`, so it works for every preset whether or
+      not its factory takes a dataflow kwarg.
+    """
+    presets = list(preset) if preset is not None else [name]
+    dataflows = list(dataflow) if dataflow is not None else [None]
     keys = list(axes)
     out = []
-    for combo in itertools.product(*(axes[k] for k in keys)):
-        out.append(get_preset(name, **dict(zip(keys, combo))))
+    for pname in presets:
+        for combo in itertools.product(*(axes[k] for k in keys)):
+            cfg = get_preset(pname, **dict(zip(keys, combo)))
+            for df in dataflows:
+                out.append(cfg if df is None else cfg.with_(dataflow=df))
     return out
 
 

@@ -25,8 +25,8 @@ from ..core import dataflow as dfm
 from ..core import stages as st
 from ..core.accelerator import AcceleratorConfig, DramConfig, MemoryConfig
 from ..core.energy import DEFAULT_ERT, ERT, energy_pj
-from ..core.engine import (NetworkReport, OpResult, simulate_network,
-                           simulate_op)
+from ..core.engine import (_ENERGY_GROUPS, NetworkReport, OpResult,
+                           simulate_network, simulate_op)
 from ..core.topology import PAPER_WORKLOADS, Op
 from .presets import get_preset
 
@@ -190,6 +190,13 @@ class Simulator:
         """Simulate `workload` on every config; one jitted/vmapped call per
         (dataflow, word_bytes[, dram]) group of traceable configs.
 
+        .. deprecated:: `sweep` is now a thin wrapper over a one-workload
+           `repro.api.study.Study` — the one execution path for
+           designs x workloads x fidelity studies. Prefer building a
+           `Study` for new code (cross-product axes, columnar result
+           frame, on-disk cell cache); this wrapper stays so existing
+           call sites keep working (parity: tests/test_api.py).
+
         mesh: shard the design axis over a device mesh (launch/mesh.py);
         the grid is padded to a multiple of mesh.size.
         Both 'fast' and 'trace' fidelities batch (the trace generators
@@ -199,45 +206,29 @@ class Simulator:
         fidelity run through the per-op engine instead — same result
         contract, no batching.
         """
+        from .study import Study
         cfgs = [as_config(c) for c in configs]
-        ops = as_workload(workload)
-        n = len(cfgs)
-        out = {k: np.zeros(n) for k in
-               ("total_cycles", "compute_cycles", "stall_cycles",
-                "dram_bytes", "energy_pj", "utilization")}
-
-        batched_idx: Dict[tuple, List[int]] = {}
-        fallback: List[int] = []
-        for i, c in enumerate(cfgs):
-            if self.fidelity in ("fast", "trace") and _traceable(c):
-                key = (c.dataflow, c.memory.word_bytes)
-                if self.fidelity == "trace":
-                    key += (c.dram,)
-                batched_idx.setdefault(key, []).append(i)
-            else:
-                fallback.append(i)
-
-        for key, idxs in batched_idx.items():
-            df, wb = key[0], key[1]
-            dram = key[2] if self.fidelity == "trace" else None
-            vals = _sweep_batched([cfgs[i] for i in idxs], ops, df, wb,
-                                  self.ert, mesh, dram=dram,
-                                  spec=self.trace_spec, engine=self.engine)
-            for k, arr in vals.items():
-                out[k][np.asarray(idxs)] = arr
-
-        for i in fallback:
-            rep = simulate_network(cfgs[i], ops,
-                                   dram_fidelity=self.fidelity,
-                                   ert=self.ert, pipeline=self.pipeline)
-            out["total_cycles"][i] = rep.total_cycles
-            out["compute_cycles"][i] = rep.compute_cycles
-            out["stall_cycles"][i] = rep.stall_cycles
-            out["dram_bytes"][i] = rep.dram_bytes
-            out["energy_pj"][i] = rep.energy_pj
-            out["utilization"][i] = rep.utilization
-
-        return SweepResult(configs=cfgs, batched=not fallback, **out)
+        if not cfgs:                     # pre-Study contract: empty grid
+            empty = np.zeros(0)          # -> empty result, not an error
+            return SweepResult(configs=[], batched=True,
+                               **{k: empty for k in
+                                  ("total_cycles", "compute_cycles",
+                                   "stall_cycles", "dram_bytes",
+                                   "energy_pj", "utilization")})
+        frame = (Study()
+                 .designs(cfgs)
+                 .workloads({"workload": as_workload(workload)})
+                 .fidelity(self.fidelity)
+                 .options(ert=self.ert, engine=self.engine,
+                          trace_spec=self.trace_spec,
+                          core_index=self.core_index)
+                 .run(mesh=mesh))
+        return SweepResult(
+            configs=cfgs,
+            batched=bool(np.all(frame["batched"] > 0)),
+            **{k: frame[k] for k in ("total_cycles", "compute_cycles",
+                                     "stall_cycles", "dram_bytes",
+                                     "energy_pj", "utilization")})
 
 
 # Compiled sweep kernels persist for the life of the process, keyed by the
@@ -337,7 +328,7 @@ def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT,
             ofmap_reads=s["ofmap_reads"] * cnt,
             dram_bytes=dram_t,
             l2_reads=jnp.where(d["l2_b"] > 0, s["dram_elems"] * cnt, 0.0))
-        energy = jnp.sum(energy_pj(counts, ert)["total"])
+        e = energy_pj(counts, ert)
 
         # SIMD sidecar (empty arrays contribute zero); like run_vector,
         # every component scales with count
@@ -350,7 +341,12 @@ def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT,
             ifmap_reads=vel_t, filter_reads=jnp.zeros_like(vel_t),
             ofmap_writes=vel_t, ofmap_reads=jnp.zeros_like(vel_t),
             dram_bytes=vdram)
-        energy = energy + jnp.sum(energy_pj(vcounts, ert)["total"])
+        ve = energy_pj(vcounts, ert)
+        energy = jnp.sum(e["total"]) + jnp.sum(ve["total"])
+        # the grouped-energy column schema shared with NetworkReport
+        # (engine._ENERGY_GROUPS) — the Study frame reports these per cell
+        groups = {g: sum(jnp.sum(e[a]) + jnp.sum(ve[a]) for a in acts)
+                  for g, acts in _ENERGY_GROUPS.items()}
 
         comp = jnp.sum(comp_t) + jnp.sum(vcyc)
         stall = jnp.sum(stall_t)
@@ -360,7 +356,7 @@ def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT,
                            / jnp.maximum(1.0, R * C * total))
         return dict(total_cycles=total, compute_cycles=comp,
                     stall_cycles=stall, dram_bytes=dram_b,
-                    energy_pj=energy, utilization=util)
+                    energy_pj=energy, utilization=util, **groups)
 
     def fn(design, sdesign, smap, M, N, K, cnt, velems, vcnt):
         if dram is not None:

@@ -1,0 +1,891 @@
+"""Declarative Study API: cross-product experiment plans over
+designs x workloads x fidelities, reduced to a columnar result frame.
+
+The headline deliverables of SCALE-Sim v3 are *studies*, not single runs
+("32x32 is ~2.86x more energy-efficient than 128x128 for ViT-base",
+"WS wins compute cycles but OS wins end-to-end once DRAM stalls are
+modeled") — each a cross-product of axes reduced to a comparison. A
+`Study` makes that experiment the API object:
+
+    res = (Study()
+           .designs({"32": "paper-32", "64": "paper-64"})
+           .workloads({"vit-base": vit_base_linear()})
+           .fidelity("fast", "trace")
+           .run())
+    res.best("edp")                      # winning row (dict)
+    res.filter(fidelity="trace").compare("total_cycles",
+                                         axis="design", baseline="32")
+
+`Study.run` compiles the full cross-product into an execution plan,
+partitions it into batchable groups (reusing the jitted/vmapped
+`_sweep_batched` kernels and the module-wide `_SWEEP_FN_CACHE` from
+`simulator.py`; per-op engine fallback for non-traceable cells; optional
+mesh sharding over the flattened plan axis) and returns a `StudyResult`
+— a pandas-free columnar frame (numpy columns + axis metadata) with
+`filter/group/pareto/best/compare`, `to_csv`/`to_json` round-trips
+(shared column schema with `NetworkReport`, see `core/engine.py`), and a
+content-hash keyed on-disk cache so re-running a study only executes
+changed cells.
+
+The paper's analyses ship as named studies: `studies.edp_array_size`,
+`studies.dataflow_dram_flip`, `studies.multicore_contention` — each a
+single `Study.run()` away, with machine-checkable claims
+(`StudyResult.check_claims`). CLI (see `repro/api/__main__.py`):
+
+    PYTHONPATH=src python -m repro.api --study edp_array_size \
+        --smoke --csv STUDY_edp_array_size.csv
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import (Callable, Dict, List, Optional, Sequence, Tuple, Union)
+
+import numpy as np
+
+from ..core import stages as st
+from ..core.accelerator import AcceleratorConfig, DramConfig
+from ..core.energy import DEFAULT_ERT, ERT, edp as _edp
+from ..core.engine import (ENERGY_GROUP_COLUMNS, RESULT_SCHEMA_VERSION,
+                           energy_group_totals, simulate_network,
+                           write_csv_table)
+from ..core.topology import Op
+from .simulator import _sweep_batched, _traceable, as_config, as_workload
+
+AXIS_COLUMNS = ("design", "workload", "fidelity")
+
+# Canonical metric columns of the default (Simulator-backed) evaluator,
+# grouped-energy columns included — the same schema NetworkReport.write_csv
+# emits per op. Custom evaluators may add columns; these stay first.
+METRIC_COLUMNS = ("total_cycles", "compute_cycles", "stall_cycles",
+                  "dram_bytes", "energy_pj", "utilization",
+                  "edp") + ENERGY_GROUP_COLUMNS
+
+_METRIC_ALIASES = {"latency": "total_cycles", "cycles": "total_cycles",
+                   "energy": "energy_pj"}
+
+# evaluator: (config, ops, fidelity) -> {metric: float}
+Evaluator = Callable[[AcceleratorConfig, Sequence[Op], str],
+                     Dict[str, float]]
+
+
+def _code_digest(code) -> str:
+    """Process-stable digest of a code object: bytecode + literal
+    constants (recursing into nested code objects, whose default reprs
+    embed memory addresses) + referenced names."""
+    h = hashlib.sha256(code.co_code)
+    for const in code.co_consts:
+        if hasattr(const, "co_code"):
+            h.update(_code_digest(const).encode())
+        else:
+            h.update(repr(const).encode())
+    h.update(repr(code.co_names).encode())
+    return h.hexdigest()
+
+
+# --------------------------------------------------------------------------
+# Execution plan
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StudyCell:
+    """One point of the cross-product: frame row `index`."""
+    index: int
+    design: str
+    workload: str
+    fidelity: str
+    config: AcceleratorConfig
+
+
+@dataclasses.dataclass
+class BatchGroup:
+    """Cells that execute as ONE jitted/vmapped `_sweep_batched` call:
+    same workload + fidelity, and the static pipeline flavor
+    (dataflow, word_bytes[, DramConfig]) the sweep kernels specialize on."""
+    workload: str
+    fidelity: str
+    dataflow: str
+    word_bytes: int
+    dram: Optional[DramConfig]
+    cells: List[int]
+
+
+@dataclasses.dataclass
+class StudyPlan:
+    cells: List[StudyCell]
+    groups: List[BatchGroup]          # batched cells, by kernel flavor
+    fallback: List[int]               # per-op engine cells
+
+    @property
+    def n_batched(self) -> int:
+        return sum(len(g.cells) for g in self.groups)
+
+    def __len__(self) -> int:
+        return len(self.cells)
+
+
+# --------------------------------------------------------------------------
+# Columnar result frame
+# --------------------------------------------------------------------------
+
+class StudyResult:
+    """Pandas-free columnar frame: numpy columns + axis metadata.
+
+    Axis columns (`design`, `workload`, `fidelity`) are object arrays of
+    labels; metric columns are float64; `batched` is 1.0 for cells that
+    ran through a vmapped sweep kernel (0.0 = per-op engine fallback).
+    """
+
+    def __init__(self, columns: Dict[str, np.ndarray],
+                 axes: Dict[str, List[str]], *,
+                 executed_cells: int = 0, cache_hits: int = 0,
+                 claims: Optional[List[Tuple[str, Callable]]] = None):
+        self.columns = columns
+        self.axes = axes
+        self.executed_cells = executed_cells
+        self.cache_hits = cache_hits
+        self._claims = list(claims or [])
+
+    # ---- basic access ------------------------------------------------------
+    def __len__(self) -> int:
+        return 0 if not self.columns else len(next(iter(self.columns.values())))
+
+    def __getitem__(self, name: str) -> np.ndarray:
+        return self.columns[_METRIC_ALIASES.get(name, name)]
+
+    def column_names(self) -> List[str]:
+        return list(self.columns)
+
+    def row(self, i: int) -> Dict[str, object]:
+        return {k: (str(v[i]) if k in AXIS_COLUMNS else float(v[i]))
+                for k, v in self.columns.items()}
+
+    def rows(self) -> List[Dict[str, object]]:
+        return [self.row(i) for i in range(len(self))]
+
+    def equals(self, other: "StudyResult") -> bool:
+        return (list(self.columns) == list(other.columns)
+                and self.axes == other.axes
+                and all(np.array_equal(self.columns[k], other.columns[k])
+                        for k in self.columns))
+
+    # ---- relational ops ----------------------------------------------------
+    def _subset(self, mask: np.ndarray) -> "StudyResult":
+        # claims are scoped to the full frame (they reference its axes)
+        # and deliberately do NOT propagate into subframes
+        cols = {k: v[mask] for k, v in self.columns.items()}
+        axes = {a: [x for x in self.axes[a] if x in set(cols[a])]
+                for a in self.axes}
+        return StudyResult(cols, axes)
+
+    def filter(self, pred: Optional[Callable[[Dict], bool]] = None,
+               **eq) -> "StudyResult":
+        """Row subset: keyword equality (scalar or collection of allowed
+        values per column) and/or a row-dict predicate."""
+        mask = np.ones(len(self), dtype=bool)
+        for k, want in eq.items():
+            col = self[k]
+            if isinstance(want, (list, tuple, set, frozenset)):
+                mask &= np.isin(col, list(want))
+            else:
+                mask &= (col == want)
+        if pred is not None:
+            mask &= np.array([bool(pred(self.row(i)))
+                              for i in range(len(self))], dtype=bool)
+        return self._subset(mask)
+
+    def group(self, by: Union[str, Sequence[str]]
+              ) -> Dict[object, "StudyResult"]:
+        """Split into sub-frames keyed by the value(s) of `by`."""
+        keys = (by,) if isinstance(by, str) else tuple(by)
+        out: Dict[object, StudyResult] = {}
+        seen: List[object] = []
+        cols = [self[k] for k in keys]
+        for i in range(len(self)):
+            key = tuple(c[i] for c in cols)
+            key = key[0] if len(keys) == 1 else key
+            if key not in out:
+                out[key] = None  # placeholder to keep insertion order
+                seen.append(key)
+        for key in seen:
+            if isinstance(key, tuple):
+                eq = dict(zip(keys, key))
+            else:
+                eq = {keys[0]: key}
+            out[key] = self.filter(**eq)
+        return out
+
+    def argbest(self, metric: str = "edp") -> int:
+        return int(np.argmin(np.asarray(self[metric], dtype=float)))
+
+    def best(self, metric: str = "edp",
+             by: Optional[Union[str, Sequence[str]]] = None):
+        """Row (dict) minimizing `metric`; with `by`, the winner per group."""
+        if by is None:
+            return self.row(self.argbest(metric))
+        return {k: sub.row(sub.argbest(metric))
+                for k, sub in self.group(by).items()}
+
+    def pareto(self, *objectives: str) -> "StudyResult":
+        """Non-dominated rows, minimizing every objective."""
+        if not objectives:
+            objectives = ("total_cycles", "energy_pj")
+        vals = np.stack([np.asarray(self[m], dtype=float)
+                         for m in objectives], axis=1)
+        keep = np.ones(len(self), dtype=bool)
+        for i in range(len(self)):
+            dominated = ((vals <= vals[i]).all(axis=1)
+                         & (vals < vals[i]).any(axis=1))
+            if dominated.any():
+                keep[i] = False
+        return self._subset(keep)
+
+    def compare(self, metric: str, *, axis: str,
+                baseline: str) -> Dict[str, np.ndarray]:
+        """Ratio of `metric` against the `baseline` value along one axis.
+
+        Returns {other_axis_value: ratios} where ratios are row-aligned
+        with `self.filter(**{axis: baseline})` — cells are matched on the
+        remaining axis columns. ratio > 1 means that value is worse
+        (higher metric) than the baseline for the matched cell.
+        """
+        other = [a for a in AXIS_COLUMNS if a != axis]
+        base = self.filter(**{axis: baseline})
+        if not len(base):
+            raise KeyError(f"no rows with {axis}={baseline!r}")
+        base_keys = list(zip(*(base[a] for a in other)))
+        base_vals = np.asarray(base[metric], dtype=float)
+        out: Dict[str, np.ndarray] = {}
+        for v in self.axes[axis]:
+            if v == baseline:
+                continue
+            sub = self.filter(**{axis: v})
+            lut = {k: float(m) for k, m in
+                   zip(zip(*(sub[a] for a in other)), sub[metric])}
+            out[v] = np.array([lut[k] for k in base_keys]) / base_vals
+        return out
+
+    # ---- claims ------------------------------------------------------------
+    def check_claims(self) -> Dict[str, bool]:
+        """Evaluate the study's registered paper claims on this frame.
+        Claims are run-time attachments — they do not survive
+        to_json/to_csv round-trips (a deserialized frame has none)."""
+        return {name: bool(fn(self)) for name, fn in self._claims}
+
+    def claims_ok(self) -> bool:
+        """True iff every registered claim holds. Raises on a frame with
+        no claims (e.g. one rebuilt via from_json/from_csv) instead of
+        returning a vacuous True."""
+        claims = self.check_claims()
+        if not claims:
+            raise ValueError(
+                "no claims registered on this frame (claims do not "
+                "survive serialization); gate on check_claims() of the "
+                "original Study.run() result")
+        return all(claims.values())
+
+    # ---- serialization (schema shared with NetworkReport, engine.py) ------
+    def to_json(self) -> str:
+        cols = {k: ([str(x) for x in v] if k in AXIS_COLUMNS
+                    else [float(x) for x in v])
+                for k, v in self.columns.items()}
+        return json.dumps({"schema_version": RESULT_SCHEMA_VERSION,
+                           "axes": self.axes, "columns": cols}, indent=1)
+
+    @classmethod
+    def from_json(cls, s: str) -> "StudyResult":
+        d = json.loads(s)
+        if d.get("schema_version") != RESULT_SCHEMA_VERSION:
+            raise ValueError(
+                f"study frame schema_version {d.get('schema_version')!r} "
+                f"!= supported {RESULT_SCHEMA_VERSION}")
+        cols = {k: (np.array(v, dtype=object) if k in AXIS_COLUMNS
+                    else np.asarray(v, dtype=np.float64))
+                for k, v in d["columns"].items()}
+        return cls(cols, {a: list(v) for a, v in d["axes"].items()})
+
+    def to_csv(self, path: str) -> None:
+        names = list(self.columns)
+        rows = [[(str(self.columns[c][i]) if c in AXIS_COLUMNS
+                  else float(self.columns[c][i])) for c in names]
+                for i in range(len(self))]
+        write_csv_table(path, names, rows)
+
+    @classmethod
+    def from_csv(cls, path: str) -> "StudyResult":
+        import csv
+        with open(path, newline="") as f:
+            reader = csv.reader(f)
+            header = next(reader)
+            raw = [r for r in reader if r]
+        cols: Dict[str, np.ndarray] = {}
+        for j, name in enumerate(header):
+            vals = [r[j] for r in raw]
+            cols[name] = (np.array(vals, dtype=object)
+                          if name in AXIS_COLUMNS
+                          else np.array([float(v) for v in vals]))
+        axes = {a: list(dict.fromkeys(cols[a])) for a in AXIS_COLUMNS
+                if a in cols}
+        return cls(cols, axes)
+
+    def summary(self) -> str:
+        lines = [f"{len(self)} cells | axes: "
+                 + "; ".join(f"{a}={list(v)}" for a, v in self.axes.items())]
+        metrics = [c for c in self.columns
+                   if c not in AXIS_COLUMNS and c != "batched"]
+        for i in range(len(self)):
+            tag = " ".join(str(self.columns[a][i]) for a in AXIS_COLUMNS
+                           if a in self.columns)
+            vals = " ".join(f"{m}={float(self.columns[m][i]):.4g}"
+                            for m in metrics[:6])
+            lines.append(f"  {tag}: {vals}")
+        return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# The Study builder
+# --------------------------------------------------------------------------
+
+class Study:
+    """Declarative cross-product experiment plan (builder pattern).
+
+    Every setter returns `self` so studies read as one expression; `run`
+    compiles the plan, executes it (batched where possible) and returns a
+    `StudyResult`.
+    """
+
+    def __init__(self, name: str = "study"):
+        self.name = name
+        self._designs: List[Tuple[str, AcceleratorConfig]] = []
+        self._workloads: Dict[str, List[Op]] = {}
+        self._fidelities: Tuple[str, ...] = ("fast",)
+        self._metrics: Optional[Tuple[str, ...]] = None
+        self._ert: ERT = DEFAULT_ERT
+        self._engine: Optional[str] = None
+        self._spec = None
+        self._core_index: int = 0
+        self._cache_dir: Optional[str] = None
+        self._evaluator: Optional[Evaluator] = None
+        self._claims: List[Tuple[str, Callable]] = []
+
+    # ---- axes --------------------------------------------------------------
+    def designs(self, configs, labels: Optional[Sequence[str]] = None
+                ) -> "Study":
+        """Design axis: dict {label: ConfigLike} or a sequence (e.g. a
+        `preset_grid`) — sequence entries are auto-labeled
+        `{rows}x{cols}-{dataflow}` with `#k` de-duplication suffixes."""
+        out: List[Tuple[str, AcceleratorConfig]] = []
+        if isinstance(configs, dict):
+            out = [(str(k), as_config(v)) for k, v in configs.items()]
+        else:
+            cfgs = [as_config(c) for c in configs]
+            if labels is not None:
+                if len(labels) != len(cfgs):
+                    raise ValueError("labels/configs length mismatch")
+                out = list(zip([str(x) for x in labels], cfgs))
+            else:
+                base = [f"{c.cores[0].rows}x{c.cores[0].cols}-{c.dataflow}"
+                        for c in cfgs]
+                counts: Dict[str, int] = {}
+                for b in base:
+                    counts[b] = counts.get(b, 0) + 1
+                # geometry collisions (e.g. an array x sram grid) get the
+                # operand-SRAM size appended before falling back to #k
+                labeled = []
+                for b, c in zip(base, cfgs):
+                    if counts[b] > 1:
+                        mb = (c.memory.ifmap_sram_bytes
+                              + c.memory.filter_sram_bytes
+                              + c.memory.ofmap_sram_bytes) / (1 << 20)
+                        b = f"{b}@{mb:.3g}MB"
+                    labeled.append(b)
+                seen: Dict[str, int] = {}
+                for b, c in zip(labeled, cfgs):
+                    k = seen.get(b, 0)
+                    seen[b] = k + 1
+                    out.append((b if k == 0 else f"{b}#{k}", c))
+        if len({l for l, _ in out}) != len(out):
+            raise ValueError("design labels must be unique")
+        self._designs = out
+        return self
+
+    def workloads(self, *wls) -> "Study":
+        """Workload axis: dicts {name: ops-or-paper-workload-name} and/or
+        bare paper-workload names ('resnet18', 'vit_base', ...)."""
+        m: Dict[str, List[Op]] = {}
+        for w in wls:
+            if isinstance(w, dict):
+                for k, v in w.items():
+                    m[str(k)] = as_workload(v)
+            elif isinstance(w, str):
+                m[w] = as_workload(w)
+            else:
+                raise TypeError(f"workloads() takes dicts or names, "
+                                f"got {type(w)!r}")
+        if not m:
+            raise ValueError("workloads() needs at least one workload")
+        self._workloads = m
+        return self
+
+    def fidelity(self, *fids: str) -> "Study":
+        for f in fids:
+            if f not in st.FIDELITIES:
+                raise ValueError(f"fidelity must be one of {st.FIDELITIES}, "
+                                 f"got {f!r}")
+        if not fids:
+            raise ValueError("fidelity() needs at least one level")
+        self._fidelities = tuple(fids)
+        return self
+
+    # ---- options -----------------------------------------------------------
+    def metrics(self, *names: str) -> "Study":
+        """Restrict the frame's metric columns (axis + `batched` always
+        kept). Aliases: latency/cycles -> total_cycles, energy ->
+        energy_pj."""
+        self._metrics = tuple(_METRIC_ALIASES.get(n, n) for n in names)
+        return self
+
+    def options(self, *, ert: Optional[ERT] = None,
+                engine: Optional[str] = None, trace_spec=None,
+                core_index: Optional[int] = None) -> "Study":
+        """Execution knobs shared by every cell (see `Simulator`)."""
+        from ..core import replay as _rp
+        if ert is not None:
+            self._ert = ert
+        if engine is not None:
+            self._engine = _rp.resolve_engine(engine)
+        if trace_spec is not None:
+            self._spec = trace_spec
+        if core_index is not None:
+            self._core_index = core_index
+        return self
+
+    def cache(self, path: str) -> "Study":
+        """Content-hash keyed on-disk cell cache: re-running a study only
+        executes cells whose (config, ops, fidelity, ERT, engine, spec)
+        content changed."""
+        self._cache_dir = path
+        return self
+
+    def evaluator(self, fn: Evaluator) -> "Study":
+        """Custom per-cell evaluator `(config, ops, fidelity) -> metric
+        dict` replacing the Simulator pipeline (e.g. the multi-core
+        contention study). Cells run per-op (no batching) but still
+        cache — keyed by the study name + the evaluator's qualname and
+        bytecode hash. Captured closure *state* is not hashed: if two
+        evaluators share bytecode but behave differently through their
+        closures, give the studies distinct names (or distinct cache
+        dirs) so cells never alias."""
+        self._evaluator = fn
+        return self
+
+    def claim(self, name: str, fn: Callable[[StudyResult], bool]) -> "Study":
+        """Attach a machine-checkable paper claim, evaluated on the frame
+        via `StudyResult.check_claims()`."""
+        self._claims.append((name, fn))
+        return self
+
+    # ---- plan + run --------------------------------------------------------
+    def _spec_for(self, fidelity: str):
+        if fidelity != "trace":
+            return None
+        if self._spec is None:
+            from ..trace.generator import DEFAULT_SPEC
+            return DEFAULT_SPEC
+        return self._spec
+
+    def plan(self) -> StudyPlan:
+        """Compile the cross-product into cells + batchable groups.
+
+        Cell order (= frame row order): fidelity-major, then workload,
+        design fastest — a one-workload/one-fidelity study's rows are its
+        designs in order (the `Simulator.sweep` contract).
+        """
+        if not self._designs:
+            raise ValueError("Study has no designs; call .designs(...)")
+        if not self._workloads:
+            raise ValueError("Study has no workloads; call .workloads(...)")
+        cells: List[StudyCell] = []
+        for fid in self._fidelities:
+            for wname in self._workloads:
+                for label, cfg in self._designs:
+                    cells.append(StudyCell(len(cells), label, wname, fid,
+                                           cfg))
+        by_key: Dict[tuple, List[int]] = {}
+        fallback: List[int] = []
+        for c in cells:
+            batchable = (self._evaluator is None
+                         and c.fidelity in ("fast", "trace")
+                         and _traceable(c.config))
+            if batchable:
+                key = (c.workload, c.fidelity, c.config.dataflow,
+                       c.config.memory.word_bytes,
+                       c.config.dram if c.fidelity == "trace" else None)
+                by_key.setdefault(key, []).append(c.index)
+            else:
+                fallback.append(c.index)
+        groups = [BatchGroup(w, f, df, wb, dram, idxs)
+                  for (w, f, df, wb, dram), idxs in by_key.items()]
+        return StudyPlan(cells=cells, groups=groups, fallback=fallback)
+
+    def _cell_hash(self, cell: StudyCell) -> str:
+        spec = self._spec_for(cell.fidelity)
+        from ..core import replay as _rp
+        payload = {
+            "schema_version": RESULT_SCHEMA_VERSION,
+            "config": cell.config.to_dict(),
+            "ops": [(o.name, o.M, o.N, o.K, o.count, o.kind,
+                     o.vector_elems, o.sparsity_nm)
+                    for o in self._workloads[cell.workload]],
+            "fidelity": cell.fidelity,
+            "ert": dataclasses.asdict(self._ert),
+            "engine": _rp.resolve_engine(self._engine),
+            "spec": dataclasses.asdict(spec) if spec is not None else None,
+            "core_index": self._core_index,
+            "evaluator": self._evaluator_key(),
+        }
+        blob = json.dumps(payload, sort_keys=True, default=str)
+        return hashlib.sha256(blob.encode()).hexdigest()
+
+    def _evaluator_key(self):
+        """Cache identity of a custom evaluator: study name + qualname +
+        a digest of the code object (bytecode, constants, names — so two
+        different lambdas with the same qualname never share cache
+        cells). Closure contents are deliberately not hashed (their
+        reprs are process-dependent) — see `evaluator()`."""
+        fn = self._evaluator
+        if fn is None:
+            return None
+        code = getattr(fn, "__code__", None)
+        return [self.name, getattr(fn, "__qualname__", repr(fn)),
+                _code_digest(code) if code is not None else None]
+
+    def _cache_load(self, cache_dir: str, h: str
+                    ) -> Optional[Dict[str, float]]:
+        path = os.path.join(cache_dir, h + ".json")
+        try:
+            with open(path) as f:
+                d = json.load(f)
+        except (OSError, ValueError):
+            return None
+        if d.get("schema_version") != RESULT_SCHEMA_VERSION:
+            return None
+        return {k: float(v) for k, v in d["metrics"].items()}
+
+    def _cache_store(self, cache_dir: str, h: str,
+                     metrics: Dict[str, float]) -> None:
+        os.makedirs(cache_dir, exist_ok=True)
+        path = os.path.join(cache_dir, h + ".json")
+        with open(path, "w") as f:
+            json.dump({"schema_version": RESULT_SCHEMA_VERSION,
+                       "study": self.name, "metrics": metrics}, f)
+
+    def run(self, *, mesh=None, cache: Optional[str] = None) -> StudyResult:
+        """Execute the plan and return the columnar frame.
+
+        mesh: shard each batched group's flattened design axis over a
+        device mesh (see `Simulator.sweep`). cache: overrides the
+        builder's cache directory for this run only (the builder's
+        setting is untouched).
+        """
+        cache_dir = cache if cache is not None else self._cache_dir
+        plan = self.plan()
+        n = len(plan.cells)
+        results: List[Optional[Dict[str, float]]] = [None] * n
+        hashes: List[Optional[str]] = [None] * n
+        hits = executed = 0
+
+        loaded: set = set()
+        if cache_dir is not None:
+            for c in plan.cells:
+                hashes[c.index] = self._cell_hash(c)
+                got = self._cache_load(cache_dir, hashes[c.index])
+                if got is not None:
+                    results[c.index] = got
+                    loaded.add(c.index)
+                    hits += 1
+
+        # batched groups: one vmapped sweep kernel per flavor, executing
+        # only the cache-missing cells of each group
+        for grp in plan.groups:
+            miss = [i for i in grp.cells if results[i] is None]
+            if not miss:
+                continue
+            ops = self._workloads[grp.workload]
+            vals = _sweep_batched(
+                [plan.cells[i].config for i in miss], ops, grp.dataflow,
+                grp.word_bytes, self._ert, mesh, dram=grp.dram,
+                spec=self._spec_for(grp.fidelity), engine=self._engine)
+            vals["edp"] = _edp(vals["energy_pj"], vals["total_cycles"])
+            for j, i in enumerate(miss):
+                results[i] = {k: float(v[j]) for k, v in vals.items()}
+                results[i]["batched"] = 1.0
+                executed += 1
+
+        # per-op engine fallback (and custom evaluators)
+        pipelines: Dict[str, tuple] = {}
+        for i in plan.fallback:
+            if results[i] is not None:
+                continue
+            cell = plan.cells[i]
+            ops = self._workloads[cell.workload]
+            if self._evaluator is not None:
+                m = {k: float(v) for k, v in
+                     self._evaluator(cell.config, ops,
+                                     cell.fidelity).items()}
+            else:
+                if cell.fidelity not in pipelines:
+                    pipelines[cell.fidelity] = st.build_pipeline(
+                        cell.fidelity, core_index=self._core_index,
+                        trace_spec=self._spec_for(cell.fidelity),
+                        engine=self._engine)
+                rep = simulate_network(cell.config, ops,
+                                       dram_fidelity=cell.fidelity,
+                                       ert=self._ert,
+                                       pipeline=pipelines[cell.fidelity])
+                m = dict(total_cycles=rep.total_cycles,
+                         compute_cycles=rep.compute_cycles,
+                         stall_cycles=rep.stall_cycles,
+                         dram_bytes=rep.dram_bytes,
+                         energy_pj=rep.energy_pj,
+                         utilization=rep.utilization, edp=rep.edp,
+                         **energy_group_totals(rep.energy_breakdown))
+            m["batched"] = 0.0
+            results[i] = m
+            executed += 1
+
+        if cache_dir is not None:
+            for c in plan.cells:
+                i = c.index
+                # only cells executed this run — hits came from these
+                # exact files, rewriting them is pure I/O churn
+                if hashes[i] is not None and i not in loaded:
+                    self._cache_store(cache_dir, hashes[i], results[i])
+
+        return self._frame(plan, results, executed, hits)
+
+    def _frame(self, plan: StudyPlan,
+               results: List[Dict[str, float]],
+               executed: int, hits: int) -> StudyResult:
+        metric_names: List[str] = [m for m in METRIC_COLUMNS
+                                   if any(m in r for r in results)]
+        extra = sorted({k for r in results for k in r}
+                       - set(metric_names) - {"batched"})
+        metric_names += extra
+        if self._metrics is not None:
+            missing = set(self._metrics) - set(metric_names)
+            if missing:
+                raise KeyError(f"metrics not produced by this study: "
+                               f"{sorted(missing)}")
+            metric_names = [m for m in metric_names if m in self._metrics]
+        cols: Dict[str, np.ndarray] = {
+            "design": np.array([c.design for c in plan.cells], dtype=object),
+            "workload": np.array([c.workload for c in plan.cells],
+                                 dtype=object),
+            "fidelity": np.array([c.fidelity for c in plan.cells],
+                                 dtype=object),
+        }
+        for m in metric_names:
+            cols[m] = np.array([r.get(m, np.nan) for r in results],
+                               dtype=np.float64)
+        cols["batched"] = np.array([r.get("batched", 0.0) for r in results],
+                                   dtype=np.float64)
+        axes = {"design": [l for l, _ in self._designs],
+                "workload": list(self._workloads),
+                "fidelity": list(self._fidelities)}
+        return StudyResult(cols, axes, executed_cells=executed,
+                           cache_hits=hits, claims=self._claims)
+
+
+# --------------------------------------------------------------------------
+# Named studies: the paper's analyses as first-class objects
+# --------------------------------------------------------------------------
+
+_STUDIES: Dict[str, Callable[..., Study]] = {}
+
+
+def register_study(name: str):
+    """Decorator: register a Study factory under `name` (factories may
+    take keyword arguments, e.g. `smoke=True`)."""
+    def deco(fn: Callable[..., Study]):
+        if name in _STUDIES:
+            raise ValueError(f"study {name!r} already registered")
+        _STUDIES[name] = fn
+        return fn
+    return deco
+
+
+def get_study(name: str, **kw) -> Study:
+    if name not in _STUDIES:
+        raise KeyError(f"unknown study {name!r}; "
+                       f"available: {sorted(_STUDIES)}")
+    return _STUDIES[name](**kw)
+
+
+def list_studies() -> List[str]:
+    return sorted(_STUDIES)
+
+
+class _StudyNamespace:
+    """`studies.edp_array_size(...)` attribute access over the registry."""
+
+    def __getattr__(self, name: str) -> Callable[..., Study]:
+        if name in _STUDIES:
+            return _STUDIES[name]
+        raise AttributeError(f"no study {name!r}; "
+                             f"available: {sorted(_STUDIES)}")
+
+    def __dir__(self):
+        return sorted(_STUDIES)
+
+
+studies = _StudyNamespace()
+
+
+@register_study("edp_array_size")
+def edp_array_size(smoke: bool = False) -> Study:
+    """Paper Table V: array-size sweep on ViT-base linear layers.
+    32x32 wins energy (~2.86x vs 128x128), 128x128 wins latency, and
+    64x64 wins EdP — the optimum sits between the single-metric winners.
+    `smoke` shrinks to 2 transformer layers (identical per-layer shapes,
+    so every ratio/winner claim is layer-count invariant)."""
+    from ..core.topology import vit_linear
+    wl = vit_linear(768, 2 if smoke else 12, 3072, prefix="vitb")
+    s = (Study("edp_array_size")
+         .designs({"32": "paper-32", "64": "paper-64", "128": "paper-128"})
+         .workloads({"vit-base": wl})
+         .fidelity("fast"))
+    s.claim("latency_winner_is_128",
+            lambda r: r.best("total_cycles")["design"] == "128")
+    s.claim("energy_winner_is_32",
+            lambda r: r.best("energy_pj")["design"] == "32")
+    s.claim("edp_winner_64_between_extremes",
+            lambda r: r.best("edp")["design"] == "64")
+    s.claim("energy_ratio_128_vs_32_in_band",
+            lambda r: 2.3 < float(r.compare("energy_pj", axis="design",
+                                            baseline="32")["128"][0]) < 3.4)
+    return s
+
+
+@register_study("dataflow_dram_flip")
+def dataflow_dram_flip() -> Study:
+    """Paper Sec. IX-B: WS beats OS on compute cycles, but OS wins
+    end-to-end once DRAM stalls are modeled — and the OS advantage grows
+    at trace fidelity, where the stall model sees the *address stream*
+    each dataflow emits (WS's streaming pattern row-thrashes harder than
+    the first-order byte-count model predicts)."""
+    from ..core.accelerator import tpu_like_config
+    from ..core.topology import resnet18_six_layers
+    designs = {df: tpu_like_config(array=32, dataflow=df, sram_mb=0.4)
+               for df in ("ws", "os")}
+    s = (Study("dataflow_dram_flip")
+         .designs(designs)
+         .workloads({"resnet18-6": resnet18_six_layers()})
+         .fidelity("fast", "trace"))
+    s.claim("ws_wins_compute_cycles",
+            lambda r: all(
+                r.filter(fidelity=f).best("compute_cycles")["design"] == "ws"
+                for f in r.axes["fidelity"]))
+    s.claim("os_wins_total_once_stalls_modeled",
+            lambda r: r.filter(fidelity="trace")
+                       .best("total_cycles")["design"] == "os")
+    s.claim("os_margin_at_least_20pct",
+            lambda r: float(
+                r.filter(fidelity="trace").compare(
+                    "total_cycles", axis="design", baseline="ws")["os"][0])
+            < 0.8)
+    s.claim("trace_fidelity_amplifies_flip",
+            lambda r: float(r.filter(fidelity="trace").compare(
+                "total_cycles", axis="design", baseline="os")["ws"][0])
+            > float(r.filter(fidelity="fast").compare(
+                "total_cycles", axis="design", baseline="os")["ws"][0]))
+    return s
+
+
+@register_study("multicore_contention")
+def multicore_contention_study(channels: Sequence[int] = (1, 2, 4),
+                               gemm: Tuple[int, int, int] = (512, 2048, 1024),
+                               spec=None) -> Study:
+    """Shared-DRAM contention across channel counts on the MCM package:
+    per-core demand traces merged through shared channels vs each core
+    alone (`simulate_multicore_contention`). The shared run never beats
+    isolation, contention is material (>10% makespan inflation), and
+    adding channels relieves the shared makespan."""
+    from ..core.multicore import contention_summary
+    from .presets import get_preset
+    M, N, K = gemm
+
+    def cell(cfg: AcceleratorConfig, ops: Sequence[Op],
+             fidelity: str) -> Dict[str, float]:
+        o = ops[0]
+        return contention_summary(cfg, o.M, o.N, o.K, spec=spec)
+
+    s = (Study("multicore_contention")
+         .designs({f"ch{c}": get_preset("mcm-4x32", channels=c)
+                   for c in channels})
+         .workloads({f"gemm-{M}x{N}x{K}": [Op("gemm", M, N, K)]})
+         .fidelity("trace")
+         # register the spec as the study trace_spec too, so it enters
+         # the content hash and distinct specs never share cache cells
+         .options(trace_spec=spec)
+         .evaluator(cell))
+    s.claim("shared_never_beats_isolated",
+            lambda r: bool((r["makespan_shared"]
+                            >= r["makespan_isolated"] - 1e-6).all()))
+    s.claim("contention_is_material",
+            lambda r: bool((r["contention_slowdown"] > 1.1).all()))
+    s.claim("more_channels_relieve_shared_makespan",
+            lambda r: bool(np.all(np.diff(
+                r["makespan_shared"][np.argsort(r["channels"])]) <= 0.0)))
+    return s
+
+
+# --------------------------------------------------------------------------
+# CLI: run a named study, print the frame + claims, emit CSV/JSON
+# --------------------------------------------------------------------------
+
+def _main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+    import inspect
+    ap = argparse.ArgumentParser(
+        description="Run a named study (repro.api.study registry)")
+    ap.add_argument("--study", required=True, choices=list_studies())
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink the study where the factory supports it")
+    ap.add_argument("--csv", help="write the result frame as CSV")
+    ap.add_argument("--json", dest="json_out",
+                    help="write the result frame as JSON")
+    ap.add_argument("--cache", help="on-disk cell-cache directory")
+    args = ap.parse_args(argv)
+
+    factory = _STUDIES[args.study]
+    kw = {}
+    if args.smoke and "smoke" in inspect.signature(factory).parameters:
+        kw["smoke"] = True
+    study = factory(**kw)
+    if args.cache:
+        study.cache(args.cache)
+    res = study.run()
+    print(f"study {args.study}: executed {res.executed_cells} cells "
+          f"({res.cache_hits} cache hits)")
+    print(res.summary())
+    claims = res.check_claims()
+    for name, ok in claims.items():
+        print(f"claim {'PASS' if ok else 'FAIL'}: {name}")
+    if args.csv:
+        res.to_csv(args.csv)
+        print(f"wrote {args.csv}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            f.write(res.to_json())
+        print(f"wrote {args.json_out}")
+    return 0 if all(claims.values()) else 1
+
+
+if __name__ == "__main__":
+    # prefer `python -m repro.api` (repro/api/__main__.py): running this
+    # file as __main__ re-executes the module runpy already imported
+    import sys
+    sys.exit(_main())

@@ -21,6 +21,11 @@ from . import stages as st
 from .energy import DEFAULT_ERT, ERT, edp, power_w
 from .topology import Op
 
+# Version stamp shared by every serialized result (NetworkReport.to_json,
+# repro.api.study.StudyResult.to_json, the study on-disk cache). Bump when
+# a column's meaning changes so stale caches / downstream parsers fail loud.
+RESULT_SCHEMA_VERSION = 1
+
 # Grouped CSV columns for the per-op energy breakdown (pJ).
 _ENERGY_GROUPS = {
     "energy_mac_pj": ("mac_random", "mac_wire", "spad_read", "spad_write"),
@@ -30,6 +35,40 @@ _ENERGY_GROUPS = {
     "energy_dram_pj": ("dram_bytes", "noc_byte_hops"),
     "energy_static_pj": ("mac_gated", "pe_leak"),
 }
+
+# The one grouped-energy column schema: NetworkReport.write_csv and
+# StudyResult.to_csv both emit exactly these (in this order).
+ENERGY_GROUP_COLUMNS = tuple(_ENERGY_GROUPS)
+
+
+def energy_group_totals(by_action: Optional[Dict[str, float]]
+                        ) -> Dict[str, float]:
+    """Reduce an action -> pJ mapping onto the grouped energy columns."""
+    return {g: sum((by_action or {}).get(a, 0.0) for a in acts)
+            for g, acts in _ENERGY_GROUPS.items()}
+
+
+def write_csv_table(path: str, header: Sequence[str],
+                    rows: Sequence[Sequence]) -> None:
+    """The shared CSV writer (NetworkReport.write_csv, StudyResult.to_csv).
+
+    Floats are written with repr() so a read-back parses to the identical
+    value (lossless round-trip); everything else with str(). Uses the
+    stdlib csv module so labels/op names containing commas or quotes are
+    escaped rather than corrupting the table.
+    """
+    import csv
+
+    def fmt(v) -> str:
+        if isinstance(v, float):         # incl. numpy scalars: cast so
+            return repr(float(v))        # numpy-2 reprs don't leak in
+        return str(v)
+
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        for r in rows:
+            w.writerow([fmt(v) for v in r])
 
 
 @dataclasses.dataclass
@@ -52,10 +91,7 @@ class OpResult:
     energy_by_action: Optional[Dict[str, float]] = None
 
     def energy_group(self, group: str) -> float:
-        if not self.energy_by_action:
-            return 0.0
-        return sum(self.energy_by_action.get(a, 0.0)
-                   for a in _ENERGY_GROUPS[group])
+        return energy_group_totals(self.energy_by_action)[group]
 
 
 @dataclasses.dataclass
@@ -74,6 +110,7 @@ class NetworkReport:
 
     def to_json(self) -> str:
         d = dataclasses.asdict(self)
+        d["schema_version"] = RESULT_SCHEMA_VERSION
         d["ops"] = [dataclasses.asdict(o) if not isinstance(o, dict) else o
                     for o in d["ops"]]
         return json.dumps(d, indent=1, default=float)
@@ -82,13 +119,10 @@ class NetworkReport:
         cols = ["name", "kind", "compute_cycles", "stall_cycles",
                 "layout_extra_cycles", "total_cycles", "utilization",
                 "dram_bytes", "energy_pj"]
-        groups = list(_ENERGY_GROUPS)
-        with open(path, "w") as f:
-            f.write(",".join(cols + groups) + "\n")
-            for o in self.ops:
-                vals = [str(getattr(o, c)) for c in cols]
-                vals += [f"{o.energy_group(g):.6g}" for g in groups]
-                f.write(",".join(vals) + "\n")
+        rows = [[getattr(o, c) for c in cols]
+                + [o.energy_group(g) for g in ENERGY_GROUP_COLUMNS]
+                for o in self.ops]
+        write_csv_table(path, cols + list(ENERGY_GROUP_COLUMNS), rows)
 
 
 def _result_from_ctx(ctx: st.OpContext, kind: str) -> OpResult:

@@ -150,6 +150,32 @@ def simulate_multicore_contention(cfg: AcceleratorConfig, M: int, N: int,
                                 private_channels=private_channels, spec=spec)
 
 
+def contention_summary(cfg: AcceleratorConfig, M: int, N: int, K: int,
+                       scheme: str = "spatial",
+                       private_channels: bool = False,
+                       spec=None) -> Dict[str, float]:
+    """`simulate_multicore_contention` flattened to a metric dict — the
+    cell evaluator of the `multicore_contention` named study
+    (`repro.api.study`). Infinite stall inflations (cores that only stall
+    under contention) are reported as a count, not a column value, so the
+    frame stays JSON/CSV-safe."""
+    r = simulate_multicore_contention(cfg, M, N, K, scheme,
+                                      private_channels, spec)
+    finite = [x for x in r.stall_inflation if np.isfinite(x)]
+    return dict(
+        channels=float(cfg.dram.channels),
+        cores=float(cfg.num_cores),
+        makespan_isolated=float(r.makespan_isolated),
+        makespan_shared=float(r.makespan_shared),
+        contention_slowdown=float(r.makespan_shared
+                                  / max(r.makespan_isolated, 1e-9)),
+        max_stall_inflation=float(max(finite)) if finite else 1.0,
+        cores_stalled_only_shared=float(len(r.stall_inflation)
+                                        - len(finite)),
+        row_hits=float(r.row_hits), row_misses=float(r.row_misses),
+        row_conflicts=float(r.row_conflicts))
+
+
 def best_multicore(cfg: AcceleratorConfig, M: int, N: int, K: int,
                    objective: str = "cycles") -> MultiCoreResult:
     results = [simulate_multicore(cfg, M, N, K, s)

@@ -7,68 +7,81 @@ import pytest
 from repro.core import simulate_network, tpu_like_config
 from repro.core.accelerator import DramConfig, SparsityConfig
 from repro.core.dram import simulate_dram, tile_prefetch_trace, linear_trace
-from repro.core.topology import (resnet18, resnet18_six_layers,
-                                 vit_base_linear)
+from repro.core.topology import resnet18, resnet18_six_layers
 
 
 @pytest.fixture(scope="module")
 def vitb():
-    out = {}
-    for arr in (32, 64, 128):
-        cfg = tpu_like_config(array=arr, dataflow="ws")
-        out[arr] = simulate_network(cfg, vit_base_linear())
-    return out
+    """Table V through the Study layer: arrays x ViT-base in one
+    `Study.run()` — the single execution path for paper comparisons."""
+    from repro.api import studies
+    return studies.edp_array_size().run()
+
+
+@pytest.fixture(scope="module")
+def flip():
+    """Sec. IX-B dataflow study: {ws, os} x {fast, trace} in one run."""
+    from repro.api import studies
+    return studies.dataflow_dram_flip().run()
 
 
 def test_latency_scales_with_array(vitb):
     """Table V: 128x128 is much faster than 32x32 on latency alone
     (paper: 6.53x; ours: ~4x with our GEMM-ification)."""
-    r = vitb[32].total_cycles / vitb[128].total_cycles
-    assert 3.0 < r < 9.0
+    cyc = {r["design"]: r["total_cycles"] for r in vitb.rows()}
+    assert 3.0 < cyc["32"] / cyc["128"] < 9.0
 
 
 def test_energy_flip_table5(vitb):
     """Table V: 32x32 is ~2.86x more energy-efficient than 128x128."""
-    r = vitb[128].energy_pj / vitb[32].energy_pj
-    assert 2.3 < r < 3.4
-    assert vitb[32].energy_pj < vitb[64].energy_pj < vitb[128].energy_pj
+    e = {r["design"]: r["energy_pj"] for r in vitb.rows()}
+    assert 2.3 < e["128"] / e["32"] < 3.4
+    assert e["32"] < e["64"] < e["128"]
 
 
 def test_edp_optimum_64(vitb):
     """Table V (text): 64x64 wins EdP for ViT-base."""
-    edp = {a: vitb[a].edp for a in vitb}
-    assert edp[64] < edp[128] < edp[32]
+    edp = {r["design"]: r["edp"] for r in vitb.rows()}
+    assert edp["64"] < edp["128"] < edp["32"]
 
 
-def test_ws_os_flip_with_dram(paper_cfgs=None):
+def test_edp_array_size_claims(vitb):
+    """The named study's machine-checkable claims all hold."""
+    assert vitb.check_claims() == {
+        "latency_winner_is_128": True,
+        "energy_winner_is_32": True,
+        "edp_winner_64_between_extremes": True,
+        "energy_ratio_128_vs_32_in_band": True,
+    }
+
+
+def test_ws_os_flip_with_dram(flip):
     """Sec. IX-B: WS beats OS on compute cycles (~21%), OS beats WS on
     total execution once DRAM stalls are modeled (~30%)."""
-    res = {}
-    for df in ("ws", "os"):
-        cfg = tpu_like_config(array=32, dataflow=df, sram_mb=0.4)
-        res[df] = simulate_network(cfg, resnet18_six_layers())
-    comp_gain = 1 - res["ws"].compute_cycles / res["os"].compute_cycles
-    assert 0.05 < comp_gain < 0.4            # WS fewer compute cycles
-    total_gain = 1 - res["os"].total_cycles / res["ws"].total_cycles
-    assert total_gain > 0.2                  # OS wins with stalls
+    fast = flip.filter(fidelity="fast")
+    comp = {r["design"]: r["compute_cycles"] for r in fast.rows()}
+    tot = {r["design"]: r["total_cycles"] for r in fast.rows()}
+    assert 0.05 < 1 - comp["ws"] / comp["os"] < 0.4   # WS fewer compute
+    assert 1 - tot["os"] / tot["ws"] > 0.2            # OS wins with stalls
 
 
-def test_ws_os_flip_with_generated_traces():
+def test_ws_os_flip_with_generated_traces(flip):
     """ISSUE 2 acceptance: with cycle-accurate stalls driven by
     dataflow-generated demand traces (fidelity='trace'), OS shows lower
     end-to-end execution than WS on the ResNet18 six-layer workload,
     while WS keeps fewer compute cycles — the paper's headline DRAM
     claim, now sensitive to the *address stream* each dataflow emits."""
+    trace = flip.filter(fidelity="trace")
+    comp = {r["design"]: r["compute_cycles"] for r in trace.rows()}
+    tot = {r["design"]: r["total_cycles"] for r in trace.rows()}
+    assert comp["ws"] < comp["os"]
+    assert tot["os"] < tot["ws"]
+    assert flip.claims_ok()
+    # and the trace machinery actually exercises the row-buffer model
     from repro.api import Simulator
-    res = {}
-    for df in ("ws", "os"):
-        cfg = tpu_like_config(array=32, dataflow=df, sram_mb=0.4)
-        res[df] = Simulator(cfg, fidelity="trace").run(
-            resnet18_six_layers())
-    assert res["ws"].compute_cycles < res["os"].compute_cycles
-    assert res["os"].total_cycles < res["ws"].total_cycles
-    # and the trace actually exercised the row-buffer model
-    stats = res["ws"].ops[0].dram_stats
+    cfg = tpu_like_config(array=32, dataflow="ws", sram_mb=0.4)
+    stats = Simulator(cfg, fidelity="trace").run_op(
+        resnet18_six_layers()[0]).dram_stats
     assert stats["row_hits"] + stats["row_misses"] + \
         stats["row_conflicts"] > 0
 

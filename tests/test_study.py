@@ -1,0 +1,304 @@
+"""The Study layer (repro.api.study): cross-product plan compilation,
+batched execution parity, the columnar frame ops, serialization + cache,
+and the named-study registry. The two paper studies' claims are covered
+in tests/test_paper_claims.py on the same fixtures."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (Simulator, Study, StudyResult, get_study,
+                       list_studies, preset_grid, register_study, studies)
+from repro.core.topology import Op
+
+OPS_A = [Op("a", 256, 1024, 512), Op("b", 512, 197, 768, count=3.0),
+         Op("v", kind="vector", vector_elems=8192.0, count=2.0)]
+OPS_B = [Op("c", 128, 512, 256), Op("d", 384, 64, 384)]
+
+
+# ---- plan + batched execution ---------------------------------------------
+
+def test_cross_product_parity_with_simulator_loop():
+    """designs x workloads x fidelity frame matches a python loop of
+    `Simulator.run` per cell to <= 1e-3."""
+    grid = preset_grid(array=[16, 32], sram_mb=[0.5, 2.0])
+    res = (Study().designs(grid)
+           .workloads({"wa": OPS_A, "wb": OPS_B})
+           .fidelity("fast").run())
+    assert len(res) == len(grid) * 2
+    assert (res["batched"] == 1.0).all()
+    for row_i in range(len(res)):
+        row = res.row(row_i)
+        # row order: workload-major, design fastest (one fidelity)
+        cfg = grid[row_i % len(grid)]
+        assert row["workload"] == ("wa" if row_i < len(grid) else "wb")
+        rep = Simulator(cfg).run(OPS_A if row["workload"] == "wa" else OPS_B)
+        assert row["total_cycles"] == pytest.approx(rep.total_cycles,
+                                                    rel=1e-3)
+        assert row["energy_pj"] == pytest.approx(rep.energy_pj, rel=1e-3)
+        assert row["edp"] == pytest.approx(rep.edp, rel=1e-3)
+        # grouped energy columns (shared schema) sum to the total
+        groups = sum(row[g] for g in ("energy_mac_pj", "energy_sram_pj",
+                                      "energy_dram_pj", "energy_static_pj"))
+        assert groups == pytest.approx(row["energy_pj"], rel=1e-3)
+
+
+def test_plan_batches_all_traceable_cells():
+    """Acceptance: a designs x workloads x {fast, trace} study executes
+    through the batched path — traceable cells never hit the per-cell
+    python loop."""
+    grid = preset_grid(array=[16, 32], dataflow=["ws", "os"])
+    study = (Study().designs(grid)
+             .workloads({"wa": OPS_A[:2], "wb": OPS_B})
+             .fidelity("fast", "trace"))
+    plan = study.plan()
+    assert len(plan) == 4 * 2 * 2
+    assert not plan.fallback and plan.n_batched == len(plan)
+    # groups are keyed by (workload, fidelity, dataflow[, dram])
+    assert all(len(g.cells) == 2 for g in plan.groups)
+    res = study.run()
+    assert (res["batched"] == 1.0).all()
+    # trace rows exist and differ from fast rows (different stall model)
+    tr, fa = res.filter(fidelity="trace"), res.filter(fidelity="fast")
+    assert not np.allclose(tr["stall_cycles"], fa["stall_cycles"])
+
+
+def test_non_traceable_cells_fall_back():
+    from repro.core.accelerator import SparsityConfig
+    grid = preset_grid(array=[16])
+    sparse = grid[0].with_(sparsity=SparsityConfig(enabled=True, n=2, m=4))
+    res = (Study().designs({"dense": grid[0], "sparse": sparse})
+           .workloads({"wa": OPS_A[:2]}).fidelity("fast").run())
+    assert res.filter(design="dense")["batched"][0] == 1.0
+    assert res.filter(design="sparse")["batched"][0] == 0.0
+    rep = Simulator(sparse).run(OPS_A[:2])
+    assert res.filter(design="sparse")["total_cycles"][0] == \
+        pytest.approx(rep.total_cycles, rel=1e-6)
+
+
+def test_sharded_vs_unsharded_equality():
+    import jax
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    grid = preset_grid(array=[8, 16, 32], sram_mb=[1.0])
+    mk = lambda: (Study().designs(grid).workloads({"wa": OPS_A[:1]})
+                  .fidelity("fast"))
+    plain = mk().run()
+    shard = mk().run(mesh=mesh)
+    for k in ("total_cycles", "energy_pj", "stall_cycles", "utilization"):
+        assert np.allclose(plain[k], shard[k], rtol=1e-6)
+
+
+# ---- frame ops on a known 3-design fixture --------------------------------
+
+@pytest.fixture()
+def fixture_frame():
+    cols = {
+        "design": np.array(["a", "b", "c"], dtype=object),
+        "workload": np.array(["w", "w", "w"], dtype=object),
+        "fidelity": np.array(["fast", "fast", "fast"], dtype=object),
+        # a: fast+hungry, b: balanced, c: slow+frugal; b best EdP,
+        # all three pareto-optimal on (cycles, energy)
+        "total_cycles": np.array([1e6, 2e6, 8e6]),
+        "energy_pj": np.array([9e9, 2e9, 1e9]),
+        "edp": np.array([9e6, 4e6, 8e6]),
+        "batched": np.ones(3),
+    }
+    axes = {"design": ["a", "b", "c"], "workload": ["w"],
+            "fidelity": ["fast"]}
+    return StudyResult(cols, axes)
+
+
+def test_best_argbest_aliases(fixture_frame):
+    f = fixture_frame
+    assert f.best("latency")["design"] == "a"
+    assert f.best("energy")["design"] == "c"
+    assert f.best("edp")["design"] == "b"
+    assert f.argbest("edp") == 1
+    by = f.best("edp", by="design")
+    assert set(by) == {"a", "b", "c"} and by["a"]["edp"] == 9e6
+
+
+def test_pareto_front(fixture_frame):
+    front = fixture_frame.pareto("total_cycles", "energy_pj")
+    assert sorted(front["design"]) == ["a", "b", "c"]
+    # dominate c with a strictly-better row -> c drops off the front
+    dominated = fixture_frame._subset(np.array([True, True, True]))
+    dominated.columns["total_cycles"] = np.array([1e6, 2e6, 8e6])
+    dominated.columns["energy_pj"] = np.array([9e9, 0.5e9, 1e9])
+    assert sorted(dominated.pareto("total_cycles",
+                                   "energy_pj")["design"]) == ["a", "b"]
+
+
+def test_filter_group_compare(fixture_frame):
+    f = fixture_frame
+    assert len(f.filter(design="a")) == 1
+    assert len(f.filter(design=["a", "c"])) == 2
+    assert len(f.filter(lambda r: r["total_cycles"] < 3e6)) == 2
+    assert set(f.group("design")) == {"a", "b", "c"}
+    ratios = f.compare("total_cycles", axis="design", baseline="a")
+    assert ratios["b"][0] == pytest.approx(2.0)
+    assert ratios["c"][0] == pytest.approx(8.0)
+    with pytest.raises(KeyError):
+        f.compare("total_cycles", axis="design", baseline="zzz")
+
+
+# ---- serialization + cache -------------------------------------------------
+
+def test_csv_json_roundtrip_and_schema(tmp_path):
+    res = (Study().designs(preset_grid(array=[16, 32]))
+           .workloads({"wa": OPS_A[:2]}).fidelity("fast").run())
+    # JSON round-trip carries the shared schema version
+    d = json.loads(res.to_json())
+    from repro.core.engine import RESULT_SCHEMA_VERSION
+    assert d["schema_version"] == RESULT_SCHEMA_VERSION
+    assert res.equals(StudyResult.from_json(res.to_json()))
+    # CSV round-trip is lossless (repr floats via the shared writer)
+    p = tmp_path / "frame.csv"
+    res.to_csv(str(p))
+    back = StudyResult.from_csv(str(p))
+    for k in res.columns:
+        assert np.array_equal(back.columns[k], res.columns[k]), k
+    # a deserialized frame has no claims: claims_ok is loud, not True
+    with pytest.raises(ValueError):
+        back.claims_ok()
+    # claims are scoped to the full frame — subframes don't carry them
+    with pytest.raises(ValueError):
+        res.filter(design=res.axes["design"][0]).claims_ok()
+    # NetworkReport shares the version stamp and group columns
+    rep = Simulator("paper-32").run(OPS_A[:2])
+    rd = json.loads(rep.to_json())
+    assert rd["schema_version"] == RESULT_SCHEMA_VERSION
+    rep.write_csv(str(tmp_path / "rep.csv"))
+    header = (tmp_path / "rep.csv").read_text().splitlines()[0].split(",")
+    for g in ("energy_mac_pj", "energy_sram_pj", "energy_dram_pj",
+              "energy_static_pj"):
+        assert g in header and g in res.columns
+
+
+def test_cache_hits_return_identical_frame(tmp_path):
+    cache = str(tmp_path / "cells")
+    mk = lambda: (Study("cached").designs(preset_grid(array=[16, 32]))
+                  .workloads({"wa": OPS_A[:2]}).fidelity("fast")
+                  .cache(cache))
+    first = mk().run()
+    assert first.executed_cells == 2 and first.cache_hits == 0
+    import os
+    mtimes = {f: os.path.getmtime(os.path.join(cache, f))
+              for f in os.listdir(cache)}
+    second = mk().run()
+    assert second.executed_cells == 0 and second.cache_hits == 2
+    assert first.equals(second)
+    # pure hits must not rewrite the cache files
+    assert mtimes == {f: os.path.getmtime(os.path.join(cache, f))
+                      for f in os.listdir(cache)}
+    # a changed cell (new design) re-executes only the new cell
+    third = (Study("cached")
+             .designs(preset_grid(array=[16, 32, 64]))
+             .workloads({"wa": OPS_A[:2]}).fidelity("fast")
+             .cache(cache).run())
+    assert third.executed_cells == 1 and third.cache_hits == 2
+    assert np.array_equal(third["total_cycles"][:2], first["total_cycles"])
+
+
+# ---- named studies / registry ---------------------------------------------
+
+def test_registry_and_namespace():
+    assert {"edp_array_size", "dataflow_dram_flip",
+            "multicore_contention"} <= set(list_studies())
+    assert isinstance(get_study("edp_array_size", smoke=True), Study)
+    with pytest.raises(KeyError):
+        get_study("no-such-study")
+    with pytest.raises(AttributeError):
+        studies.no_such_study
+    with pytest.raises(ValueError):
+        register_study("edp_array_size")(lambda: None)
+
+
+def test_contention_study_claims():
+    """The multi-core contention study (custom evaluator over
+    `simulate_multicore_contention`): shared DRAM never beats isolation
+    and extra channels relieve the shared makespan."""
+    from repro.trace import TraceSpec
+    res = studies.multicore_contention(
+        channels=(1, 4), gemm=(256, 512, 512),
+        spec=TraceSpec(cap=1024)).run()
+    assert res.claims_ok(), res.check_claims()
+    assert (res["batched"] == 0.0).all()      # custom evaluator: per-cell
+    assert "makespan_shared" in res.columns and "channels" in res.columns
+
+
+def test_preset_grid_preset_and_dataflow_axes():
+    grid = preset_grid(preset=["paper-32", "edge-8"],
+                       dataflow=["ws", "os"])
+    assert len(grid) == 4
+    assert [(c.cores[0].rows, c.dataflow) for c in grid] == \
+        [(32, "ws"), (32, "os"), (8, "ws"), (8, "os")]
+    # factory kwargs still cross as before
+    grid = preset_grid(array=[8, 16], sram_mb=[1.0], dataflow=["ws", "os"])
+    assert len(grid) == 4 and grid[1].dataflow == "os"
+
+
+def test_filter_predicate_on_empty_frame(fixture_frame):
+    empty = fixture_frame.filter(design="nonexistent")
+    assert len(empty) == 0
+    assert len(empty.filter(lambda r: r["total_cycles"] < 1e6)) == 0
+
+
+def test_csv_roundtrip_with_comma_in_label(tmp_path):
+    res = (Study().designs({"a,b": "paper-32"})
+           .workloads({"w,1": OPS_A[:1]}).fidelity("fast").run())
+    p = tmp_path / "comma.csv"
+    res.to_csv(str(p))
+    back = StudyResult.from_csv(str(p))
+    assert back["design"][0] == "a,b" and back["workload"][0] == "w,1"
+    assert np.array_equal(back["total_cycles"], res["total_cycles"])
+
+
+def test_run_cache_kwarg_does_not_stick(tmp_path):
+    study = (Study().designs(preset_grid(array=[16]))
+             .workloads({"w": OPS_A[:1]}).fidelity("fast"))
+    study.run(cache=str(tmp_path / "once"))
+    assert study._cache_dir is None
+    again = study.run()                       # no cache dir -> no hits
+    assert again.cache_hits == 0 and again.executed_cells == 1
+
+
+def test_distinct_evaluators_never_share_cache(tmp_path):
+    cache = str(tmp_path / "cells")
+
+    def mk(fn):
+        return (Study().designs(preset_grid(array=[16]))
+                .workloads({"w": OPS_A[:1]}).fidelity("fast")
+                .evaluator(fn).cache(cache))
+
+    first = mk(lambda c, o, f: {"m": 1.0}).run()
+    second = mk(lambda c, o, f: {"m": 2.0}).run()   # same qualname
+    assert first.executed_cells == 1 and second.executed_cells == 1
+    assert second["m"][0] == 2.0
+
+
+def test_empty_sweep_still_returns_empty_result():
+    res = Simulator().sweep([], OPS_A[:1])
+    assert len(res) == 0 and res.batched
+    assert res.total_cycles.shape == (0,)
+
+
+def test_csv_writer_accepts_numpy_scalars(tmp_path):
+    from repro.core.engine import write_csv_table
+    p = tmp_path / "np.csv"
+    write_csv_table(str(p), ["x"], [[np.float64(1.5)]])
+    assert p.read_text().splitlines()[1] == "1.5"
+
+
+def test_study_validation_errors():
+    with pytest.raises(ValueError):
+        Study().workloads({"w": OPS_A}).run()          # no designs
+    with pytest.raises(ValueError):
+        Study().designs(preset_grid(array=[16])).run()  # no workloads
+    with pytest.raises(ValueError):
+        Study().fidelity("nope")
+    with pytest.raises(TypeError):
+        Study().workloads(42)
+    with pytest.raises(KeyError):
+        (Study().designs(preset_grid(array=[16]))
+         .workloads({"w": OPS_A[:1]}).metrics("not_a_metric").run())
