@@ -89,6 +89,21 @@ def run(smoke: bool = False):
     artifact["trace_engine"] = Simulator("paper-32",
                                          fidelity="trace").engine
 
+    # mixed sparse+dense sweep (ISSUE 5): a 32-design grid crossing
+    # {dense, 2:4, 1:4, 1:4 row-wise} sparsity with array/SRAM sizes —
+    # every cell batches (no per-op fallback since sparsity became a
+    # traced kernel axis); CI gates sparse_sweep_designs_per_sec
+    sgrid = preset_grid(array=[8, 16, 32, 64], sram_mb=[0.5, 1.0],
+                        sparsity=[None, "2:4", "1:4", "1:4-rw"])
+    assert len(sgrid) == 32
+    spres, us_sp = timed(lambda: base.sweep(sgrid, op), repeat=3)
+    assert spres.batched, "sparse sweep cells must batch"
+    spdps = len(sgrid) / (us_sp / 1e6)
+    rows.append((f"sparse_sweep_{len(sgrid)}_designs", us_sp,
+                 f"designs_per_sec={spdps:.0f}"))
+    artifact["sparse_sweep_designs"] = len(sgrid)
+    artifact["sparse_sweep_designs_per_sec"] = spdps
+
     # Study layer: designs x 2 workloads x {fast, trace} compiled into
     # batched groups — the cross-product path CI gates via
     # study_cells_per_sec (benchmarks/baseline.json)

@@ -20,6 +20,7 @@ GATES = {
     "trace_sweep_designs_per_sec": 0.2,
     "sweep_designs_per_sec": 0.2,
     "study_cells_per_sec": 0.2,
+    "sparse_sweep_designs_per_sec": 0.2,
 }
 
 

@@ -22,7 +22,8 @@ layer (plan -> groups -> frame).
 from ..core.accelerator import AcceleratorConfig
 from ..core.engine import NetworkReport, OpResult
 from ..core.stages import FIDELITIES, build_pipeline
-from .presets import get_preset, list_presets, preset_grid, register_preset
+from .presets import (as_sparsity, get_preset, list_presets, preset_grid,
+                      register_preset, with_cores)
 from .simulator import (Simulator, SweepResult, as_config, as_workload)
 from .study import (Study, StudyPlan, StudyResult, get_study, list_studies,
                     register_study, studies)
@@ -30,7 +31,8 @@ from .study import (Study, StudyPlan, StudyResult, get_study, list_studies,
 __all__ = [
     "AcceleratorConfig", "FIDELITIES", "NetworkReport", "OpResult",
     "Simulator", "Study", "StudyPlan", "StudyResult", "SweepResult",
-    "as_config", "as_workload", "build_pipeline", "get_preset",
-    "get_study", "list_presets", "list_studies", "preset_grid",
-    "register_preset", "register_study", "studies",
+    "as_config", "as_sparsity", "as_workload", "build_pipeline",
+    "get_preset", "get_study", "list_presets", "list_studies",
+    "preset_grid", "register_preset", "register_study", "studies",
+    "with_cores",
 ]

@@ -8,9 +8,10 @@ everywhere — including `Simulator.sweep` grids.
 from __future__ import annotations
 
 import itertools
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional, Union
 
 from ..core.accelerator import (AcceleratorConfig, CoreConfig, MemoryConfig,
+                                SparsityConfig, near_square_grid,
                                 tpu_like_config)
 
 _PRESETS: Dict[str, Callable[..., AcceleratorConfig]] = {}
@@ -38,30 +39,87 @@ def list_presets() -> List[str]:
     return sorted(_PRESETS)
 
 
+SparsityLike = Union[None, str, tuple, SparsityConfig]
+
+
+def as_sparsity(v: SparsityLike) -> SparsityConfig:
+    """Sparsity-axis value -> SparsityConfig.
+
+    Accepted forms: None or 'dense' (disabled), 'N:M' (layer-wise),
+    'N:M-rw' (row-wise), an (n, m) tuple (layer-wise), an
+    (n, m, 'rw') tuple, or a SparsityConfig passed through.
+    """
+    if v is None or v == "dense":
+        return SparsityConfig()
+    if isinstance(v, SparsityConfig):
+        return v
+    if isinstance(v, str):
+        row_wise = v.endswith("-rw")
+        body = v[:-3] if row_wise else v
+        try:
+            n, m = (int(x) for x in body.split(":"))
+        except ValueError:
+            raise ValueError(
+                f"cannot parse sparsity {v!r}; expected 'dense', 'N:M' or "
+                f"'N:M-rw'") from None
+        return SparsityConfig(enabled=True, n=n, m=m, row_wise=row_wise)
+    if isinstance(v, tuple):
+        if len(v) == 2:
+            return SparsityConfig(enabled=True, n=v[0], m=v[1])
+        if len(v) == 3 and v[2] == "rw":
+            return SparsityConfig(enabled=True, n=v[0], m=v[1],
+                                  row_wise=True)
+    raise TypeError(f"cannot build SparsityConfig from {v!r}")
+
+
+def with_cores(cfg: AcceleratorConfig, cores: int) -> AcceleratorConfig:
+    """Re-mesh a config onto `cores` cores (near-square grid, the
+    prototype core replicated) — the `cores=` axis of `preset_grid`."""
+    pr, pc = near_square_grid(cores)
+    return cfg.with_(cores=(cfg.cores[0],), mesh_rows=pr, mesh_cols=pc)
+
+
 def preset_grid(name: str = "tpu-like", *, preset=None, dataflow=None,
-                **axes) -> List[AcceleratorConfig]:
+                sparsity=None, cores=None, **axes) -> List[AcceleratorConfig]:
     """Cartesian product of preset kwargs -> list of configs for
     `Study.designs` / `Simulator.sweep`, e.g.
     `preset_grid(array=[8, 16], sram_mb=[1, 8])`.
 
-    Two first-class axes beyond factory kwargs, so study grids span
-    presets and dataflows without manual list building:
+    Four first-class axes beyond factory kwargs, so study grids span
+    presets, core counts, sparsity regimes and dataflows without manual
+    list building:
 
     - `preset=[...]` crosses preset *names* (outermost axis), replacing
       the single `name`;
+    - `cores=[...]` re-meshes the built config onto each core count via
+      `with_cores` (near-square grid of the prototype core);
+    - `sparsity=[...]` applies each `as_sparsity` value ('dense',
+      '2:4', '1:4-rw', (n, m) tuples, SparsityConfig) via `with_`;
     - `dataflow=[...]` (innermost axis) is applied to the built config
       via `with_(dataflow=...)`, so it works for every preset whether or
       not its factory takes a dataflow kwarg.
+
+    Every cell of the resulting grid — sparse, multi-core or layout-
+    enabled alike — runs through the batched sweep kernels
+    (`fraction_batched == 1.0`; see tests/test_sweep_parity.py).
     """
     presets = list(preset) if preset is not None else [name]
     dataflows = list(dataflow) if dataflow is not None else [None]
+    sparsities = list(sparsity) if sparsity is not None else [None]
+    core_counts = list(cores) if cores is not None else [None]
     keys = list(axes)
     out = []
     for pname in presets:
         for combo in itertools.product(*(axes[k] for k in keys)):
-            cfg = get_preset(pname, **dict(zip(keys, combo)))
-            for df in dataflows:
-                out.append(cfg if df is None else cfg.with_(dataflow=df))
+            cfg0 = get_preset(pname, **dict(zip(keys, combo)))
+            for nc in core_counts:
+                cfg1 = cfg0 if nc is None else with_cores(cfg0, nc)
+                for sp in sparsities:
+                    cfg2 = (cfg1 if sp is None
+                            else cfg1.with_(sparsity=as_sparsity(sp)))
+                    for df in dataflows:
+                        out.append(cfg2 if df is None
+                                   else cfg2.with_(dataflow=df))
     return out
 
 
@@ -110,6 +168,16 @@ def _mcm(channels: int = 4, dataflow: str = "ws") -> AcceleratorConfig:
         memory=MemoryConfig(ifmap_sram_bytes=sram, filter_sram_bytes=sram,
                             ofmap_sram_bytes=sram),
         dram=DramConfig(channels=channels))
+
+
+@register_preset("ws-64-sparse-2:4")
+def _ws64_sparse(n: int = 2, m: int = 4,
+                 row_wise: bool = False) -> AcceleratorConfig:
+    """Paper Sec. IV SpMM reference design: a 64x64 weight-stationary
+    array streaming 2:4 layer-wise compressed weights (the Ampere-class
+    ratio); `n`/`m`/`row_wise` kwargs open the full N:M family."""
+    return tpu_like_config(array=64, dataflow="ws").with_(
+        sparsity=SparsityConfig(enabled=True, n=n, m=m, row_wise=row_wise))
 
 
 @register_preset("edge-8")

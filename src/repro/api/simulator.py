@@ -23,7 +23,8 @@ import numpy as np
 
 from ..core import dataflow as dfm
 from ..core import stages as st
-from ..core.accelerator import AcceleratorConfig, DramConfig, MemoryConfig
+from ..core.accelerator import (AcceleratorConfig, DramConfig, MemoryConfig,
+                                SparsityConfig)
 from ..core.energy import DEFAULT_ERT, ERT, energy_pj
 from ..core.engine import (_ENERGY_GROUPS, NetworkReport, OpResult,
                            simulate_network, simulate_op)
@@ -83,11 +84,13 @@ class SweepResult:
         return self.configs[self.argbest(objective)]
 
 
-def _traceable(cfg: AcceleratorConfig) -> bool:
-    """The vmapped fast path covers single-core dense configs (the DSE
-    regime); sparsity/layout/multicore points fall back to the engine."""
-    return (cfg.num_cores == 1 and not cfg.sparsity.enabled
-            and not cfg.layout.enabled)
+# Every AcceleratorConfig is traceable: sparsity (layer-wise and expected
+# row-wise), layout bank-conflict slowdown and the multi-core partition all
+# run inside the sweep kernel (core/stages.py traced twins), with the core
+# grid shape / layout fields / sparse representation as static kernel
+# flavors. The per-op engine remains reachable for 'cycle' fidelity,
+# custom evaluators, and the Study `force_fallback` oracle mode that the
+# differential parity suite exercises (tests/test_sweep_parity.py).
 
 
 class Simulator:
@@ -186,9 +189,11 @@ class Simulator:
 
     # ---- batched sweep -----------------------------------------------------
     def sweep(self, configs: Sequence[ConfigLike], workload: WorkloadLike,
-              *, mesh: Optional[jax.sharding.Mesh] = None) -> SweepResult:
+              *, mesh: Optional[jax.sharding.Mesh] = None,
+              force_fallback: bool = False) -> SweepResult:
         """Simulate `workload` on every config; one jitted/vmapped call per
-        (dataflow, word_bytes[, dram]) group of traceable configs.
+        static kernel flavor (dataflow, word_bytes, core grid, layout,
+        sparse representation[, dram]) group.
 
         .. deprecated:: `sweep` is now a thin wrapper over a one-workload
            `repro.api.study.Study` — the one execution path for
@@ -199,12 +204,11 @@ class Simulator:
 
         mesh: shard the design axis over a device mesh (launch/mesh.py);
         the grid is padded to a multiple of mesh.size.
-        Both 'fast' and 'trace' fidelities batch (the trace generators
-        are fixed-shape/vmappable; 'trace' groups additionally share a
-        DramConfig since the timing scan is specialized on it).
-        Non-traceable configs (multicore/sparsity/layout) and 'cycle'
-        fidelity run through the per-op engine instead — same result
-        contract, no batching.
+        Every config batches at 'fast' and 'trace' fidelity — sparsity,
+        layout and multi-core partitioning are evaluated inside the
+        kernel; only 'cycle' fidelity runs through the per-op engine.
+        force_fallback: run every cell through the per-op engine oracle
+        instead (the differential-parity reference; tests only).
         """
         from .study import Study
         cfgs = [as_config(c) for c in configs]
@@ -221,7 +225,8 @@ class Simulator:
                  .fidelity(self.fidelity)
                  .options(ert=self.ert, engine=self.engine,
                           trace_spec=self.trace_spec,
-                          core_index=self.core_index)
+                          core_index=self.core_index,
+                          force_fallback=force_fallback)
                  .run(mesh=mesh))
         return SweepResult(
             configs=cfgs,
@@ -243,25 +248,41 @@ _SWEEP_FN_CACHE: Dict[tuple, object] = {}
 
 def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT,
                        dram: Optional[DramConfig] = None, spec=None,
-                       engine: Optional[str] = None):
+                       engine: Optional[str] = None,
+                       mesh_shape: tuple = (1, 1),
+                       layout=None, r_cap: int = 0,
+                       representation: str = "ellpack_block",
+                       with_sparsity: bool = False):
     """Jitted (vmap over designs) sweep kernel, cached module-wide (see
     `_SWEEP_FN_CACHE`) so repeated sweeps — benchmark loops, serving
     traffic, new Simulator sessions — reuse the compiled executable.
 
+    Every config feature is either data (sparsity n/m/row-wise/enabled,
+    per-core geometry and NoP hops) vmapped over the design axis, or a
+    static kernel flavor baked into the cache key: `mesh_shape` (the
+    core grid — sweeps group by core count the way they group by
+    dataflow), `layout` (on/off plus the LayoutConfig bank/port/step
+    fields shaping the conflict model; None skips the layout math
+    entirely — the plan groups enabled and disabled cells separately),
+    `r_cap` (static bound on array rows for the layout window) and the
+    sparse metadata `representation`.
+
     With `dram` set (trace fidelity), the first-order stall is replaced by
     the cycle-accurate stall of each op's generated demand trace.  The
     demand stream of a design is fully determined by (array geometry,
-    memory sizing), so the sweep generates and replays one stream per
-    *unique* `sdesign` row and gathers per-design stalls through `smap`
-    (designs that differ only in bandwidth/SIMD/energy terms share the
-    replay).  The address decode (`decode_requests`) is hoisted out of
-    the per-design closure: the grouped sweep guarantees a common
-    (streams, ops, cap) shape, so the whole address batch decodes in
-    one call before the replay vmap.
+    memory sizing, sparsity, core grid) — the *effective* compute window
+    and the compressed filter traffic feed the prefetch scheduler — so
+    the sweep generates and replays one stream per unique `sdesign` row
+    and gathers per-design stalls through `smap` (designs that differ
+    only in bandwidth/SIMD/energy terms share the replay).  The address
+    decode (`decode_requests`) is hoisted out of the per-design closure:
+    the grouped sweep guarantees a common (streams, ops, cap) shape, so
+    the whole address batch decodes in one call before the replay vmap.
     """
     from ..core import replay as _rp
     engine = _rp.resolve_engine(engine)
-    key = (dataflow, word_bytes, ert, dram, spec, engine)
+    key = (dataflow, word_bytes, ert, dram, spec, engine, mesh_shape,
+           layout, r_cap, representation, with_sparsity)
     cached = _SWEEP_FN_CACHE.get(key)
     if cached is not None:
         return cached
@@ -269,6 +290,8 @@ def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT,
         from ..core.dram import decode_requests, replay_requests
         from ..trace.generator import DEFAULT_SPEC, gemm_request_stream
         spec = spec or DEFAULT_SPEC
+    Pr, Pc = mesh_shape
+    num_cores = Pr * Pc
 
     def _mem(d):
         return MemoryConfig(ifmap_sram_bytes=d["if_b"],
@@ -276,21 +299,40 @@ def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT,
                             ofmap_sram_bytes=d["o_b"],
                             l2_sram_bytes=d["l2_b"], word_bytes=word_bytes)
 
-    def _op_streams(d, M, N, K):
-        """Generated demand streams for every gemm op of one design."""
+    def _features(d, ov, on, om):
+        """The traced feature dicts of one design (static structure,
+        traced values) for `stages.traced_comp_traffic`. Per-op N:M
+        overrides (`Op.sparsity_nm`) mirror `stages.resolve_sparsity`:
+        the op's n:m wins and forces the sparsity stage on."""
+        sp = mc = None
+        if with_sparsity:
+            sp = dict(en=jnp.maximum(d["sp_en"], ov),
+                      n=jnp.where(ov > 0, on, d["sp_n"]),
+                      m=jnp.where(ov > 0, om, d["sp_m"]),
+                      rw=d["sp_rw"], representation=representation)
+        if num_cores > 1:
+            mc = dict(rows=d["mc_R"], cols=d["mc_C"], hops=d["mc_hops"],
+                      nop=d["nop"], Pr=Pr, Pc=Pc)
+        return sp, mc
+
+    def _op_streams(d, M, N, K, ov, on, om):
+        """Generated demand streams for every gemm op of one design,
+        driven by the *effective* compute window and the sparsity-shrunk
+        DRAM traffic (what the per-op TraceDramStage sees)."""
         mem, R, C = _mem(d), d["R"], d["C"]
+        sp, mc = _features(d, ov, on, om)
+        comp, _, dr, _ = st.traced_comp_traffic(
+            dataflow, M, N, K, R, C, mem, sparsity=sp, multicore=mc)
 
-        def per_op(m, n, k):
-            dr = dfm.dram_traffic(dataflow, m, n, k, R, C, mem)
-            comp = dfm.compute_cycles(dataflow, m, n, k, R, C)
-            return gemm_request_stream(
-                dataflow, m, n, k, R, C, comp, dr["dram_ifmap"],
-                dr["dram_filter"], dr["dram_ofmap_writes"],
-                dr["dram_ofmap_reads"], word_bytes, spec)
+        def per_op(m, n, k, comp_, di, dfl, dow, dor):
+            return gemm_request_stream(dataflow, m, n, k, R, C, comp_,
+                                       di, dfl, dow, dor, word_bytes, spec)
 
-        return jax.vmap(per_op)(M, N, K)        # (ops, cap) x4 + scale (ops,)
+        return jax.vmap(per_op)(M, N, K, comp, dr["dram_ifmap"],
+                                dr["dram_filter"], dr["dram_ofmap_writes"],
+                                dr["dram_ofmap_reads"])
 
-    def _trace_stalls(sdesign, smap, M, N, K):
+    def _trace_stalls(sdesign, smap, M, N, K, ov, on, om):
         """(designs, ops) cycle-accurate stalls: one replay per unique
         stream design, decode hoisted out of the per-design closure."""
 
@@ -300,7 +342,8 @@ def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT,
                                    ).stall_cycles
 
         t, addr, wbit, val, scale = jax.vmap(
-            _op_streams, in_axes=(0, None, None, None))(sdesign, M, N, K)
+            _op_streams, in_axes=(0,) + (None,) * 6)(
+                sdesign, M, N, K, ov, on, om)
         fb, ch, row = decode_requests(addr, dram)   # one flat decode
         if engine == "xla":
             # batch-native: one chunk scan over the whole (streams, ops)
@@ -310,16 +353,26 @@ def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT,
             stall = jax.vmap(jax.vmap(_replay))(t, fb, ch, row, wbit, val)
         return (stall * scale)[smap]
 
-    def one_design(d, M, N, K, cnt, velems, vcnt, trace_stall):
+    def one_design(d, M, N, K, cnt, ov, on, om, velems, vcnt, trace_stall):
         mem = _mem(d)
         R, C = d["R"], d["C"]
-        s = st.traced_gemm_stats(dataflow, M, N, K, R, C, mem, d["bw"])
+        sp, mc = _features(d, ov, on, om)
+        lay = None if layout is None else dict(cfg=layout, r_cap=r_cap)
+        s = st.traced_op_stats(dataflow, M, N, K, R, C, mem, d["bw"],
+                               sparsity=sp, multicore=mc, layout=lay)
         stall_per_op = s["stall_cycles"] if trace_stall is None else \
             trace_stall
         comp_t = s["compute_cycles"] * cnt
         stall_t = stall_per_op * cnt
+        lay_t = s["layout_extra_cycles"] * cnt
         dram_t = s["dram_bytes"] * cnt
         macs = M * N * K * cnt
+        if num_cores > 1:
+            pes = jnp.sum(d["mc_R"] * d["mc_C"])
+            dim32 = jnp.max(jnp.maximum(d["mc_R"], d["mc_C"])) / 32.0
+        else:
+            pes = R * C
+            dim32 = jnp.maximum(R, C) / 32.0
         counts = st.traced_energy_counts(
             R=R, C=C, mem=mem, cycles=comp_t, macs=macs,
             ifmap_reads=s["ifmap_reads"] * cnt,
@@ -327,7 +380,8 @@ def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT,
             ofmap_writes=s["ofmap_writes"] * cnt,
             ofmap_reads=s["ofmap_reads"] * cnt,
             dram_bytes=dram_t,
-            l2_reads=jnp.where(d["l2_b"] > 0, s["dram_elems"] * cnt, 0.0))
+            l2_reads=jnp.where(d["l2_b"] > 0, s["dram_elems"] * cnt, 0.0),
+            pes=pes, dim32=dim32)
         e = energy_pj(counts, ert)
 
         # SIMD sidecar (empty arrays contribute zero); like run_vector,
@@ -340,7 +394,7 @@ def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT,
             R=R, C=C, mem=mem, cycles=vcyc, macs=jnp.zeros_like(vcyc),
             ifmap_reads=vel_t, filter_reads=jnp.zeros_like(vel_t),
             ofmap_writes=vel_t, ofmap_reads=jnp.zeros_like(vel_t),
-            dram_bytes=vdram)
+            dram_bytes=vdram, pes=pes, dim32=dim32)
         ve = energy_pj(vcounts, ert)
         energy = jnp.sum(e["total"]) + jnp.sum(ve["total"])
         # the grouped-energy column schema shared with NetworkReport
@@ -350,64 +404,122 @@ def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT,
 
         comp = jnp.sum(comp_t) + jnp.sum(vcyc)
         stall = jnp.sum(stall_t)
+        lay_sum = jnp.sum(lay_t)
         dram_b = jnp.sum(dram_t) + jnp.sum(vdram)
-        total = comp + stall
+        total = comp + stall + lay_sum
         util = jnp.minimum(1.0, jnp.sum(macs)
-                           / jnp.maximum(1.0, R * C * total))
+                           / jnp.maximum(1.0, pes * total))
         return dict(total_cycles=total, compute_cycles=comp,
                     stall_cycles=stall, dram_bytes=dram_b,
                     energy_pj=energy, utilization=util, **groups)
 
-    def fn(design, sdesign, smap, M, N, K, cnt, velems, vcnt):
+    def fn(design, sdesign, smap, M, N, K, cnt, ov, on, om, velems, vcnt):
         if dram is not None:
-            stall = _trace_stalls(sdesign, smap, M, N, K)  # (designs, ops)
+            stall = _trace_stalls(sdesign, smap, M, N, K,
+                                  ov, on, om)          # (designs, ops)
             return jax.vmap(one_design,
-                            in_axes=(0, None, None, None, None, None,
-                                     None, 0))(design, M, N, K, cnt,
-                                               velems, vcnt, stall)
+                            in_axes=(0,) + (None,) * 9 + (0,))(
+                design, M, N, K, cnt, ov, on, om, velems, vcnt, stall)
         return jax.vmap(
             functools.partial(one_design, trace_stall=None),
-            in_axes=(0, None, None, None, None, None, None))(
-                design, M, N, K, cnt, velems, vcnt)
+            in_axes=(0,) + (None,) * 9)(
+                design, M, N, K, cnt, ov, on, om, velems, vcnt)
 
     return _SWEEP_FN_CACHE.setdefault(key, jax.jit(fn))
+
+
+def _pow2_cap(n: int) -> int:
+    """Smallest power of two >= n (static layout-window row bound —
+    bucketed so similar grids share one compiled kernel)."""
+    cap = 1
+    while cap < n:
+        cap *= 2
+    return cap
 
 
 def _sweep_batched(cfgs: Sequence[AcceleratorConfig], ops: Sequence[Op],
                    dataflow: str, word_bytes: int, ert: ERT,
                    mesh: Optional[jax.sharding.Mesh],
                    dram: Optional[DramConfig] = None,
-                   spec=None, engine: Optional[str] = None
-                   ) -> Dict[str, np.ndarray]:
-    """Stack config scalars, vmap the traced stages over the design axis."""
+                   spec=None, engine: Optional[str] = None,
+                   core_index: int = 0) -> Dict[str, np.ndarray]:
+    """Stack config scalars, vmap the traced stages over the design axis.
+
+    The caller (Study.plan) guarantees group-static flavor uniformity:
+    every config shares dataflow, word_bytes, the core grid shape, the
+    layout fields (when enabled) and the sparse representation.
+    """
     n = len(cfgs)
     f32 = np.float32
+    ci = core_index
+    Pr, Pc = cfgs[0].mesh_rows, cfgs[0].mesh_cols
+    num_cores = Pr * Pc
+    if any((c.mesh_rows, c.mesh_cols) != (Pr, Pc) for c in cfgs):
+        raise ValueError("sweep group mixes core-grid shapes")
+
+    gemms = [o for o in ops if o.kind == "gemm"]
+    vecs = [o for o in ops if o.kind == "vector"]
+    with_sparsity = (any(c.sparsity.enabled for c in cfgs)
+                     or any(o.sparsity_nm is not None for o in gemms))
+    # layout on/off is a static kernel flavor: the plan key puts enabled
+    # and disabled cells in different groups, so a group is all-or-none
+    with_layout = cfgs[0].layout.enabled
+    if any(c.layout.enabled != with_layout for c in cfgs):
+        raise ValueError(
+            "sweep group mixes layout-enabled and -disabled designs")
+    layout_key = (dataclasses.replace(cfgs[0].layout, enabled=True)
+                  if with_layout else None)
+    representation = cfgs[0].sparsity.representation
+    r_cap = (_pow2_cap(max(c.cores[ci].rows for c in cfgs))
+             if with_layout else 0)
+
+    # Per-op N:M overrides must form a valid SparsityConfig with every
+    # design's row_wise flag — mirrors stages.resolve_sparsity, which
+    # raises on the per-op oracle path; without this the batched kernel
+    # would silently compute what the oracle refuses (e.g. row-wise with
+    # n > m/2, or an m past the expected-max grid bound).
+    for o in gemms:
+        if o.sparsity_nm is not None:
+            for rw in {c.sparsity.row_wise for c in cfgs}:
+                SparsityConfig(enabled=True, n=o.sparsity_nm[0],
+                               m=o.sparsity_nm[1], row_wise=rw)
 
     # A design's demand stream is fully determined by (array geometry,
-    # memory sizing): replay one stream per unique combination and let
-    # designs that differ only in bandwidth/SIMD/energy terms share it.
+    # memory sizing, sparsity, core grid): replay one stream per unique
+    # combination and let designs that differ only in bandwidth/SIMD/
+    # energy/layout terms share it. The key carries only the fields that
+    # feed the stream (not whole CoreConfig/SparsityConfig objects, whose
+    # SIMD/seed fields would needlessly fragment the dedup).
     seen: Dict[tuple, int] = {}
     sidx: List[int] = []        # design index of each unique stream
     smap: List[int] = []        # design -> unique stream id
     for i, c in enumerate(cfgs):
-        k = (c.cores[0].rows, c.cores[0].cols, c.memory)
+        k = (tuple((k_.rows, k_.cols, k_.nop_hops) for k_ in c.cores),
+             c.mesh_rows, c.mesh_cols, c.memory,
+             (c.sparsity.enabled, c.sparsity.n, c.sparsity.m,
+              c.sparsity.row_wise, c.sparsity.representation),
+             c.nop_cycles_per_hop)
         if k not in seen:
             seen[k] = len(sidx)
             sidx.append(i)
         smap.append(seen[k])
 
-    gemms = [o for o in ops if o.kind == "gemm"]
-    vecs = [o for o in ops if o.kind == "vector"]
     M = jnp.asarray([o.M for o in gemms], f32)
     N = jnp.asarray([o.N for o in gemms], f32)
     K = jnp.asarray([o.K for o in gemms], f32)
     cnt = jnp.asarray([o.count for o in gemms], f32)
+    ov = jnp.asarray([0.0 if o.sparsity_nm is None else 1.0
+                      for o in gemms], f32)
+    on = jnp.asarray([1.0 if o.sparsity_nm is None else o.sparsity_nm[0]
+                      for o in gemms], f32)
+    om = jnp.asarray([1.0 if o.sparsity_nm is None else o.sparsity_nm[1]
+                      for o in gemms], f32)
     velems = jnp.asarray([o.vector_elems for o in vecs], f32)
     vcnt = jnp.asarray([o.count for o in vecs], f32)
 
     cols = {
-        "R": [c.cores[0].rows for c in cfgs],
-        "C": [c.cores[0].cols for c in cfgs],
+        "R": [c.cores[ci].rows for c in cfgs],
+        "C": [c.cores[ci].cols for c in cfgs],
         "lanes": [c.cores[0].simd_lanes for c in cfgs],
         "lat": [c.cores[0].simd_latency for c in cfgs],
         "if_b": [c.memory.ifmap_sram_bytes for c in cfgs],
@@ -417,10 +529,23 @@ def _sweep_batched(cfgs: Sequence[AcceleratorConfig], ops: Sequence[Op],
         "bw": [c.dram.bandwidth_bytes_per_cycle * c.dram.channels
                for c in cfgs],
     }
+    stream_keys = ["R", "C", "if_b", "f_b", "o_b", "l2_b"]
+    if with_sparsity:
+        cols["sp_en"] = [1.0 if c.sparsity.enabled else 0.0 for c in cfgs]
+        cols["sp_n"] = [c.sparsity.n for c in cfgs]
+        cols["sp_m"] = [c.sparsity.m for c in cfgs]
+        cols["sp_rw"] = [1.0 if c.sparsity.row_wise else 0.0 for c in cfgs]
+        stream_keys += ["sp_en", "sp_n", "sp_m", "sp_rw"]
+    if num_cores > 1:
+        cols["mc_R"] = [[k.rows for k in c.cores] for c in cfgs]
+        cols["mc_C"] = [[k.cols for k in c.cores] for c in cfgs]
+        cols["mc_hops"] = [[k.nop_hops for k in c.cores] for c in cfgs]
+        cols["nop"] = [c.nop_cycles_per_hop for c in cfgs]
+        stream_keys += ["mc_R", "mc_C", "mc_hops", "nop"]
     sdesign = smap_arr = None
     if dram is not None:
         sdesign = {k: jnp.asarray([cols[k][i] for i in sidx], f32)
-                   for k in ("R", "C", "if_b", "f_b", "o_b", "l2_b")}
+                   for k in stream_keys}
     pad = 0
     if mesh is not None and mesh.size > 1:
         pad = (-n) % mesh.size
@@ -436,6 +561,10 @@ def _sweep_batched(cfgs: Sequence[AcceleratorConfig], ops: Sequence[Op],
         design = {k: jax.device_put(v, sharding) for k, v in design.items()}
 
     fn = _batched_design_fn(dataflow, word_bytes, ert, dram, spec,
-                            engine=engine)
-    res = fn(design, sdesign, smap_arr, M, N, K, cnt, velems, vcnt)
+                            engine=engine, mesh_shape=(Pr, Pc),
+                            layout=layout_key, r_cap=r_cap,
+                            representation=representation,
+                            with_sparsity=with_sparsity)
+    res = fn(design, sdesign, smap_arr, M, N, K, cnt, ov, on, om,
+             velems, vcnt)
     return {k: np.asarray(v, np.float64)[:n] for k, v in res.items()}

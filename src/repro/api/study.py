@@ -52,7 +52,7 @@ from ..core.engine import (ENERGY_GROUP_COLUMNS, RESULT_SCHEMA_VERSION,
                            energy_group_totals, simulate_network,
                            write_csv_table)
 from ..core.topology import Op
-from .simulator import _sweep_batched, _traceable, as_config, as_workload
+from .simulator import _sweep_batched, as_config, as_workload
 
 AXIS_COLUMNS = ("design", "workload", "fidelity")
 
@@ -102,8 +102,10 @@ class StudyCell:
 @dataclasses.dataclass
 class BatchGroup:
     """Cells that execute as ONE jitted/vmapped `_sweep_batched` call:
-    same workload + fidelity, and the static pipeline flavor
-    (dataflow, word_bytes[, DramConfig]) the sweep kernels specialize on."""
+    same workload + fidelity, and the static pipeline flavor the sweep
+    kernels specialize on — (dataflow, word_bytes[, DramConfig]) plus the
+    core-grid shape, layout fields and sparse metadata representation
+    (derived from the member configs inside `_sweep_batched`)."""
     workload: str
     fidelity: str
     dataflow: str
@@ -151,6 +153,15 @@ class StudyResult:
     # ---- basic access ------------------------------------------------------
     def __len__(self) -> int:
         return 0 if not self.columns else len(next(iter(self.columns.values())))
+
+    @property
+    def fraction_batched(self) -> float:
+        """Fraction of cells that executed through a vmapped sweep kernel
+        (1.0 = the whole study ran batched; the acceptance bar for
+        arbitrary mixed sparsity/layout/multicore grids)."""
+        if not len(self) or "batched" not in self.columns:
+            return 1.0
+        return float(np.mean(self.columns["batched"]))
 
     def __getitem__(self, name: str) -> np.ndarray:
         return self.columns[_METRIC_ALIASES.get(name, name)]
@@ -366,6 +377,7 @@ class Study:
         self._engine: Optional[str] = None
         self._spec = None
         self._core_index: int = 0
+        self._force_fallback: bool = False
         self._cache_dir: Optional[str] = None
         self._evaluator: Optional[Evaluator] = None
         self._claims: List[Tuple[str, Callable]] = []
@@ -386,8 +398,17 @@ class Study:
                     raise ValueError("labels/configs length mismatch")
                 out = list(zip([str(x) for x in labels], cfgs))
             else:
-                base = [f"{c.cores[0].rows}x{c.cores[0].cols}-{c.dataflow}"
-                        for c in cfgs]
+                def auto(c: AcceleratorConfig) -> str:
+                    b = f"{c.cores[0].rows}x{c.cores[0].cols}-{c.dataflow}"
+                    if c.num_cores > 1:
+                        b += f"-{c.num_cores}c"
+                    if c.sparsity.enabled:
+                        b += (f"-{c.sparsity.n}:{c.sparsity.m}"
+                              + ("rw" if c.sparsity.row_wise else ""))
+                    if c.layout.enabled:
+                        b += "-lay"
+                    return b
+                base = [auto(c) for c in cfgs]
                 counts: Dict[str, int] = {}
                 for b in base:
                     counts[b] = counts.get(b, 0) + 1
@@ -449,8 +470,15 @@ class Study:
 
     def options(self, *, ert: Optional[ERT] = None,
                 engine: Optional[str] = None, trace_spec=None,
-                core_index: Optional[int] = None) -> "Study":
-        """Execution knobs shared by every cell (see `Simulator`)."""
+                core_index: Optional[int] = None,
+                force_fallback: Optional[bool] = None) -> "Study":
+        """Execution knobs shared by every cell (see `Simulator`).
+
+        force_fallback: run every cell through the per-op engine oracle
+        instead of the batched sweep kernels — the differential-parity
+        reference path (tests/test_sweep_parity.py); identical result
+        contract, no batching.
+        """
         from ..core import replay as _rp
         if ert is not None:
             self._ert = ert
@@ -460,6 +488,8 @@ class Study:
             self._spec = trace_spec
         if core_index is not None:
             self._core_index = core_index
+        if force_fallback is not None:
+            self._force_fallback = bool(force_fallback)
         return self
 
     def cache(self, path: str) -> "Study":
@@ -516,18 +546,28 @@ class Study:
         by_key: Dict[tuple, List[int]] = {}
         fallback: List[int] = []
         for c in cells:
+            # every AcceleratorConfig is traceable — sparsity, layout and
+            # multi-core partitioning run inside the sweep kernel; only
+            # 'cycle' fidelity, custom evaluators and the force_fallback
+            # oracle mode (the parity suite's reference) stay per-op
             batchable = (self._evaluator is None
-                         and c.fidelity in ("fast", "trace")
-                         and _traceable(c.config))
+                         and not self._force_fallback
+                         and c.fidelity in ("fast", "trace"))
             if batchable:
-                key = (c.workload, c.fidelity, c.config.dataflow,
-                       c.config.memory.word_bytes,
-                       c.config.dram if c.fidelity == "trace" else None)
+                cfg = c.config
+                key = (c.workload, c.fidelity, cfg.dataflow,
+                       cfg.memory.word_bytes,
+                       cfg.dram if c.fidelity == "trace" else None,
+                       (cfg.mesh_rows, cfg.mesh_cols),
+                       # layout fields only matter when enabled: disabled
+                       # cells share one flavor (and skip the layout math)
+                       cfg.layout if cfg.layout.enabled else None,
+                       cfg.sparsity.representation)
                 by_key.setdefault(key, []).append(c.index)
             else:
                 fallback.append(c.index)
-        groups = [BatchGroup(w, f, df, wb, dram, idxs)
-                  for (w, f, df, wb, dram), idxs in by_key.items()]
+        groups = [BatchGroup(*key[:5], cells=idxs)
+                  for key, idxs in by_key.items()]
         return StudyPlan(cells=cells, groups=groups, fallback=fallback)
 
     def _cell_hash(self, cell: StudyCell) -> str:
@@ -544,6 +584,9 @@ class Study:
             "engine": _rp.resolve_engine(self._engine),
             "spec": dataclasses.asdict(spec) if spec is not None else None,
             "core_index": self._core_index,
+            # the oracle and the batched kernel agree only to ~1e-3: their
+            # cells must never alias in the on-disk cache
+            "force_fallback": self._force_fallback,
             "evaluator": self._evaluator_key(),
         }
         blob = json.dumps(payload, sort_keys=True, default=str)
@@ -617,7 +660,8 @@ class Study:
             vals = _sweep_batched(
                 [plan.cells[i].config for i in miss], ops, grp.dataflow,
                 grp.word_bytes, self._ert, mesh, dram=grp.dram,
-                spec=self._spec_for(grp.fidelity), engine=self._engine)
+                spec=self._spec_for(grp.fidelity), engine=self._engine,
+                core_index=self._core_index)
             vals["edp"] = _edp(vals["energy_pj"], vals["total_cycles"])
             for j, i in enumerate(miss):
                 results[i] = {k: float(v[j]) for k, v in vals.items()}
@@ -839,6 +883,52 @@ def multicore_contention_study(channels: Sequence[int] = (1, 2, 4),
     s.claim("more_channels_relieve_shared_makespan",
             lambda r: bool(np.all(np.diff(
                 r["makespan_shared"][np.argsort(r["channels"])]) <= 0.0)))
+    return s
+
+
+@register_study("sparse_speedup")
+def sparse_speedup(smoke: bool = False) -> Study:
+    """Paper Sec. IV SpMM claim: on a weight-stationary array streaming
+    compressed weights, layer-wise N:M sparsity shrinks compute cycles by
+    ~m/n (2:4 halves them, 1:4 quarters them), while row-wise N:M — whose
+    per-(row, block) nonzero count is Uniform{1..m/2} and whose fold
+    length is the lockstep max over the fold's columns (expected-K model,
+    `core.sparsity.effective_K_model`) — lands strictly between dense and
+    the matched layer-wise ratio. Every cell, sparse included, executes
+    through the batched sweep kernels (`fraction_batched == 1.0`).
+    `smoke` shrinks the token dimension; the fold-count ratios the claims
+    test are token-count invariant."""
+    from .presets import get_preset
+    n_tok = 128 if smoke else 1024
+    wl = [Op("spmm-ffn1", 4096, n_tok, 1024),
+          Op("spmm-ffn2", 1024, n_tok, 4096)]
+    s = (Study("sparse_speedup")
+         .designs({
+             "dense": get_preset("paper-64"),
+             "lw-2:4": get_preset("ws-64-sparse-2:4"),
+             "lw-1:4": get_preset("ws-64-sparse-2:4", n=1),
+             "rw-1:4": get_preset("ws-64-sparse-2:4", n=1, row_wise=True),
+         })
+         .workloads({"spmm-ffn": wl})
+         .fidelity("fast"))
+
+    def speedup(r: StudyResult, design: str) -> float:
+        return 1.0 / float(r.compare("compute_cycles", axis="design",
+                                     baseline="dense")[design][0])
+
+    s.claim("layerwise_2to4_speedup_near_2x",
+            lambda r: 1.9 < speedup(r, "lw-2:4") <= 2.05)
+    s.claim("layerwise_1to4_speedup_near_4x",
+            lambda r: 3.6 < speedup(r, "lw-1:4") <= 4.1)
+    s.claim("rowwise_lands_between_dense_and_layerwise",
+            lambda r: float(r.filter(design="lw-1:4")["compute_cycles"][0])
+            < float(r.filter(design="rw-1:4")["compute_cycles"][0])
+            < float(r.filter(design="dense")["compute_cycles"][0]))
+    s.claim("compressed_weights_cut_dram_traffic",
+            lambda r: float(r.filter(design="lw-2:4")["dram_bytes"][0])
+            < float(r.filter(design="dense")["dram_bytes"][0]))
+    s.claim("all_cells_batched",
+            lambda r: r.fraction_batched == 1.0)
     return s
 
 

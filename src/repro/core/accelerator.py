@@ -78,6 +78,11 @@ class SparsityConfig:
             if self.row_wise and self.n > self.m // 2:
                 raise ValueError(
                     f"row-wise sparsity requires N <= M/2, got {self.n}:{self.m}")
+            if self.row_wise and self.m > 128:
+                # core.sparsity.ROWWISE_HALF_CAP bounds the expected-max
+                # j-grid; beyond it the traced model would silently truncate
+                raise ValueError(
+                    f"row-wise sparsity supports M <= 128, got M={self.m}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,14 +162,21 @@ class AcceleratorConfig:
         return cls(**kw)
 
 
-def tpu_like_config(array: int = 128, cores: int = 1, dataflow: str = "ws",
-                    sram_mb: float = 8.0) -> AcceleratorConfig:
-    """A TPU-like single/multi tensor-core configuration (Sec. V-C1)."""
+def near_square_grid(cores: int) -> Tuple[int, int]:
+    """Factor a core count into the most-square (Pr, Pc) mesh."""
     import math
+    if cores < 1:
+        raise ValueError(f"core count must be >= 1, got {cores}")
     pr = int(math.sqrt(cores))
     while cores % pr:
         pr -= 1
-    pc = cores // pr
+    return pr, cores // pr
+
+
+def tpu_like_config(array: int = 128, cores: int = 1, dataflow: str = "ws",
+                    sram_mb: float = 8.0) -> AcceleratorConfig:
+    """A TPU-like single/multi tensor-core configuration (Sec. V-C1)."""
+    pr, pc = near_square_grid(cores)
     sram = int(sram_mb * (1 << 20) / 3)
     return AcceleratorConfig(
         cores=(CoreConfig(rows=array, cols=array),),

@@ -79,6 +79,65 @@ def streaming_access_pattern(R: int, n_cycles: int, lead_stride: int,
     return t * lead_stride + r * elem_stride
 
 
+# Fixed per-op analysis window of the streaming slowdown model: every
+# op is analyzed over at most this many cycles (the oracle previously
+# sized the window to the op; a static window + validity mask keeps the
+# model jit/vmap-safe with `comp` as traced data).
+STREAM_WINDOW_CYCLES = 512
+
+
+def _distinct_slowdown(line, bank, num_banks: int, ports: int):
+    """Per-cycle slowdown from (cycles, k) line/bank ids — the same
+    quantity as `slowdown_per_cycle`, computed with a scatter-add instead
+    of a one-hot einsum so large vmapped batches don't materialize a
+    (cycles, k, banks) intermediate. line/bank may be traced floats."""
+    line = line.astype(jnp.int32)
+    bank = bank.astype(jnp.int32)
+    stride = jnp.max(line) + 1
+    key = jnp.sort(bank * stride + line, axis=1)
+    new = jnp.concatenate(
+        [jnp.ones_like(key[:, :1], bool), key[:, 1:] != key[:, :-1]], axis=1)
+    b = key // stride
+    cyc = jnp.broadcast_to(jnp.arange(key.shape[0])[:, None], key.shape)
+    counts = jnp.zeros((key.shape[0], num_banks), jnp.int32)
+    counts = counts.at[cyc, b].add(new.astype(jnp.int32))
+    per_bank = -(-counts // ports)
+    return jnp.maximum(1, per_bank.max(axis=1))
+
+
+def streaming_layout_extra(cfg: LayoutConfig, R, comp, elem_stride,
+                           word_bytes: int = 2, *, r_cap: int = None,
+                           lead_stride: int = 1):
+    """Extra cycles a systolic streaming pattern loses to bank conflicts.
+
+    The traced twin of the LayoutStage model, shared by the per-op oracle
+    pipeline and the batched sweep kernel so both paths agree bit-for-bit:
+    `R`, `comp` and `elem_stride` may be traced scalars; the LayoutConfig
+    fields, `r_cap` (static bound on R — rows beyond R are masked by
+    duplicating the r=0 access, which adds no distinct (bank, line) pair)
+    and the `STREAM_WINDOW_CYCLES` window are static. Cycles past
+    clip(floor(comp), 8, window) are masked out of the mean, reproducing
+    the op-sized window of the eager model exactly.
+    """
+    if r_cap is None:
+        r_cap = int(R)
+    n_cyc = STREAM_WINDOW_CYCLES
+    t = jnp.arange(n_cyc, dtype=jnp.int32)
+    r = jnp.arange(r_cap, dtype=jnp.int32)
+    # integer index grid: element offsets stay exact past f32's 2^24
+    # (large-vocab GEMMs stream with strides in the 100k+ range)
+    stride = jnp.asarray(elem_stride, jnp.int32)
+    idx = t[:, None] * int(lead_stride) + r[None, :] * stride
+    line, _, bank = flat_ids(idx, cfg, word_bytes)
+    rvalid = r[None, :] < R
+    line = jnp.where(rvalid, line, line[:, :1])
+    bank = jnp.where(rvalid, bank, bank[:, :1])
+    sd = _distinct_slowdown(line, bank, cfg.num_banks, cfg.ports_per_bank)
+    n_valid = jnp.clip(jnp.floor(jnp.minimum(1.0 * comp, n_cyc)), 8, n_cyc)
+    mean_sd = jnp.sum(jnp.where(t < n_valid, sd, 0)) / n_valid
+    return (mean_sd - 1.0) * comp
+
+
 DRAM_LAYOUTS = ("row", "col", "tiled", "strided")
 
 

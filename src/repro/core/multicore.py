@@ -12,17 +12,26 @@ b_i = nop_hops * cycles_per_hop * tiles, solve
 then integerize s_i (floor + distribute remainder) and the makespan is
 max_i(a_i * s_i + b_i). Uniform grids with zero hops reduce exactly to the
 partition.py equations.
+
+The solve lives in `multicore_model` / `best_multicore_cycles_model` —
+pure-jnp, no Python branching on data, with the core grid shape (Pr, Pc)
+and scheme static — so the batched sweep kernel evaluates the whole
+spatio-temporal partition *inside* jit/vmap, grouped by core count the
+way it groups by dataflow. The eager `simulate_multicore` delegates to
+the same model, which keeps the per-op oracle and the batched sweep
+bit-identical.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from .accelerator import AcceleratorConfig, CoreConfig
 from .dataflow import cdiv, map_gemm
-from .partition import partition_footprint
+from .partition import SCHEMES, partition_footprint
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,10 +49,9 @@ class MultiCoreResult:
     reduce_elems: float
 
 
-def _core_rate(core: CoreConfig, split: str, scheme: str, dataflow: str,
-               Sr: int, Sc: int, T: int, Pr: int, Pc: int) -> float:
-    """Cycles per unit of the split dimension on this core (a_i)."""
-    R, C = core.rows, core.cols
+def _scheme_rate(scheme: str, R, C, Sr, Sc, T, Pr: int, Pc: int):
+    """Cycles per unit of the split dimension on one core (a_i). `scheme`,
+    `Pr`, `Pc` static; everything else may be traced arrays."""
     if scheme == "spatial":
         # split Sr: cycles(s) = (2R+C+T-2) * ceil(s/R) * ceil(Sc/(Pc*C))
         return (2 * R + C + T - 2) * cdiv(Sc, Pc * C) / R
@@ -53,23 +61,111 @@ def _core_rate(core: CoreConfig, split: str, scheme: str, dataflow: str,
     return (2 * R + C + cdiv(T, Pr) - 2) * cdiv(Sr, R) / C
 
 
+def _scheme_cycles(scheme: str, R, C, s, Sr, Sc, T, Pr: int, Pc: int):
+    """Exact (integer-share) cycles of one core given its split share s."""
+    if scheme == "spatial":
+        return (2 * R + C + T - 2) * cdiv(s, R) * cdiv(Sc, Pc * C)
+    if scheme == "st1":
+        return (2 * R + C + cdiv(T, Pc) - 2) * cdiv(s, R) * cdiv(Sc, C)
+    return (2 * R + C + cdiv(T, Pr) - 2) * cdiv(Sr, R) * cdiv(s, C)
+
+
+def split_shares_model(total, a, b):
+    """`nonuniform_split` on arrays: group axis 0, any broadcast batch
+    behind it. Integerization gives the remainder to the largest
+    fractional parts (stable argsort: ties break to the lowest index).
+
+    Float32 (so the batched sweep kernel and the eager oracle share one
+    bit-identical implementation): shares sum to `total` exactly for
+    split dims within f32's integer range (2^24); beyond it, rounding
+    residue is folded into the largest-fraction group, keeping the sum
+    within an ulp of `total` (relative ~1e-7) instead of silently
+    dropping split units.
+    """
+    inv = 1.0 / a
+    theta = (total + jnp.sum(b * inv, axis=0)) / jnp.sum(inv, axis=0)
+    s = jnp.maximum(0.0, (theta - b) * inv)
+    scale = total / jnp.maximum(jnp.sum(s, axis=0), 1e-9)
+    s = s * scale
+    fl = jnp.floor(s)
+    rem = total - jnp.sum(fl, axis=0)
+    order = jnp.argsort(-(s - fl), axis=0)
+    rank = jnp.argsort(order, axis=0)
+    shares = fl + (rank < rem)
+    resid = total - jnp.sum(shares, axis=0)   # 0 whenever rem <= groups
+    return shares + jnp.where(rank == 0, resid, 0.0)
+
+
 def nonuniform_split(total: int, rates: Sequence[float],
                      offsets: Sequence[float]) -> List[int]:
     """Equalize a_i*s_i + b_i; integer shares summing to `total` (each >= 0)."""
-    a = np.asarray(rates, dtype=np.float64)
-    b = np.asarray(offsets, dtype=np.float64)
-    inv = 1.0 / a
-    theta = (total + float(np.sum(b * inv))) / float(np.sum(inv))
-    s = np.maximum(0.0, (theta - b) * inv)
-    scale = total / max(s.sum(), 1e-9)
-    s = s * scale
-    shares = np.floor(s).astype(int)
-    rem = total - int(shares.sum())
-    # give remaining units to cores with the largest fractional part
-    order = np.argsort(-(s - shares))
-    for i in range(rem):
-        shares[order[i % len(shares)]] += 1
-    return [int(x) for x in shares]
+    f32 = jnp.float32
+    shares = split_shares_model(f32(total),
+                                jnp.asarray(rates, f32),
+                                jnp.asarray(offsets, f32))
+    return [int(x) for x in np.asarray(shares)]
+
+
+def multicore_model(dataflow: str, scheme: str, M, N, K, rows, cols, hops,
+                    nop_cycles_per_hop, Pr: int, Pc: int):
+    """One partition scheme evaluated fully traced.
+
+    rows/cols/hops: per-core geometry with the core axis LAST,
+    shape (num_cores,) per design (num_cores = Pr*Pc, static). M/N/K and
+    `nop_cycles_per_hop` may be traced arrays broadcastable against each
+    other. Returns (makespan, per_core_cycles stacked on axis 0, group
+    shares stacked on axis 0) — float32, matching `simulate_multicore`
+    bit-for-bit (which delegates here).
+    """
+    f32 = jnp.float32
+    Sr, Sc, T = map_gemm(dataflow, f32(1.0) * M, f32(1.0) * N, f32(1.0) * K)
+    grid = np.arange(Pr * Pc).reshape(Pr, Pc)
+    groups = grid if scheme in ("spatial", "st1") else grid.T  # rows = groups
+    total = Sr if scheme in ("spatial", "st1") else Sc
+
+    rates, offsets = [], []
+    for g in range(groups.shape[0]):
+        i = int(groups[g][0])
+        rates.append(f32(1.0) * _scheme_rate(scheme, rows[..., i],
+                                             cols[..., i], Sr, Sc, T, Pr, Pc))
+        offsets.append(f32(1.0) * hops[..., i] * nop_cycles_per_hop)
+    a = jnp.stack(jnp.broadcast_arrays(*rates), axis=0)
+    b = jnp.stack([jnp.broadcast_to(o, a.shape[1:]) for o in offsets], axis=0)
+    shares = split_shares_model(total, a, b)          # (groups, ...)
+
+    per_core = [None] * (Pr * Pc)
+    for g in range(groups.shape[0]):
+        s = shares[g]
+        for idx in groups[g]:
+            i = int(idx)
+            cyc = _scheme_cycles(scheme, rows[..., i], cols[..., i], s,
+                                 Sr, Sc, T, Pr, Pc)
+            per_core[i] = cyc + hops[..., i] * nop_cycles_per_hop
+    per_core = jnp.stack(jnp.broadcast_arrays(*per_core), axis=0)
+    return jnp.max(per_core, axis=0), per_core, shares
+
+
+def best_multicore_cycles_model(dataflow: str, M, N, K, rows, cols, hops,
+                                nop_cycles_per_hop, Pr: int, Pc: int):
+    """Makespan of the best scheme (min cycles, footprint tie-break) —
+    the traced twin of `best_multicore(...).cycles`, evaluated inside the
+    sweep kernel. Scheme order matches `best_multicore` so exact ties
+    resolve identically."""
+    f32 = jnp.float32
+    Sr, Sc, T = map_gemm(dataflow, f32(1.0) * M, f32(1.0) * N, f32(1.0) * K)
+    best_c = best_f = None
+    for scheme in SCHEMES:
+        c, _, _ = multicore_model(dataflow, scheme, M, N, K, rows, cols,
+                                  hops, nop_cycles_per_hop, Pr, Pc)
+        fp = partition_footprint(scheme, dataflow, Sr, Sc, T, Pr, Pc)
+        f = f32(1.0) * fp["total"] + 0.0 * c
+        if best_c is None:
+            best_c, best_f = c, f
+        else:
+            better = (c < best_c) | ((c == best_c) & (f < best_f))
+            best_c = jnp.where(better, c, best_c)
+            best_f = jnp.where(better, f, best_f)
+    return best_c
 
 
 def simulate_multicore(cfg: AcceleratorConfig, M: int, N: int, K: int,
@@ -80,39 +176,23 @@ def simulate_multicore(cfg: AcceleratorConfig, M: int, N: int, K: int,
     Pr, Pc = cfg.mesh_rows, cfg.mesh_cols
     cores = cfg.cores
 
-    # --- per-core workload shares along the split dimension -----------------
-    if scheme in ("spatial", "st1"):
-        split_total, ngroups = Sr, Pr
-    else:
-        split_total, ngroups = Sc, Pc
-    # group cores along the split axis; each group shares the split dim.
-    grid = np.array(range(Pr * Pc)).reshape(Pr, Pc)
-    groups = grid if scheme in ("spatial", "st1") else grid.T  # rows = groups
-    per_core_cyc = np.zeros(Pr * Pc)
+    # the share solve + per-core cycles run through the traced model so
+    # the eager oracle and the batched sweep kernel are bit-identical
+    f32 = jnp.float32
+    rows = jnp.asarray([c.rows for c in cores], f32)
+    cols = jnp.asarray([c.cols for c in cores], f32)
+    hops = jnp.asarray([c.nop_hops for c in cores], f32)
+    _, per_core, shares = multicore_model(
+        df, scheme, M, N, K, rows, cols, hops, cfg.nop_cycles_per_hop,
+        Pr, Pc)
+    per_core_cyc = np.asarray(per_core, np.float64)
+    grid = np.arange(Pr * Pc).reshape(Pr, Pc)
+    groups = grid if scheme in ("spatial", "st1") else grid.T
+    shares_np = np.asarray(shares)
     shares_out = np.zeros(Pr * Pc, dtype=int)
-
-    # rate/offset per group-row (use the first core of the group for the
-    # secondary dims; heterogeneity enters through each member's own rate)
-    rates, offsets = [], []
-    for g in range(ngroups):
-        core = cores[groups[g][0]]
-        rates.append(_core_rate(core, "", scheme, df, Sr, Sc, T, Pr, Pc))
-        offsets.append(core.nop_hops * cfg.nop_cycles_per_hop)
-    shares = nonuniform_split(split_total, rates, offsets)
-
-    for g in range(ngroups):
+    for g in range(groups.shape[0]):
         for idx in groups[g]:
-            core = cores[idx]
-            R, C = core.rows, core.cols
-            s = shares[g]
-            if scheme == "spatial":
-                cyc = (2 * R + C + T - 2) * cdiv(s, R) * cdiv(Sc, Pc * C)
-            elif scheme == "st1":
-                cyc = (2 * R + C + cdiv(T, Pc) - 2) * cdiv(s, R) * cdiv(Sc, C)
-            else:
-                cyc = (2 * R + C + cdiv(T, Pr) - 2) * cdiv(Sr, R) * cdiv(s, C)
-            per_core_cyc[idx] = cyc + core.nop_hops * cfg.nop_cycles_per_hop
-            shares_out[idx] = s
+            shares_out[idx] = int(shares_np[g])
 
     # --- shared L2 capacity check (Sec. III-B) ------------------------------
     fp_l1 = partition_footprint(scheme, df, Sr, Sc, T, Pr, Pc, dedup=False)

@@ -12,6 +12,15 @@ the fold's columns of their nonzero counts (layer-wise: exactly K*n/m).
 
 Storage model (paper Fig. 6): blocked ELLPACK = values + ceil(log2(m))-bit
 metadata per value; CSR/CSC also reported for comparison.
+
+Every quantity has a *_model twin taking plain (possibly traced) arrays
+instead of a SparsityConfig — `effective_K_model`, `storage_bytes_model`,
+`sparse_compute_cycles_model` — with NO Python branching on config values:
+`enabled`/`row_wise` are data selected with `jnp.where`, so the batched
+sweep kernel (`repro.api.simulator`) vmaps them over mixed dense/sparse
+design grids.  The eager config-taking entry points delegate to the same
+models, which is what makes the batched sweep and the per-op oracle
+pipeline agree bit-for-bit.
 """
 from __future__ import annotations
 
@@ -24,6 +33,13 @@ import jax.numpy as jnp
 from .accelerator import SparsityConfig
 from .dataflow import cdiv, map_gemm
 
+REPRESENTATIONS = ("ellpack_block", "csr", "csc")
+
+# The fixed j-grid of the row-wise expected-max sum: supports m <= 2*cap
+# (SparsityConfig validates row_wise m against this bound so the masked
+# sum is always exact, never truncated).
+ROWWISE_HALF_CAP = 64
+
 
 def metadata_bits(m: int) -> int:
     return max(1, int(math.ceil(math.log2(m))))
@@ -34,25 +50,41 @@ def expected_rowwise_n(m: int) -> float:
     return (1 + m // 2) / 2.0
 
 
-def effective_K(K, sp: SparsityConfig, cols_in_fold: int = 1):
-    """Effective reduction length K' after N:M compression.
+def effective_K_model(K, n, m, row_wise, cols_in_fold, enabled=True):
+    """`effective_K` on plain arrays: every argument may be traced.
 
     Layer-wise: K' = ceil(K * n / m).
     Row-wise:   per-block fold length is the max over `cols_in_fold` iid
-    Uniform{1..m//2} draws; E[max] = m/2 - sum_{j<m/2} (j/(m/2))^c  (exact for
-    iid uniforms), applied per block of m.
+    Uniform{1..m//2} draws; E[max] = m/2 - sum_{j<m/2} (j/(m/2))^c (exact
+    for iid uniforms), applied per block of m. The j-sum runs over a fixed
+    `ROWWISE_HALF_CAP` grid masked to j < m//2 so it traces with m as data.
+    """
+    f32 = jnp.float32
+    K = f32(1.0) * K
+    n = f32(1.0) * n
+    m = jnp.maximum(f32(1.0) * m, 1.0)
+    lw = cdiv(K * n, m)
+    half, c = jnp.broadcast_arrays(
+        jnp.maximum(jnp.floor(m / 2.0), 1.0),
+        jnp.maximum(1.0, f32(1.0) * cols_in_fold))
+    j = jnp.arange(1, ROWWISE_HALF_CAP, dtype=jnp.float32)
+    jb = j.reshape(j.shape + (1,) * half.ndim)       # sum axis leads
+    terms = jnp.where(jb < half, (jb / half) ** c, 0.0)
+    emax = half - jnp.sum(terms, axis=0)
+    rw = jnp.ceil(cdiv(K, m) * emax)
+    return jnp.where(enabled, jnp.where(row_wise, rw, lw), K)
+
+
+def effective_K(K, sp: SparsityConfig, cols_in_fold: int = 1):
+    """Effective reduction length K' after N:M compression (config form).
+
+    Delegates to `effective_K_model` so the eager pipeline and the traced
+    sweep kernel share one float32 implementation (bit-identical results).
     """
     if not sp.enabled:
         return K
-    if not sp.row_wise:
-        return cdiv(K * sp.n, sp.m)
-    half = sp.m // 2
-    c = max(1, cols_in_fold)
-    # E[max of c iid Uniform{1..half}] = half - sum_{j=1}^{half-1} (j/half)^c
-    emax = half - sum((j / half) ** c for j in range(1, half))
-    blocks = cdiv(K, sp.m)
-    return jnp.ceil(blocks * emax).astype(jnp.int32) if hasattr(K, "dtype") \
-        else int(math.ceil(blocks * emax))
+    k_eff = effective_K_model(K, sp.n, sp.m, sp.row_wise, cols_in_fold)
+    return k_eff if hasattr(K, "dtype") else int(k_eff)
 
 
 def sample_rowwise_counts(key, rows: int, K: int, m: int) -> jnp.ndarray:
@@ -62,39 +94,64 @@ def sample_rowwise_counts(key, rows: int, K: int, m: int) -> jnp.ndarray:
     return jax.random.randint(key, (rows, blocks), 1, half + 1)
 
 
+def sparse_compute_cycles_model(dataflow: str, M, N, K, R, C,
+                                n, m, row_wise, enabled=True):
+    """Compute cycles with compressed weight streaming, on plain arrays.
+    `dataflow` is static; everything else may be traced. Dense designs
+    (enabled == 0) reduce exactly to `dataflow.compute_cycles`."""
+    K_eff = effective_K_model(K, n, m, row_wise, cols_in_fold=C,
+                              enabled=enabled)
+    Sr, Sc, T = map_gemm(dataflow, M, N, K_eff)
+    return (2 * R + C + T - 2) * cdiv(Sr, R) * cdiv(Sc, C)
+
+
 def sparse_compute_cycles(dataflow: str, M, N, K, R: int, C: int,
                           sp: SparsityConfig):
     """Compute cycles with compressed weight streaming (ws recommended)."""
-    K_eff = effective_K(K, sp, cols_in_fold=C)
-    Sr, Sc, T = map_gemm(dataflow, M, N, K_eff)
-    return (2 * R + C + T - 2) * cdiv(Sr, R) * cdiv(Sc, C)
+    return sparse_compute_cycles_model(dataflow, M, N, K, R, C, sp.n, sp.m,
+                                       sp.row_wise, enabled=sp.enabled)
+
+
+def storage_bytes_model(rows, K, n, m, row_wise, representation: str,
+                        word_bytes, enabled=True):
+    """`storage_report`'s byte math on plain arrays (representation and
+    nothing else is static). Returns (original, values, metadata, total)
+    with the dense fallback already selected where enabled == 0."""
+    f32 = jnp.float32
+    rows = f32(1.0) * rows
+    K = f32(1.0) * K
+    m = jnp.maximum(f32(1.0) * m, 1.0)
+    dense = rows * K * word_bytes
+    exp_n = (1.0 + jnp.floor(m / 2.0)) / 2.0         # E[Uniform{1..m//2}]
+    nnz = jnp.where(row_wise, rows * (K / m) * exp_n, rows * K * n / m)
+    if representation == "ellpack_block":
+        bits = jnp.maximum(1.0, jnp.ceil(jnp.log2(m)))
+        meta = nnz * bits / 8.0
+    elif representation == "csr":
+        idx_bytes = jnp.maximum(1.0, jnp.ceil(
+            jnp.ceil(jnp.log2(jnp.maximum(K, 2.0))) / 8.0))
+        meta = nnz * idx_bytes + (rows + 1.0) * 4.0
+    elif representation == "csc":
+        idx_bytes = jnp.maximum(1.0, jnp.ceil(
+            jnp.ceil(jnp.log2(jnp.maximum(rows, 2.0))) / 8.0))
+        meta = nnz * idx_bytes + (K + 1.0) * 4.0
+    else:
+        raise ValueError(f"unknown representation {representation!r}")
+    values = nnz * word_bytes
+    return (dense, jnp.where(enabled, values, dense),
+            jnp.where(enabled, meta, 0.0),
+            jnp.where(enabled, values + meta, dense))
 
 
 def storage_report(rows: int, K: int, sp: SparsityConfig,
                    word_bytes: int = 2) -> Dict[str, float]:
     """SPARSE_REPORT: original vs compressed filter storage in bytes."""
-    dense = float(rows * K * word_bytes)
-    if not sp.enabled:
-        return dict(representation="dense", original_bytes=dense,
-                    values_bytes=dense, metadata_bytes=0.0, total_bytes=dense)
-    if sp.row_wise:
-        nnz = rows * (K / sp.m) * expected_rowwise_n(sp.m)
-    else:
-        nnz = rows * K * sp.n / sp.m
-    if sp.representation == "ellpack_block":
-        meta = nnz * metadata_bits(sp.m) / 8.0
-    elif sp.representation == "csr":
-        idx_bytes = max(1, math.ceil(math.ceil(math.log2(max(K, 2))) / 8))
-        meta = nnz * idx_bytes + (rows + 1) * 4.0
-    elif sp.representation == "csc":
-        idx_bytes = max(1, math.ceil(math.ceil(math.log2(max(rows, 2))) / 8))
-        meta = nnz * idx_bytes + (K + 1) * 4.0
-    else:
-        raise ValueError(f"unknown representation {sp.representation!r}")
-    values = nnz * word_bytes
-    return dict(representation=sp.representation, original_bytes=dense,
-                values_bytes=float(values), metadata_bytes=float(meta),
-                total_bytes=float(values + meta))
+    orig, values, meta, total = storage_bytes_model(
+        rows, K, sp.n, sp.m, sp.row_wise, sp.representation, word_bytes,
+        enabled=sp.enabled)
+    return dict(representation=sp.representation if sp.enabled else "dense",
+                original_bytes=float(orig), values_bytes=float(values),
+                metadata_bytes=float(meta), total_bytes=float(total))
 
 
 def pack_ellpack_block(w: jnp.ndarray, m: int):

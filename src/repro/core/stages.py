@@ -25,13 +25,15 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from .accelerator import AcceleratorConfig, MemoryConfig, SparsityConfig
+from .accelerator import (AcceleratorConfig, LayoutConfig, MemoryConfig,
+                          SparsityConfig)
 from . import dataflow as dfm
 from .dram import simulate_dram, tile_prefetch_trace
 from .energy import DEFAULT_ERT, ERT, action_counts, action_counts_raw, energy_pj
-from .layout import evaluate_layout
-from .multicore import best_multicore
-from .sparsity import sparse_compute_cycles, storage_report
+from .layout import streaming_layout_extra
+from .multicore import best_multicore, best_multicore_cycles_model
+from .sparsity import (sparse_compute_cycles, sparse_compute_cycles_model,
+                       storage_bytes_model, storage_report)
 from .topology import Op
 
 FIDELITIES = ("fast", "cycle", "trace")
@@ -269,7 +271,9 @@ class TraceDramStage(DramStage):
 
 
 class LayoutStage(CoreStage):
-    """On-chip bank-conflict slowdown on the streaming operand."""
+    """On-chip bank-conflict slowdown on the streaming operand. Runs the
+    shared static-shape model (`layout.streaming_layout_extra`) so the
+    batched sweep kernel reproduces this stage bit-for-bit."""
     name = "layout"
 
     def apply(self, ctx: OpContext) -> None:
@@ -277,12 +281,9 @@ class LayoutStage(CoreStage):
         if not cfg.layout.enabled:
             return
         core = self.core(ctx)
-        lr = evaluate_layout(
-            cfg.layout, core.rows,
-            n_cycles=min(512, max(8, int(min(ctx.comp, 512)))),
-            lead_stride=1, elem_stride=max(1, op.N),
-            word_bytes=cfg.memory.word_bytes)
-        ctx.layout_extra = (lr.mean_slowdown - 1.0) * ctx.comp
+        ctx.layout_extra = float(streaming_layout_extra(
+            cfg.layout, core.rows, ctx.comp, max(1, op.N),
+            cfg.memory.word_bytes, r_cap=core.rows))
 
 
 class EnergyStage(Stage):
@@ -441,15 +442,111 @@ def traced_vector_stats(elems, lanes, latency, word_bytes) -> Dict[str, jnp.ndar
 def traced_energy_counts(*, R, C, mem: MemoryConfig, cycles, macs,
                          ifmap_reads, filter_reads, ofmap_writes,
                          ofmap_reads, dram_bytes, l2_reads=0.0,
-                         row_bytes: int = 64) -> Dict[str, jnp.ndarray]:
+                         row_bytes: int = 64, pes=None,
+                         dim32=None) -> Dict[str, jnp.ndarray]:
     """The energy stage's action counts with array-valued config fields;
     identical formulas to `energy.action_counts` (shared core). `mem` must
-    carry real SRAM sizes (not the no-spill sentinel)."""
+    carry real SRAM sizes (not the no-spill sentinel). pes/dim32 default
+    to the single-core R x C values; multi-core designs pass the summed
+    PE count and the mesh-wide max dimension (what `action_counts` derives
+    from a concrete config)."""
     sram_kib = (mem.ifmap_sram_bytes + mem.filter_sram_bytes
                 + mem.ofmap_sram_bytes) / 1024.0
+    if pes is None:
+        pes = R * C
+    if dim32 is None:
+        dim32 = jnp.maximum(R, C) / 32.0
     return action_counts_raw(
-        pes=R * C, dim32=jnp.maximum(R, C) / 32.0, sram_kib=sram_kib,
+        pes=pes, dim32=dim32, sram_kib=sram_kib,
         word_bytes=mem.word_bytes, cycles=cycles, macs=macs,
         ifmap_reads=ifmap_reads, filter_reads=filter_reads,
         ofmap_writes=ofmap_writes, ofmap_reads=ofmap_reads,
         dram_bytes=dram_bytes, l2_reads=l2_reads, row_bytes=row_bytes)
+
+
+# --------------------------------------------------------------------------
+# The full-pipeline traced twin: mapping -> partition -> sparsity -> sram ->
+# dram[fast] -> layout with every feature expressed as data (jnp.where) or
+# a static kernel-flavor parameter — what lets `repro.api` batch arbitrary
+# mixed dense/sparse/layout/multicore design grids in one jit/vmap.
+# --------------------------------------------------------------------------
+
+def traced_comp_traffic(dataflow: str, M, N, K, R, C, mem: MemoryConfig, *,
+                        sparsity: Optional[Dict] = None,
+                        multicore: Optional[Dict] = None):
+    """Effective compute cycles + (shrunk) SRAM/DRAM traffic, traced.
+
+    Mirrors the stage pipeline's feature composition exactly: the
+    partition stage overrides single-core compute when the design has
+    multiple cores, and the sparsity stage overrides both (paper
+    semantics: sparse runs use the single-core compressed stream).
+
+    sparsity:  {'en', 'n', 'm', 'rw'} traced arrays (en/rw are 0/1
+               selectors — no Python branching on them) plus the static
+               'representation' string.
+    multicore: {'rows', 'cols', 'hops'} per-core arrays (core axis last,
+               length Pr*Pc), traced 'nop' cycles-per-hop, and static
+               'Pr'/'Pc' grid shape.
+
+    Returns (comp, sram dict, dram dict, filter_shrink).
+    """
+    comp = dfm.compute_cycles(dataflow, M, N, K, R, C)
+    if multicore is not None:
+        comp = best_multicore_cycles_model(
+            dataflow, M, N, K, multicore["rows"], multicore["cols"],
+            multicore["hops"], multicore["nop"], multicore["Pr"],
+            multicore["Pc"])
+    shrink = jnp.float32(1.0)
+    if sparsity is not None:
+        en, n, m, rw = (sparsity["en"], sparsity["n"], sparsity["m"],
+                        sparsity["rw"])
+        comp_sp = sparse_compute_cycles_model(dataflow, M, N, K, R, C,
+                                              n, m, rw, enabled=en)
+        comp = jnp.where(en, comp_sp, comp)
+        orig, _, _, total = storage_bytes_model(
+            M, K, n, m, rw, sparsity["representation"], mem.word_bytes,
+            enabled=en)
+        shrink = total / jnp.maximum(orig, 1.0)
+    sram = dfm.sram_traffic(dataflow, M, N, K, R, C)
+    sram = dict(sram, filter_reads=sram["filter_reads"] * shrink)
+    dram = dfm.dram_traffic(dataflow, M, N, K, R, C, mem)
+    dram = dict(dram, dram_filter=dram["dram_filter"] * shrink)
+    return comp, sram, dram, shrink
+
+
+def traced_op_stats(dataflow: str, M, N, K, R, C, mem: MemoryConfig,
+                    bw_bytes_per_cycle, *,
+                    sparsity: Optional[Dict] = None,
+                    multicore: Optional[Dict] = None,
+                    layout: Optional[Dict] = None) -> Dict[str, jnp.ndarray]:
+    """Traced twin of the full fast-fidelity gemm pipeline (per op
+    instance; callers scale by count). `layout`: {'cfg': LayoutConfig
+    (static), 'r_cap': static bound on R}, or None to skip the layout
+    stage — layout on/off is a static kernel flavor (the Study plan
+    groups enabled and disabled cells separately, so disabled groups pay
+    nothing). See `traced_comp_traffic` for the sparsity/multicore
+    parameter shapes."""
+    import jax
+    comp, sram, dram, shrink = traced_comp_traffic(
+        dataflow, M, N, K, R, C, mem, sparsity=sparsity,
+        multicore=multicore)
+    dram_elems = (dram["dram_ifmap"] + dram["dram_filter"]
+                  + dram["dram_ofmap_writes"] + dram["dram_ofmap_reads"])
+    dram_bytes = dram_elems * mem.word_bytes
+    stall = dfm.dram_stall_cycles_simple(dram_bytes, comp,
+                                         bw_bytes_per_cycle)
+    extra = jnp.zeros_like(comp)
+    if layout is not None:
+        lcfg, r_cap = layout["cfg"], layout["r_cap"]
+        stride = jnp.maximum(1.0, jnp.float32(1.0) * N)
+
+        def one_op(comp_, stride_):
+            return streaming_layout_extra(lcfg, R, comp_, stride_,
+                                          mem.word_bytes, r_cap=r_cap)
+
+        extra = (one_op(comp, stride) if jnp.ndim(comp) == 0
+                 else jax.vmap(one_op)(comp, jnp.broadcast_to(
+                     stride, jnp.shape(comp))))
+    return dict(compute_cycles=comp, stall_cycles=stall,
+                layout_extra_cycles=extra, dram_bytes=dram_bytes,
+                dram_elems=dram_elems, filter_shrink=shrink, **sram)

@@ -34,6 +34,17 @@ def test_nop_offset_shifts_work():
     assert far[1] < near[1]                      # farther core gets less
 
 
+def test_nonuniform_split_large_totals_conserve_work():
+    """Shares sum exactly to the split total within f32's integer range,
+    and within an ulp (not hundreds of lost units) beyond it."""
+    shares = nonuniform_split(10_000_000, [1.0, 1.0, 2.0], [0.0, 0.0, 0.0])
+    assert sum(shares) == 10_000_000
+    big = 100_000_000
+    shares = nonuniform_split(big, [1.0, 1.0, 2.0], [0.0, 0.0, 0.0])
+    assert abs(sum(shares) - big) <= 16            # f32 ulp at 1e8
+    assert all(s >= 0 for s in shares)
+
+
 def test_heterogeneous_cores_balanced():
     cores = [CoreConfig(rows=64, cols=64), CoreConfig(rows=16, cols=16)]
     cfg = AcceleratorConfig(cores=tuple(cores), mesh_rows=2, mesh_cols=1)
@@ -60,3 +71,77 @@ def test_l2_capacity_check():
                             mesh_cols=2, memory=mem)
     r = simulate_multicore(cfg, 2048, 2048, 2048, "spatial")
     assert not r.l2_fit and r.l2_spill_elems > 0
+
+
+# ---- traceable multicore (ISSUE 5) -----------------------------------------
+
+def test_traced_model_matches_simulate_multicore_bitexact():
+    """`multicore_model` / `best_multicore_cycles_model` ARE the oracle:
+    `simulate_multicore` delegates to them, so per-scheme cycles and the
+    best-scheme makespan agree exactly, heterogeneous cores included."""
+    import jax.numpy as jnp
+    from repro.core.multicore import (best_multicore_cycles_model,
+                                      multicore_model)
+    cases = [
+        (AcceleratorConfig(cores=(CoreConfig(32, 32),), mesh_rows=2,
+                           mesh_cols=2), (512, 1024, 2048)),
+        (AcceleratorConfig(cores=(CoreConfig(64, 64), CoreConfig(16, 16)),
+                           mesh_rows=2, mesh_cols=1), (512, 2048, 4096)),
+        (AcceleratorConfig(cores=tuple(CoreConfig(32, 32, nop_hops=h)
+                                       for h in (0, 1, 1, 2)),
+                           mesh_rows=2, mesh_cols=2, dataflow="os"),
+         (300, 700, 900)),
+    ]
+    for cfg, (M, N, K) in cases:
+        rows = jnp.asarray([c.rows for c in cfg.cores], jnp.float32)
+        cols = jnp.asarray([c.cols for c in cfg.cores], jnp.float32)
+        hops = jnp.asarray([c.nop_hops for c in cfg.cores], jnp.float32)
+        for scheme in ("spatial", "st1", "st2"):
+            r = simulate_multicore(cfg, M, N, K, scheme)
+            mk, per_core, _ = multicore_model(
+                cfg.dataflow, scheme, M, N, K, rows, cols, hops,
+                cfg.nop_cycles_per_hop, cfg.mesh_rows, cfg.mesh_cols)
+            assert r.cycles == float(mk)
+            assert list(np.asarray(per_core)) == list(r.per_core_cycles)
+        best = best_multicore(cfg, M, N, K)
+        bm = best_multicore_cycles_model(
+            cfg.dataflow, M, N, K, rows, cols, hops,
+            cfg.nop_cycles_per_hop, cfg.mesh_rows, cfg.mesh_cols)
+        assert best.cycles == float(bm)
+
+
+def test_grouped_sweep_equals_looped_simulate_multicore():
+    """A per-core-count batched Study over multi-core designs reproduces
+    a python loop of `best_multicore` per design (the partition stage's
+    oracle) on a gemm-only workload."""
+    import pytest
+    from repro.api import Study
+    from repro.api.presets import get_preset, with_cores
+    from repro.core.topology import Op
+    ops = [Op("g", 512, 768, 1024), Op("h", 256, 512, 2048, count=2.0)]
+    designs = {}
+    for arr in (16, 32):
+        for cores in (4, 16):
+            designs[f"{arr}x{arr}-{cores}c"] = with_cores(
+                get_preset("tpu-like", array=arr), cores)
+    res = Study().designs(designs).workloads({"w": ops}) \
+                 .fidelity("fast").run()
+    assert res.fraction_batched == 1.0
+    for label, cfg in designs.items():
+        want = sum(best_multicore(cfg, o.M, o.N, o.K).cycles * o.count
+                   for o in ops)
+        got = float(res.filter(design=label)["compute_cycles"][0])
+        assert got == pytest.approx(want, rel=1e-6), label
+
+
+def test_contention_shared_never_beats_isolated_after_refactor():
+    """The shared-DRAM contention path still reports shared >= isolated
+    per core after the traceable-partition refactor."""
+    from repro.api.presets import get_preset
+    from repro.core.multicore import contention_summary
+    from repro.trace import TraceSpec
+    s = contention_summary(get_preset("mcm-4x32", channels=2),
+                           256, 512, 512, spec=TraceSpec(cap=1024))
+    assert s["makespan_shared"] >= s["makespan_isolated"] - 1e-6
+    assert s["contention_slowdown"] >= 1.0 - 1e-9
+    assert s["cores"] == 4.0

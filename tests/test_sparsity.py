@@ -6,9 +6,10 @@ import numpy as np
 import pytest
 
 from repro.core.accelerator import SparsityConfig
-from repro.core.sparsity import (effective_K, expected_rowwise_n,
-                                 metadata_bits, pack_ellpack_block,
-                                 sparse_compute_cycles, storage_report)
+from repro.core.sparsity import (effective_K, effective_K_model,
+                                 expected_rowwise_n, metadata_bits,
+                                 pack_ellpack_block, sparse_compute_cycles,
+                                 storage_report)
 
 
 def test_nm_constraint_enforced():
@@ -81,6 +82,106 @@ def test_rowwise_expectation():
     k_eff = effective_K(1024, sp, cols_in_fold=32)
     # lockstep max over 32 columns approaches M/2 per block
     assert 1024 * (4 / 8) * 0.8 < float(k_eff) <= 1024 * (4 / 8)
+
+
+# ---- sparsity invariants (ISSUE 5 property tests) --------------------------
+
+def test_effective_k_monotone_in_n():
+    """K' is monotone nondecreasing in n for every (K, m, cols) — denser
+    blocks can never shorten the compressed reduction."""
+    for K in (64, 777, 4096):
+        for m in (4, 8, 16):
+            for cols in (1, 32):
+                ks = [int(effective_K(
+                    K, SparsityConfig(enabled=True, n=n, m=m), cols))
+                    for n in range(1, m + 1)]
+                assert ks == sorted(ks), (K, m, cols, ks)
+                assert all(1 <= k <= K for k in ks)
+
+
+def test_effective_k_dense_parity_at_n_eq_m():
+    """n == m is dense: K' == K exactly and the compressed-stream compute
+    cycles equal the dense mapping for every dataflow."""
+    from repro.core.dataflow import compute_cycles
+    for m in (4, 8):
+        sp = SparsityConfig(enabled=True, n=m, m=m)
+        for K in (512, 1000):
+            assert int(effective_K(K, sp, 32)) == K
+        for df in ("ws", "os", "is"):
+            dense = compute_cycles(df, 384, 512, 1024, 32, 32)
+            sparse = sparse_compute_cycles(df, 384, 512, 1024, 32, 32, sp)
+            assert float(sparse) == float(dense)
+
+
+def test_rowwise_expected_k_bounded():
+    """Row-wise expected-K sits between layer-wise n=1 and layer-wise
+    n=m/2 (the lockstep max of Uniform{1..m/2} draws can neither beat a
+    single nonzero per block nor exceed m/2 per block), and below dense."""
+    for m in (4, 8, 16):
+        for K in (512, 4096):
+            for cols in (1, 8, 64):
+                rw = int(effective_K(
+                    K, SparsityConfig(enabled=True, n=1, m=m,
+                                      row_wise=True), cols))
+                lo = int(effective_K(
+                    K, SparsityConfig(enabled=True, n=1, m=m), cols))
+                hi = int(effective_K(
+                    K, SparsityConfig(enabled=True, n=m // 2, m=m), cols))
+                assert lo <= rw <= hi <= K, (m, K, cols, lo, rw, hi)
+
+
+def test_rowwise_expected_k_monotone_in_cols():
+    """More lockstep columns -> larger expected fold max -> larger K'."""
+    sp = SparsityConfig(enabled=True, n=2, m=8, row_wise=True)
+    ks = [int(effective_K(4096, sp, c)) for c in (1, 2, 8, 32, 128)]
+    assert ks == sorted(ks)
+
+
+def test_metadata_storage_conservation_across_representations():
+    """ELLPACK/CSR/CSC carry the same nonzeros (values bytes identical);
+    totals = values + metadata; every sparse total beats dense for 2:4;
+    row-wise nnz follows the Uniform{1..m/2} expectation exactly."""
+    rows, K, wb = 512, 4096, 2
+    reps = ("ellpack_block", "csr", "csc")
+    for row_wise in (False, True):
+        outs = [storage_report(
+            rows, K, SparsityConfig(enabled=True, n=2, m=8,
+                                    row_wise=row_wise, representation=r),
+            wb) for r in reps]
+        vals = {o["values_bytes"] for o in outs}
+        assert len(vals) == 1                       # nnz conserved
+        if row_wise:
+            nnz = rows * (K / 8) * expected_rowwise_n(8)
+        else:
+            nnz = rows * K * 2 / 8
+        assert outs[0]["values_bytes"] == pytest.approx(nnz * wb, rel=1e-6)
+        for o in outs:
+            assert o["total_bytes"] == pytest.approx(
+                o["values_bytes"] + o["metadata_bytes"], rel=1e-6)
+            assert o["metadata_bytes"] > 0
+            assert o["total_bytes"] < o["original_bytes"]
+        # ELLPACK block metadata (log2(m) bits/value) is the cheapest
+        assert outs[0]["metadata_bytes"] == min(o["metadata_bytes"]
+                                                for o in outs)
+
+
+def test_effective_k_model_vmaps_over_mixed_grid():
+    """The traced model batches dense + layer-wise + row-wise cells in
+    one vmap and matches the eager per-config path exactly."""
+    cfgs = [SparsityConfig(),
+            SparsityConfig(enabled=True, n=2, m=4),
+            SparsityConfig(enabled=True, n=1, m=4),
+            SparsityConfig(enabled=True, n=2, m=8, row_wise=True)]
+    K, cols = 4096, 32
+    batched = jax.vmap(
+        lambda en, n, m, rw: effective_K_model(1.0 * K, n, m, rw,
+                                               1.0 * cols, enabled=en))(
+        jnp.array([1.0 * c.enabled for c in cfgs]),
+        jnp.array([1.0 * c.n for c in cfgs]),
+        jnp.array([1.0 * c.m for c in cfgs]),
+        jnp.array([1.0 * c.row_wise for c in cfgs]))
+    eager = [effective_K(K, c, cols) for c in cfgs]
+    np.testing.assert_array_equal(np.asarray(batched), np.asarray(eager))
 
 
 def test_pack_ellpack_roundtrip():

@@ -63,17 +63,28 @@ def test_plan_batches_all_traceable_cells():
     assert not np.allclose(tr["stall_cycles"], fa["stall_cycles"])
 
 
-def test_non_traceable_cells_fall_back():
+def test_sparse_cells_batch_and_oracle_stays_reachable():
+    """ISSUE 5: sparse cells run through the vmapped kernel (batched ==
+    1.0, matching the engine <= 1e-3); the per-op oracle is kept alive
+    behind force_fallback for the differential parity suite."""
     from repro.core.accelerator import SparsityConfig
     grid = preset_grid(array=[16])
     sparse = grid[0].with_(sparsity=SparsityConfig(enabled=True, n=2, m=4))
-    res = (Study().designs({"dense": grid[0], "sparse": sparse})
-           .workloads({"wa": OPS_A[:2]}).fidelity("fast").run())
-    assert res.filter(design="dense")["batched"][0] == 1.0
-    assert res.filter(design="sparse")["batched"][0] == 0.0
+    mk = lambda: (Study().designs({"dense": grid[0], "sparse": sparse})
+                  .workloads({"wa": OPS_A[:2]}).fidelity("fast"))
+    res = mk().run()
+    assert res.fraction_batched == 1.0
     rep = Simulator(sparse).run(OPS_A[:2])
     assert res.filter(design="sparse")["total_cycles"][0] == \
+        pytest.approx(rep.total_cycles, rel=1e-3)
+    oracle = mk().options(force_fallback=True).run()
+    assert oracle.fraction_batched == 0.0
+    assert oracle.filter(design="sparse")["total_cycles"][0] == \
         pytest.approx(rep.total_cycles, rel=1e-6)
+    # 'cycle' fidelity still runs per-op (no traced DRAM scan twin)
+    plan = (Study().designs({"d": grid[0]}).workloads({"wa": OPS_A[:2]})
+            .fidelity("cycle").plan())
+    assert plan.fallback and not plan.groups
 
 
 def test_sharded_vs_unsharded_equality():
