@@ -121,6 +121,42 @@ def run(smoke: bool = False):
     artifact["study_cells"] = len(sres)
     artifact["study_cells_per_sec"] = cps
 
+    # run-farm (ISSUE 6): the same 16-cell study pushed through a broker
+    # and 2 workers (in-process, driven synchronously, dedup cache off so
+    # every repeat pays the full cold cost). farm_cells_per_sec tracks
+    # the service overhead on top of the batched kernels; CI gates it.
+    import tempfile
+    from repro.farm import Broker, FarmClient, Worker
+
+    fgrid = preset_grid(array=[8, 16], sram_mb=[0.5, 1.0], dataflow=["ws"])
+    fstudy = lambda: (Study("bench-farm")
+                      .designs(fgrid)
+                      .workloads({"g": op, "g2": [Op("g2", 256, 2048, 512)]})
+                      .fidelity("fast", "trace"))
+    assert len(fstudy().plan().cells) == 16
+
+    def farm_run():
+        with tempfile.TemporaryDirectory() as root:
+            client = FarmClient(root)
+            broker = Broker(root, max_shard_cells=4)
+            workers = [Worker(root, f"bw{i}", cache=None) for i in range(2)]
+            sid = client.submit(fstudy())
+            broker.step()
+            while client.status(sid).get("state") == "running":
+                for w in workers:
+                    w.step()
+                broker.step()
+            return client.result(sid, timeout=5)
+
+    fres, us_farm = timed(farm_run, repeat=3)
+    assert len(fres) == 16 and fres.executed_cells == 16
+    fcps = len(fres) / (us_farm / 1e6)
+    rows.append((f"farm_{len(fres)}_cells_2_workers", us_farm,
+                 f"cells_per_sec={fcps:.0f}"))
+    artifact["farm_cells"] = len(fres)
+    artifact["farm_workers"] = 2
+    artifact["farm_cells_per_sec"] = fcps
+
     # the retained reference scan on the same grid, for the ISSUE 3
     # chunked-vs-reference engine comparison (single repeat: it is slow)
     rsim = Simulator("paper-32", fidelity="trace", engine="reference")

@@ -381,6 +381,10 @@ class Study:
         self._cache_dir: Optional[str] = None
         self._evaluator: Optional[Evaluator] = None
         self._claims: List[Tuple[str, Callable]] = []
+        # registry provenance ({"study": name, "kwargs": {...}}), set by
+        # get_study: lets to_spec serialize by reference so claims and
+        # custom evaluators survive a farm round-trip
+        self._ref: Optional[Dict[str, object]] = None
 
     # ---- axes --------------------------------------------------------------
     def designs(self, configs, labels: Optional[Sequence[str]] = None
@@ -517,6 +521,93 @@ class Study:
         self._claims.append((name, fn))
         return self
 
+    # ---- wire format (the farm's job payload) -------------------------------
+    def to_spec(self) -> dict:
+        """JSON-serializable description of this study — the farm's wire
+        format (`repro.farm`). A registry study (built via `get_study` or
+        the `studies.*` namespace) serializes as a *reference*: both ends
+        rebuild it through the registry, so claims and custom evaluators
+        survive. An ad-hoc study serializes *inline* (designs, workloads,
+        fidelities, options); claims and evaluators are run-time python
+        objects and do not survive an inline spec."""
+        if self._ref is not None:
+            try:
+                json.dumps(self._ref["kwargs"])
+            except TypeError as e:
+                raise ValueError(
+                    "registry study kwargs must be JSON-serializable to "
+                    "travel as a spec; rebuild the study with plain "
+                    "kwargs or submit an inline (non-registry) study"
+                ) from e
+            return {"kind": "study_spec",
+                    "schema_version": RESULT_SCHEMA_VERSION,
+                    "ref": {"study": self._ref["study"],
+                            "kwargs": dict(self._ref["kwargs"])}}
+        if self._evaluator is not None:
+            raise ValueError(
+                "a custom evaluator is not serializable; register the "
+                "study (register_study) and submit it by name so the "
+                "farm rebuilds it from the registry")
+        return {
+            "kind": "study_spec",
+            "schema_version": RESULT_SCHEMA_VERSION,
+            "ref": None,
+            "name": self.name,
+            "designs": [[label, cfg.to_dict()]
+                        for label, cfg in self._designs],
+            "workloads": {
+                name: [[o.name, o.M, o.N, o.K, o.count, o.kind,
+                        o.vector_elems,
+                        list(o.sparsity_nm) if o.sparsity_nm else None]
+                       for o in ops]
+                for name, ops in self._workloads.items()},
+            "fidelities": list(self._fidelities),
+            "metrics": (list(self._metrics)
+                        if self._metrics is not None else None),
+            "ert": dataclasses.asdict(self._ert),
+            "engine": self._engine,
+            "trace_spec": (dataclasses.asdict(self._spec)
+                           if self._spec is not None else None),
+            "core_index": self._core_index,
+            "force_fallback": self._force_fallback,
+        }
+
+    @classmethod
+    def from_spec(cls, d: dict) -> "Study":
+        """Rebuild a study from `to_spec()` output. Reference specs go
+        through the registry (claims/evaluators intact); inline specs
+        reconstruct designs/workloads/options field by field. Cell hashes
+        — and therefore shared-cache identity — are preserved across the
+        round-trip."""
+        if not isinstance(d, dict) or d.get("kind") != "study_spec":
+            raise ValueError("not a study spec (missing kind=study_spec)")
+        if d.get("schema_version") != RESULT_SCHEMA_VERSION:
+            raise ValueError(
+                f"study spec schema_version {d.get('schema_version')!r} "
+                f"!= supported {RESULT_SCHEMA_VERSION}")
+        if d.get("ref"):
+            return get_study(d["ref"]["study"], **d["ref"].get("kwargs", {}))
+        s = cls(d.get("name", "study"))
+        s._designs = [(str(label), AcceleratorConfig.from_dict(cfg))
+                      for label, cfg in d["designs"]]
+        s._workloads = {
+            name: [Op(o[0], int(o[1]), int(o[2]), int(o[3]), float(o[4]),
+                      o[5], float(o[6]),
+                      tuple(int(x) for x in o[7]) if o[7] else None)
+                   for o in ops]
+            for name, ops in d["workloads"].items()}
+        s._fidelities = tuple(d["fidelities"])
+        if d.get("metrics") is not None:
+            s._metrics = tuple(d["metrics"])
+        s._ert = ERT(**d["ert"])
+        s._engine = d.get("engine")
+        if d.get("trace_spec") is not None:
+            from ..trace.generator import TraceSpec
+            s._spec = TraceSpec(**d["trace_spec"])
+        s._core_index = int(d.get("core_index", 0))
+        s._force_fallback = bool(d.get("force_fallback", False))
+        return s
+
     # ---- plan + run --------------------------------------------------------
     def _spec_for(self, fidelity: str):
         if fidelity != "trace":
@@ -607,23 +698,40 @@ class Study:
 
     def _cache_load(self, cache_dir: str, h: str
                     ) -> Optional[Dict[str, float]]:
+        """Load one cached cell; anything unreadable is a miss.
+
+        Corrupt/truncated/wrong-shaped files (an interrupted pre-atomic
+        run, a torn copy, a foreign file landing in the cache dir) must
+        degrade to re-execution, never crash the study — the farm shares
+        this directory across concurrent writer processes."""
         path = os.path.join(cache_dir, h + ".json")
         try:
             with open(path) as f:
                 d = json.load(f)
-        except (OSError, ValueError):
+            if d.get("schema_version") != RESULT_SCHEMA_VERSION:
+                return None
+            return {k: float(v) for k, v in d["metrics"].items()}
+        except (OSError, ValueError, KeyError, TypeError, AttributeError):
             return None
-        if d.get("schema_version") != RESULT_SCHEMA_VERSION:
-            return None
-        return {k: float(v) for k, v in d["metrics"].items()}
 
     def _cache_store(self, cache_dir: str, h: str,
                      metrics: Dict[str, float]) -> None:
+        """Multi-process-safe store: write a private temp file in the
+        cache dir, then `os.replace` it into place — a reader (or a farm
+        worker racing on the same cell) sees either no file or a complete
+        one, never a torn write. Racing writers both produce the same
+        deterministic content, so last-replace-wins is harmless."""
         os.makedirs(cache_dir, exist_ok=True)
         path = os.path.join(cache_dir, h + ".json")
-        with open(path, "w") as f:
-            json.dump({"schema_version": RESULT_SCHEMA_VERSION,
-                       "study": self.name, "metrics": metrics}, f)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "w") as f:
+                json.dump({"schema_version": RESULT_SCHEMA_VERSION,
+                           "study": self.name, "metrics": metrics}, f)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
 
     def run(self, *, mesh=None, cache: Optional[str] = None) -> StudyResult:
         """Execute the plan and return the columnar frame.
@@ -635,25 +743,51 @@ class Study:
         """
         cache_dir = cache if cache is not None else self._cache_dir
         plan = self.plan()
-        n = len(plan.cells)
-        results: List[Optional[Dict[str, float]]] = [None] * n
-        hashes: List[Optional[str]] = [None] * n
+        results, executed, hits = self._execute_cells(
+            plan, cache_dir=cache_dir, mesh=mesh)
+        return self._frame(plan.cells,
+                           [results[i] for i in range(len(plan.cells))],
+                           executed, hits)
+
+    def _execute_cells(self, plan: StudyPlan,
+                       indices: Optional[Sequence[int]] = None, *,
+                       cache_dir: Optional[str] = None, mesh=None
+                       ) -> Tuple[Dict[int, Dict[str, float]], int, int]:
+        """Execute a subset of the plan's cells (default: all of them).
+
+        Returns ({cell_index: metrics}, executed_cells, cache_hits).
+        This is the farm's unit of work: a worker calls it with one
+        shard's cell indices against the fleet-shared cache directory.
+        Cells of a batched group still execute as ONE vmapped sweep call
+        (restricted to the selected, cache-missing members); per-design
+        results are bit-identical regardless of how the group was sliced
+        into shards, because vmap maps designs independently.
+        """
+        if indices is None:
+            sel = set(range(len(plan.cells)))
+        else:
+            sel = {int(i) for i in indices}
+            bad = sel - set(range(len(plan.cells)))
+            if bad:
+                raise IndexError(f"cell indices {sorted(bad)} outside the "
+                                 f"{len(plan.cells)}-cell plan")
+        results: Dict[int, Dict[str, float]] = {}
+        hashes: Dict[int, str] = {}
         hits = executed = 0
 
-        loaded: set = set()
         if cache_dir is not None:
-            for c in plan.cells:
-                hashes[c.index] = self._cell_hash(c)
-                got = self._cache_load(cache_dir, hashes[c.index])
+            for i in sorted(sel):
+                hashes[i] = self._cell_hash(plan.cells[i])
+                got = self._cache_load(cache_dir, hashes[i])
                 if got is not None:
-                    results[c.index] = got
-                    loaded.add(c.index)
+                    results[i] = got
                     hits += 1
+        loaded = set(results)
 
         # batched groups: one vmapped sweep kernel per flavor, executing
-        # only the cache-missing cells of each group
+        # only the selected, cache-missing cells of each group
         for grp in plan.groups:
-            miss = [i for i in grp.cells if results[i] is None]
+            miss = [i for i in grp.cells if i in sel and i not in results]
             if not miss:
                 continue
             ops = self._workloads[grp.workload]
@@ -671,7 +805,7 @@ class Study:
         # per-op engine fallback (and custom evaluators)
         pipelines: Dict[str, tuple] = {}
         for i in plan.fallback:
-            if results[i] is not None:
+            if i not in sel or i in results:
                 continue
             cell = plan.cells[i]
             ops = self._workloads[cell.workload]
@@ -701,16 +835,38 @@ class Study:
             executed += 1
 
         if cache_dir is not None:
-            for c in plan.cells:
-                i = c.index
+            for i in sorted(sel):
                 # only cells executed this run — hits came from these
                 # exact files, rewriting them is pure I/O churn
-                if hashes[i] is not None and i not in loaded:
+                if i not in loaded:
                     self._cache_store(cache_dir, hashes[i], results[i])
 
-        return self._frame(plan, results, executed, hits)
+        return results, executed, hits
 
-    def _frame(self, plan: StudyPlan,
+    def assemble_frame(self, results: Dict[int, Dict[str, float]], *,
+                       executed_cells: int = 0, cache_hits: int = 0,
+                       plan: Optional[StudyPlan] = None,
+                       partial: bool = False) -> StudyResult:
+        """Build the StudyResult frame from per-cell metric dicts keyed
+        by plan index — the farm client's reassembly path. With every
+        cell present this runs the exact `_frame` code path `run()` uses,
+        so a farm-reassembled frame is bit-identical to a local run of
+        the same plan. `partial=True` permits missing cells and returns
+        a frame over the completed rows only (incremental streaming);
+        claims attached to this study carry over either way."""
+        plan = self.plan() if plan is None else plan
+        have = sorted(int(i) for i in results)
+        if not partial:
+            missing = sorted(set(range(len(plan.cells))) - set(have))
+            if missing:
+                raise ValueError(
+                    f"{len(missing)} cells missing (e.g. {missing[:4]}); "
+                    f"pass partial=True for an incremental frame")
+        return self._frame([plan.cells[i] for i in have],
+                           [results[i] for i in have],
+                           executed_cells, cache_hits)
+
+    def _frame(self, cells: Sequence[StudyCell],
                results: List[Dict[str, float]],
                executed: int, hits: int) -> StudyResult:
         metric_names: List[str] = [m for m in METRIC_COLUMNS
@@ -725,10 +881,10 @@ class Study:
                                f"{sorted(missing)}")
             metric_names = [m for m in metric_names if m in self._metrics]
         cols: Dict[str, np.ndarray] = {
-            "design": np.array([c.design for c in plan.cells], dtype=object),
-            "workload": np.array([c.workload for c in plan.cells],
+            "design": np.array([c.design for c in cells], dtype=object),
+            "workload": np.array([c.workload for c in cells],
                                  dtype=object),
-            "fidelity": np.array([c.fidelity for c in plan.cells],
+            "fidelity": np.array([c.fidelity for c in cells],
                                  dtype=object),
         }
         for m in metric_names:
@@ -765,7 +921,11 @@ def get_study(name: str, **kw) -> Study:
     if name not in _STUDIES:
         raise KeyError(f"unknown study {name!r}; "
                        f"available: {sorted(_STUDIES)}")
-    return _STUDIES[name](**kw)
+    s = _STUDIES[name](**kw)
+    # registry provenance: lets Study.to_spec serialize by reference, so
+    # a farm submission of a named study keeps its claims + evaluator
+    s._ref = {"study": name, "kwargs": dict(kw)}
+    return s
 
 
 def list_studies() -> List[str]:
@@ -777,7 +937,14 @@ class _StudyNamespace:
 
     def __getattr__(self, name: str) -> Callable[..., Study]:
         if name in _STUDIES:
-            return _STUDIES[name]
+            # route through get_study so the built study carries its
+            # registry provenance (serializable as a farm spec)
+            import functools
+
+            @functools.wraps(_STUDIES[name])
+            def factory(**kw) -> Study:
+                return get_study(name, **kw)
+            return factory
         raise AttributeError(f"no study {name!r}; "
                              f"available: {sorted(_STUDIES)}")
 
@@ -954,7 +1121,7 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
     kw = {}
     if args.smoke and "smoke" in inspect.signature(factory).parameters:
         kw["smoke"] = True
-    study = factory(**kw)
+    study = get_study(args.study, **kw)
     if args.cache:
         study.cache(args.cache)
     res = study.run()

@@ -1,0 +1,262 @@
+"""`python -m repro.farm`: the run-farm CLI.
+
+    # one broker, any number of workers, then submit studies:
+    PYTHONPATH=src python -m repro.farm serve  --root farm &
+    PYTHONPATH=src python -m repro.farm worker --root farm &
+    PYTHONPATH=src python -m repro.farm submit studies.edp_array_size \
+        --root farm --smoke --wait --csv FRAME.csv
+
+    PYTHONPATH=src python -m repro.farm status --root farm [STUDY_ID]
+    PYTHONPATH=src python -m repro.farm cancel --root farm STUDY_ID
+
+    # self-contained end-to-end pass (CI): broker thread + N worker
+    # subprocesses + one submission, gated on the study's claims
+    PYTHONPATH=src python -m repro.farm smoke --root /tmp/farm \
+        --workers 2 --study edp_array_size --smoke \
+        --metrics FARM_metrics.json
+"""
+from __future__ import annotations
+
+import argparse
+import inspect
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+from typing import Optional, Sequence
+
+from .broker import Broker
+from .client import FarmClient
+from .queue import write_json_atomic
+from .worker import Worker
+
+
+def _study_kwargs(name: str, smoke: bool) -> dict:
+    from ..api.study import _STUDIES
+    factory = _STUDIES.get(name)
+    kw = {}
+    if smoke and factory is not None \
+            and "smoke" in inspect.signature(factory).parameters:
+        kw["smoke"] = True
+    return kw
+
+
+def _build_study(name: str, smoke: bool):
+    from ..api.study import get_study
+    name = name[len("studies."):] if name.startswith("studies.") else name
+    return get_study(name, **_study_kwargs(name, smoke))
+
+
+# ---- subcommands ------------------------------------------------------------
+
+def _cmd_serve(args) -> int:
+    broker = Broker(args.root, lease_seconds=args.lease,
+                    max_shard_cells=args.max_shard_cells)
+    print(f"farm broker serving root={broker.dirs.root} "
+          f"(lease={args.lease}s, poll={args.poll}s)", flush=True)
+    broker.serve(poll=args.poll,
+                 max_steps=1 if args.once else None,
+                 metrics_path=args.metrics)
+    return 0
+
+
+def _cmd_worker(args) -> int:
+    worker = Worker(args.root, args.id, use_mesh=args.mesh,
+                    cache=None if args.no_cache else "auto")
+    print(f"farm worker {worker.worker_id} serving "
+          f"root={worker.dirs.root}", flush=True)
+    if args.once:
+        worker.step()
+    else:
+        worker.serve(poll=args.poll, idle_exit=args.idle_exit)
+    print(f"farm worker {worker.worker_id} exiting: "
+          f"{worker.shards_done} shards, {worker.cells_done} cells "
+          f"({worker.cache_hits} cache hits)", flush=True)
+    return 0
+
+
+def _cmd_submit(args) -> int:
+    study = _build_study(args.study, args.smoke)
+    client = FarmClient(args.root)
+    sid = client.submit(study, priority=args.priority)
+    print(f"submitted {sid} (priority {args.priority})")
+    if not args.wait:
+        return 0
+    last = 0
+    res = None
+    for frame in client.stream(sid, timeout=args.timeout):
+        if len(frame) > last:
+            print(f"  {len(frame)} cells complete", flush=True)
+            last = len(frame)
+        res = frame
+    st = client.status(sid)
+    if st.get("state") != "done":
+        print(f"study ended {st.get('state')!r}")
+        return 1
+    res = client.result(sid, timeout=args.timeout)
+    print(f"study {sid}: done, executed {res.executed_cells} cells "
+          f"({res.cache_hits} cache hits)")
+    print(res.summary())
+    if args.csv:
+        res.to_csv(args.csv)
+        print(f"wrote {args.csv}")
+    claims = res.check_claims()
+    for name, ok in claims.items():
+        print(f"claim {'PASS' if ok else 'FAIL'}: {name}")
+    return 0 if all(claims.values()) else 1
+
+
+def _cmd_status(args) -> int:
+    client = FarmClient(args.root)
+    if args.study_id:
+        print(json.dumps(client.status(args.study_id), indent=1))
+    else:
+        studies = client.list_studies()
+        if not studies:
+            print("no studies submitted")
+        for sid, state in studies.items():
+            print(f"{state:>9}  {sid}")
+    return 0
+
+
+def _cmd_cancel(args) -> int:
+    FarmClient(args.root).cancel(args.study_id)
+    print(f"cancel requested for {args.study_id}")
+    return 0
+
+
+def _cmd_smoke(args) -> int:
+    """End-to-end farm pass: broker thread + N worker subprocesses,
+    one named-study submission, claims gating the exit code, and the
+    broker's per-worker metrics written as a JSON artifact."""
+    root = args.root
+    stop = threading.Event()
+    broker = Broker(root, lease_seconds=args.lease,
+                    max_shard_cells=args.max_shard_cells)
+    thread = threading.Thread(
+        target=broker.serve, kwargs=dict(poll=0.1, stop_event=stop),
+        daemon=True)
+    thread.start()
+    procs = [subprocess.Popen(
+        [sys.executable, "-m", "repro.farm", "worker", "--root", root,
+         "--id", f"smoke-w{i}", "--poll", "0.1",
+         "--idle-exit", str(args.timeout)],
+        env=dict(os.environ)) for i in range(args.workers)]
+    rc = 1
+    try:
+        client = FarmClient(root)
+        study = _build_study(args.study, args.smoke)
+        t0 = time.time()
+        sid = client.submit(study)
+        print(f"smoke: submitted {sid} to {args.workers} workers")
+        res = client.result(sid, timeout=args.timeout)
+        dt = time.time() - t0
+        claims = res.check_claims()
+        print(f"smoke: {len(res)} cells in {dt:.1f}s "
+              f"(executed {res.executed_cells}, "
+              f"{res.cache_hits} cache hits)")
+        for name, ok in claims.items():
+            print(f"claim {'PASS' if ok else 'FAIL'}: {name}")
+        rc = 0 if (claims and all(claims.values())) else 1
+    finally:
+        stop.set()
+        thread.join(timeout=10)
+        for p in procs:
+            p.terminate()
+        for p in procs:
+            try:
+                p.wait(timeout=15)
+            except subprocess.TimeoutExpired:
+                p.kill()
+        metrics = broker.metrics()
+        write_json_atomic(args.metrics, metrics)
+        print(f"smoke: wrote {args.metrics} "
+              f"(queue_depth={metrics['queue_depth']}, "
+              f"requeued={metrics['requeued_shards']})")
+    return rc
+
+
+# ---- argument plumbing --------------------------------------------------------
+
+def _main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.farm",
+        description="Study run-farm: broker, workers, submissions")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    def common(p):
+        p.add_argument("--root", default=os.environ.get("FARM_ROOT",
+                                                        "farm"),
+                       help="farm root directory (spool + state + cache)")
+
+    p = sub.add_parser("serve", help="run the broker")
+    common(p)
+    p.add_argument("--poll", type=float, default=0.5)
+    p.add_argument("--lease", type=float, default=120.0,
+                   help="seconds before a claimed shard is re-queued")
+    p.add_argument("--max-shard-cells", type=int, default=8)
+    p.add_argument("--once", action="store_true",
+                   help="one scheduling pass, then exit")
+    p.add_argument("--metrics", default=None,
+                   help="write broker metrics JSON here every pass")
+    p.set_defaults(fn=_cmd_serve)
+
+    p = sub.add_parser("worker", help="run one worker")
+    common(p)
+    p.add_argument("--id", default=None, help="worker id (default: pid)")
+    p.add_argument("--poll", type=float, default=0.2)
+    p.add_argument("--idle-exit", type=float, default=None,
+                   help="exit after this many idle seconds")
+    p.add_argument("--mesh", action="store_true",
+                   help="shard batched groups over the local device mesh")
+    p.add_argument("--no-cache", action="store_true",
+                   help="skip the shared dedup cache (bench cold runs)")
+    p.add_argument("--once", action="store_true")
+    p.set_defaults(fn=_cmd_worker)
+
+    p = sub.add_parser("submit", help="submit a named study")
+    common(p)
+    p.add_argument("study",
+                   help="registry study, e.g. studies.edp_array_size")
+    p.add_argument("--smoke", action="store_true",
+                   help="shrink the study where the factory supports it")
+    p.add_argument("--priority", type=int, default=100,
+                   help="lower = scheduled first")
+    p.add_argument("--wait", action="store_true",
+                   help="stream until done; exit code gates the claims")
+    p.add_argument("--timeout", type=float, default=600.0)
+    p.add_argument("--csv", help="write the final frame as CSV")
+    p.set_defaults(fn=_cmd_submit)
+
+    p = sub.add_parser("status", help="show study states")
+    common(p)
+    p.add_argument("study_id", nargs="?", default=None)
+    p.set_defaults(fn=_cmd_status)
+
+    p = sub.add_parser("cancel", help="cancel a study")
+    common(p)
+    p.add_argument("study_id")
+    p.set_defaults(fn=_cmd_cancel)
+
+    p = sub.add_parser("smoke",
+                       help="self-contained broker+workers+submit pass")
+    common(p)
+    p.add_argument("--workers", type=int, default=2)
+    p.add_argument("--study", default="edp_array_size")
+    p.add_argument("--smoke", action="store_true",
+                   help="use the study factory's smoke variant")
+    p.add_argument("--timeout", type=float, default=480.0)
+    p.add_argument("--lease", type=float, default=120.0)
+    p.add_argument("--max-shard-cells", type=int, default=2,
+                   help="small shards so every worker sees work")
+    p.add_argument("--metrics", default="FARM_metrics.json")
+    p.set_defaults(fn=_cmd_smoke)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(_main())

@@ -1,0 +1,313 @@
+"""Broker: the farm's manager process (FireSim manager / run-farm shape).
+
+One scheduling pass (`step`) does, in order:
+
+1. **ingest** — claim submitted jobs from the `jobs` spool, rebuild each
+   study from its spec (`Study.from_spec`), compile the plan, split it
+   into **cell-group shards** and enqueue them on the `shards` spool at
+   the study's priority. Shard sizing reuses `repro.dist`'s elastic
+   planner: the group's cell count is the "global batch" spread over the
+   currently-alive worker fleet, capped at `max_shard_cells` per shard —
+   so a fleet of M workers gets ≥ M concurrently-claimable slices of any
+   non-trivial group, and the split re-plans as workers join or leave.
+2. **collect** — fold worker-written shard results into each study's
+   `status.json` (cells done, executed vs cache-hit counts, per-worker
+   stats); a study whose every shard reported flips to `done`.
+3. **cancel** — apply `control/<sid>.cancel` requests: pending shards
+   are dropped from the spool, the status flips to `canceled` (claimed
+   shards finish idempotently; their results are simply ignored).
+4. **requeue** — move claimed shards whose lease expired back to
+   pending (`FileSpool.requeue_stale`): a killed worker's shard is
+   re-executed by the next free worker. At-least-once delivery is safe
+   because cells are deterministic and the shared cache dedups re-runs.
+
+Per-worker shard wall times feed a `StragglerDetector`
+(median-of-means, see repro.dist.straggler); flagged workers are
+surfaced in `metrics()` so an operator (or the CI smoke gate) can see a
+sick host without grepping logs.
+
+The broker holds no authoritative state: everything lives in the spool
+and the per-study JSON files, so a restarted broker resumes where the
+old one died (in-flight studies are re-discovered from `status.json`).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Optional
+
+from ..api.study import Study, StudyPlan
+from ..dist import StragglerDetector, plan_elastic_remesh
+from .queue import (JOBS_TOPIC, SHARDS_TOPIC, FarmDirs, FileSpool,
+                    read_json, write_json_atomic)
+
+__all__ = ["Broker"]
+
+# states a study's status.json can be in
+ACTIVE, DONE, CANCELED, ERROR = "running", "done", "canceled", "error"
+
+
+class Broker:
+    def __init__(self, root: str, *, lease_seconds: float = 120.0,
+                 max_shard_cells: int = 8,
+                 heartbeat_timeout: float = 30.0,
+                 straggler: Optional[StragglerDetector] = None):
+        self.dirs = FarmDirs(root)
+        self.spool = FileSpool(root)
+        self.lease_seconds = float(lease_seconds)
+        self.max_shard_cells = int(max_shard_cells)
+        self.heartbeat_timeout = float(heartbeat_timeout)
+        self.straggler = straggler or StragglerDetector(threshold=3.0,
+                                                        patience=2)
+        self._t0 = time.time()
+        self._status: Dict[str, dict] = {}       # sid -> status dict
+        self._seen_shards: Dict[str, set] = {}   # sid -> collected shard ids
+        self._worker_stats: Dict[str, dict] = {}
+        self._worker_hosts: Dict[str, int] = {}  # wid -> straggler host int
+        self._requeued_total = 0
+        # a restarted broker re-adopts in-flight studies from disk
+        for sid in self.dirs.study_ids():
+            st = read_json(self.dirs.status_path(sid))
+            if st and st.get("state") == ACTIVE:
+                self._status[sid] = st
+                self._seen_shards[sid] = set(st.get("shards_done", []))
+
+    # ---- one scheduling pass -------------------------------------------------
+    def step(self) -> Dict[str, object]:
+        ingested = self._ingest_jobs()
+        collected = self._collect_results()
+        canceled = self._apply_cancels()
+        requeued = self.spool.requeue_stale(SHARDS_TOPIC,
+                                            self.lease_seconds)
+        self._requeued_total += len(requeued)
+        if requeued:
+            # a lease-expired shard of an already-canceled study must not
+            # come back from the dead
+            self._drop_canceled_pending()
+        return {"ingested": ingested, "collected": collected,
+                "canceled": canceled, "requeued": len(requeued),
+                "queue_depth": self.spool.depth(SHARDS_TOPIC)}
+
+    def serve(self, *, poll: float = 0.5, stop_event=None,
+              max_steps: Optional[int] = None,
+              metrics_path: Optional[str] = None) -> None:
+        """Run `step` in a loop (the `python -m repro.farm serve` body)."""
+        steps = 0
+        while True:
+            self.step()
+            if metrics_path:
+                write_json_atomic(metrics_path, self.metrics())
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                return
+            if stop_event is not None and stop_event.wait(poll):
+                return
+            if stop_event is None:
+                time.sleep(poll)
+
+    # ---- 1. ingest -------------------------------------------------------------
+    def _ingest_jobs(self) -> List[str]:
+        out: List[str] = []
+        while True:
+            item = self.spool.claim(JOBS_TOPIC, "broker")
+            if item is None:
+                return out
+            sid = str(item.payload.get("study_id", item.item_id))
+            priority = int(item.payload.get("priority", 100))
+            existing = read_json(self.dirs.status_path(sid))
+            if existing is not None:
+                # duplicate submission, or canceled before ingest: the
+                # job is dropped, the existing status stands
+                self.spool.ack(item)
+                continue
+            try:
+                study = Study.from_spec(item.payload["spec"])
+                plan = study.plan()
+            except Exception as e:  # noqa: BLE001 — bad spec = study error
+                self._write_status(sid, {
+                    "study_id": sid, "state": ERROR, "priority": priority,
+                    "error": f"{type(e).__name__}: {e}",
+                    "ingested_at": time.time()})
+                self.spool.ack(item)
+                out.append(sid)
+                continue
+            # spec lands on disk BEFORE any shard is claimable: a worker
+            # that can claim a shard can always rebuild the study
+            write_json_atomic(self.dirs.spec_path(sid),
+                              item.payload["spec"])
+            shards = self._split(plan)
+            for k, cells in enumerate(shards):
+                self.spool.put(SHARDS_TOPIC,
+                               {"study_id": sid, "shard": k,
+                                "cells": [int(i) for i in cells]},
+                               priority=priority)
+            self._write_status(sid, {
+                "study_id": sid, "state": ACTIVE, "priority": priority,
+                "shards_total": len(shards),
+                "cells_total": len(plan.cells),
+                "shards_done": [], "cells_done": 0,
+                "executed_cells": 0, "cache_hits": 0,
+                "ingested_at": time.time()})
+            self._seen_shards[sid] = set()
+            self.spool.ack(item)
+            out.append(sid)
+
+    def _split(self, plan: StudyPlan) -> List[List[int]]:
+        """Slice the plan into shards: whole-group slices sized by the
+        elastic planner over the live worker fleet. A slice of a batched
+        group still executes as one vmapped call on the worker; fallback
+        (per-op) cells are chunked the same way."""
+        n_workers = max(1, len(self.active_workers()))
+        shards: List[List[int]] = []
+
+        def slices(cells: List[int]) -> None:
+            if not cells:
+                return
+            ep = plan_elastic_remesh(
+                n_workers, global_batch=len(cells),
+                max_per_device_batch=self.max_shard_cells)
+            size = max(1, ep.per_device_batch)
+            shards.extend(cells[i:i + size]
+                          for i in range(0, len(cells), size))
+
+        for grp in plan.groups:
+            slices(list(grp.cells))
+        slices(list(plan.fallback))
+        return shards
+
+    # ---- 2. collect -------------------------------------------------------------
+    def _collect_results(self) -> int:
+        new = 0
+        for sid in [s for s, st in self._status.items()
+                    if st.get("state") == ACTIVE]:
+            rdir = self.dirs.results_dir(sid)
+            if not os.path.isdir(rdir):
+                continue
+            status = self._status[sid]
+            seen = self._seen_shards.setdefault(sid, set())
+            changed = False
+            for name in sorted(os.listdir(rdir)):
+                if not (name.startswith("shard-")
+                        and name.endswith(".json")):
+                    continue
+                payload = read_json(os.path.join(rdir, name))
+                if payload is None:
+                    continue                     # still being written
+                shard = int(payload.get("shard", -1))
+                if shard in seen:
+                    continue
+                seen.add(shard)
+                changed = True
+                new += 1
+                wid = str(payload.get("worker", "?"))
+                if "error" in payload:
+                    status["state"] = ERROR
+                    status["error"] = (f"shard {shard} on {wid}: "
+                                       f"{payload['error']}")
+                    continue
+                status["cells_done"] += len(payload.get("cells", {}))
+                status["executed_cells"] += int(
+                    payload.get("executed_cells", 0))
+                status["cache_hits"] += int(payload.get("cache_hits", 0))
+                status["shards_done"] = sorted(seen)
+                self._record_worker(wid, payload)
+            if changed:
+                if (status["state"] == ACTIVE
+                        and len(seen) >= status["shards_total"]):
+                    status["state"] = DONE
+                    status["done_at"] = time.time()
+                self._write_status(sid, status)
+        return new
+
+    def _record_worker(self, wid: str, payload: dict) -> None:
+        s = self._worker_stats.setdefault(
+            wid, {"shards_done": 0, "cells_done": 0, "executed_cells": 0,
+                  "cache_hits": 0, "busy_seconds": 0.0})
+        s["shards_done"] += 1
+        s["cells_done"] += len(payload.get("cells", {}))
+        s["executed_cells"] += int(payload.get("executed_cells", 0))
+        s["cache_hits"] += int(payload.get("cache_hits", 0))
+        s["busy_seconds"] += float(payload.get("seconds", 0.0))
+        host = self._worker_hosts.setdefault(wid, len(self._worker_hosts))
+        self.straggler.record(host, float(payload.get("seconds", 0.0)))
+
+    # ---- 3. cancel -------------------------------------------------------------
+    def _apply_cancels(self) -> List[str]:
+        cdir = self.dirs.control_dir()
+        if not os.path.isdir(cdir):
+            return []
+        out: List[str] = []
+        for name in sorted(os.listdir(cdir)):
+            if not name.endswith(".cancel"):
+                continue
+            sid = name[:-len(".cancel")]
+            status = self._status.get(sid) or read_json(
+                self.dirs.status_path(sid))
+            if status is None:
+                # canceled before ingest: park a canceled status so the
+                # job is dropped when (if) it arrives
+                status = {"study_id": sid, "state": CANCELED,
+                          "canceled_at": time.time()}
+            elif status.get("state") == ACTIVE:
+                status["state"] = CANCELED
+                status["canceled_at"] = time.time()
+            self._write_status(sid, status)
+            self.spool.drop_pending(
+                SHARDS_TOPIC, lambda p, s=sid: p.get("study_id") == s)
+            try:
+                os.unlink(os.path.join(cdir, name))
+            except OSError:
+                pass
+            out.append(sid)
+        return out
+
+    def _drop_canceled_pending(self) -> int:
+        dead = {s for s, st in self._status.items()
+                if st.get("state") in (CANCELED, ERROR)}
+        if not dead:
+            return 0
+        return self.spool.drop_pending(
+            SHARDS_TOPIC, lambda p: p.get("study_id") in dead)
+
+    # ---- bookkeeping -------------------------------------------------------------
+    def _write_status(self, sid: str, status: dict) -> None:
+        self._status[sid] = status
+        write_json_atomic(self.dirs.status_path(sid), status)
+
+    def active_workers(self) -> List[str]:
+        """Worker ids with a fresh heartbeat."""
+        wdir = self.dirs.workers_dir()
+        if not os.path.isdir(wdir):
+            return []
+        now = time.time()
+        out = []
+        for name in sorted(os.listdir(wdir)):
+            if not name.endswith(".json"):
+                continue
+            hb = read_json(os.path.join(wdir, name))
+            if hb and now - float(hb.get("time", 0)) < \
+                    self.heartbeat_timeout:
+                out.append(str(hb.get("worker", name[:-len(".json")])))
+        return out
+
+    def metrics(self) -> dict:
+        """Fleet metrics: per-worker work done + cache hits, queue depth,
+        straggler flags, study states — the CI smoke job's artifact."""
+        host_to_wid = {h: w for w, h in self._worker_hosts.items()}
+        workers = {}
+        for wid, s in self._worker_stats.items():
+            workers[wid] = dict(s)
+        for wid in self.active_workers():
+            workers.setdefault(wid, {})["alive"] = True
+        return {
+            "wall_seconds": time.time() - self._t0,
+            "queue_depth": self.spool.depth(SHARDS_TOPIC),
+            "claimed_shards": len(self.spool.claimed_items(SHARDS_TOPIC)),
+            "requeued_shards": self._requeued_total,
+            "workers": workers,
+            "stragglers": [host_to_wid[h]
+                           for h in self.straggler.stragglers()
+                           if h in host_to_wid],
+            "studies": {sid: st.get("state", "?")
+                        for sid, st in self._status.items()},
+        }

@@ -1,0 +1,144 @@
+"""Direct unit tests for the repro.dist pieces the run-farm leans on:
+`StragglerDetector` (median-of-means threshold, patience, windowing,
+reset) and `plan_elastic_remesh` (fleet grows/shrinks, TP divisibility,
+global-batch preservation). Before the farm these were only exercised
+incidentally through launch/ smoke paths."""
+import pytest
+
+from repro.dist import StragglerDetector, plan_elastic_remesh
+
+
+# ---- StragglerDetector ------------------------------------------------------
+
+def feed(det, host, value, n):
+    for _ in range(n):
+        det.record(host, value)
+
+
+def test_threshold_must_exceed_one():
+    with pytest.raises(ValueError):
+        StragglerDetector(threshold=1.0)
+    with pytest.raises(ValueError):
+        StragglerDetector(threshold=0.5)
+
+
+def test_single_host_never_flags_itself():
+    det = StragglerDetector(threshold=3.0, patience=2)
+    feed(det, 0, 100.0, 8)          # slow in absolute terms, but the
+    assert det.stragglers() == []   # median IS its own mean
+
+
+def test_median_of_means_flags_the_slow_host():
+    det = StragglerDetector(threshold=3.0, patience=2)
+    feed(det, 0, 1.0, 4)
+    feed(det, 1, 1.0, 4)
+    feed(det, 2, 10.0, 4)           # median of (1, 1, 10) = 1
+    assert det.stragglers() == [2]
+
+
+def test_even_host_count_averages_the_middle_means():
+    det = StragglerDetector(threshold=3.0, patience=1)
+    for host, v in enumerate((1.0, 3.0, 3.0, 100.0)):
+        det.record(host, v)
+    # median of means = (3 + 3) / 2 = 3; only 100 > 3 * 3
+    assert det.stragglers() == [3]
+
+
+def test_patience_requires_consecutive_slow_samples():
+    det = StragglerDetector(threshold=3.0, patience=2)
+    feed(det, 0, 1.0, 8)
+    feed(det, 1, 1.0, 2)
+    det.record(1, 50.0)             # one bad step: not yet a straggler
+    assert det.stragglers() == []
+    det.record(1, 50.0)             # second consecutive: flagged
+    assert det.stragglers() == [1]
+    det.record(1, 1.0)              # a good step clears the streak
+    assert det.stragglers() == []
+
+
+def test_window_forgets_ancient_history():
+    det = StragglerDetector(threshold=2.0, patience=2, window=4)
+    feed(det, 0, 1.0, 8)
+    feed(det, 1, 1.0, 8)
+    feed(det, 2, 100.0, 2)          # flagged...
+    assert det.stragglers() == [2]
+    feed(det, 2, 1.0, 4)            # ...then recovers: window rolls over
+    assert det.stragglers() == []
+
+
+def test_reset_one_host_and_all():
+    det = StragglerDetector(threshold=3.0, patience=1)
+    feed(det, 0, 1.0, 4)
+    feed(det, 1, 1.0, 4)
+    feed(det, 2, 10.0, 4)
+    assert det.stragglers() == [2]
+    det.reset(2)
+    assert det.stragglers() == []
+    feed(det, 2, 10.0, 4)
+    det.reset()
+    assert det.stragglers() == [] and det._samples == {}
+
+
+# ---- plan_elastic_remesh ------------------------------------------------------
+
+def test_plain_data_parallel_plan():
+    p = plan_elastic_remesh(8, global_batch=16)
+    assert (p.dp, p.tp) == (8, 1)
+    assert p.mesh_shape == (8, 1) and p.mesh_axes == ("data", "model")
+    assert p.per_device_batch == 2 and p.grad_accum == 1
+    assert p.global_batch == 16
+
+
+def test_tp_halves_until_it_divides_the_fleet():
+    p = plan_elastic_remesh(6, global_batch=12, tp=4)
+    assert p.tp == 2 and p.dp == 3          # 4 -> 2 divides 6
+    assert p.global_batch >= 12
+    p = plan_elastic_remesh(8, global_batch=8, tp=4)
+    assert p.tp == 4 and p.dp == 2
+
+
+def test_fleet_shrink_absorbed_by_grad_accum():
+    """Workers leave (8 -> 2 devices): the global batch — and so the
+    training trajectory / farm shard total — is preserved."""
+    big = plan_elastic_remesh(8, global_batch=64, max_per_device_batch=8)
+    small = plan_elastic_remesh(2, global_batch=64, max_per_device_batch=8)
+    assert big.global_batch == small.global_batch == 64
+    assert small.grad_accum > big.grad_accum
+    assert small.per_device_batch <= 8
+
+
+def test_fleet_grow_keeps_batch_and_caps_pdb():
+    for n in (1, 2, 3, 4, 8, 16):
+        p = plan_elastic_remesh(n, global_batch=32,
+                                max_per_device_batch=4)
+        assert p.global_batch >= 32, n      # ceil division never loses rows
+        assert 1 <= p.per_device_batch <= 4
+        assert p.dp * p.tp <= n
+
+
+def test_prefer_pod_splits_the_data_axis():
+    p = plan_elastic_remesh(16, global_batch=16, tp=2, prefer_pod=4)
+    assert p.mesh_shape == (4, 2, 2)
+    assert p.mesh_axes == ("pod", "data", "model")
+    # pod count not dividing dp: fall back to the flat mesh
+    p = plan_elastic_remesh(16, global_batch=16, tp=2, prefer_pod=3)
+    assert p.mesh_axes == ("data", "model")
+
+
+def test_rejects_empty_fleet():
+    with pytest.raises(ValueError):
+        plan_elastic_remesh(0, global_batch=8)
+
+
+def test_farm_shard_sizing_contract():
+    """The broker's use: cells-per-shard = per_device_batch, capped by
+    max_shard_cells, with >= n_workers slices of any big-enough group."""
+    for n_workers in (1, 2, 4):
+        for n_cells in (1, 3, 8, 16, 33):
+            p = plan_elastic_remesh(n_workers, global_batch=n_cells,
+                                    max_per_device_batch=8)
+            size = max(1, p.per_device_batch)
+            n_shards = -(-n_cells // size)
+            assert size <= 8
+            if n_cells >= n_workers:
+                assert n_shards >= min(n_workers, n_cells)

@@ -1,0 +1,306 @@
+"""The run-farm (repro.farm): spool atomics, broker scheduling, worker
+execution, client reassembly — driven synchronously (no threads, no
+sleeps): tests call broker.step()/worker.step() by hand, so every
+interleaving in here is deterministic.
+
+Acceptance (ISSUE 6): farm frames bit-identical to a local Study.run(),
+zero executed cells on a pre-warmed shared cache across two concurrent
+submissions, dead-worker shard re-queue, and cancellation."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import Study, preset_grid, studies
+from repro.api.study import StudyResult
+from repro.core.topology import Op
+from repro.farm import Broker, FarmClient, Worker
+from repro.farm.queue import SHARDS_TOPIC, FileSpool
+
+OPS_A = [Op("a", 256, 1024, 512), Op("b", 512, 197, 768, count=3.0)]
+OPS_B = [Op("c", 128, 512, 256)]
+
+
+def mk_study(name="farmtest"):
+    """2 designs x 2 workloads = 4 cells in 2 batched groups."""
+    return (Study(name).designs(preset_grid(array=[8, 16]))
+            .workloads({"wa": OPS_A, "wb": OPS_B}).fidelity("fast"))
+
+
+def drive(broker, workers, client, sid, max_rounds=50):
+    """Synchronous farm: alternate worker/broker steps to completion."""
+    broker.step()
+    for _ in range(max_rounds):
+        if client.status(sid).get("state") != "running":
+            return
+        for w in workers:
+            w.step()
+        broker.step()
+    raise AssertionError(f"farm did not settle: {client.status(sid)}")
+
+
+@pytest.fixture()
+def farm(tmp_path):
+    root = str(tmp_path / "farm")
+    return (FarmClient(root), Broker(root, max_shard_cells=2),
+            [Worker(root, "w0"), Worker(root, "w1")])
+
+
+# ---- the file spool ---------------------------------------------------------
+
+def test_spool_put_claim_ack_priority_order(tmp_path):
+    sp = FileSpool(str(tmp_path))
+    sp.put("t", {"x": 2}, priority=200)
+    sp.put("t", {"x": 0}, priority=50)
+    sp.put("t", {"x": 1}, priority=50)          # FIFO within a priority
+    assert sp.depth("t") == 3
+    got = [sp.claim("t", "me").payload["x"] for _ in range(3)]
+    assert got == [0, 1, 2]
+    assert sp.claim("t", "me") is None
+    # claimed items are leased, not gone, until acked
+    assert len(sp.claimed_items("t")) == 3
+
+
+def test_spool_claim_is_exclusive_and_requeue_restores(tmp_path):
+    sp = FileSpool(str(tmp_path))
+    sp.put("t", {"x": 1})
+    a = sp.claim("t", "w0")
+    assert a is not None and sp.claim("t", "w1") is None
+    # the owner died: lease expiry moves it back, the other worker wins
+    assert sp.requeue_stale("t", lease_seconds=0.0) == [a.item_id]
+    b = sp.claim("t", "w1")
+    assert b is not None and b.payload == {"x": 1}
+    sp.ack(b)
+    assert sp.requeue_stale("t", lease_seconds=0.0) == []
+    assert sp.depth("t") == 0
+
+
+def test_spool_drop_pending_and_poison(tmp_path):
+    sp = FileSpool(str(tmp_path))
+    sp.put("t", {"sid": "a"})
+    sp.put("t", {"sid": "b"})
+    assert sp.drop_pending("t", lambda p: p["sid"] == "a") == 1
+    # a torn/corrupt pending file is dropped by claim, not fatal
+    _, pending, _ = sp._dirs("t")
+    with open(os.path.join(pending, "p0000-0-bad.json"), "w") as f:
+        f.write("{not json")
+    got = sp.claim("t", "me")
+    assert got is not None and got.payload == {"sid": "b"}
+
+
+# ---- study spec wire format -------------------------------------------------
+
+def test_inline_spec_roundtrip_preserves_plan_and_cell_hashes():
+    s = (mk_study().fidelity("fast", "trace")
+         .options(core_index=0, force_fallback=False))
+    spec = json.loads(json.dumps(s.to_spec()))   # through real JSON
+    back = Study.from_spec(spec)
+    p0, p1 = s.plan(), back.plan()
+    assert [(c.design, c.workload, c.fidelity) for c in p0.cells] == \
+        [(c.design, c.workload, c.fidelity) for c in p1.cells]
+    # shared-cache identity across processes: hashes must match exactly
+    assert [s._cell_hash(c) for c in p0.cells] == \
+        [back._cell_hash(c) for c in p1.cells]
+
+
+def test_registry_spec_keeps_claims_and_evaluator():
+    s = studies.edp_array_size(smoke=True)
+    spec = json.loads(json.dumps(s.to_spec()))
+    assert spec["ref"] == {"study": "edp_array_size",
+                           "kwargs": {"smoke": True}}
+    back = Study.from_spec(spec)
+    assert [n for n, _ in back._claims] == [n for n, _ in s._claims]
+    # evaluator studies only serialize by reference
+    ev = studies.multicore_contention(channels=(1, 2))
+    assert Study.from_spec(ev.to_spec())._evaluator is not None
+    with pytest.raises(ValueError):
+        mk_study().evaluator(lambda c, o, f: {"m": 1.0}).to_spec()
+
+
+def test_spec_rejects_bad_payloads():
+    with pytest.raises(ValueError):
+        Study.from_spec({"kind": "nope"})
+    spec = mk_study().to_spec()
+    spec["schema_version"] = "v0-bogus"
+    with pytest.raises(ValueError):
+        Study.from_spec(spec)
+
+
+# ---- end-to-end: bit-identity ------------------------------------------------
+
+def test_farm_frame_bit_identical_to_local_run(farm):
+    client, broker, workers = farm
+    local = mk_study().run()
+    sid = client.submit(mk_study())
+    drive(broker, workers, client, sid)
+    st = client.status(sid)
+    # max_shard_cells=2 with 2x 2-cell groups -> both workers got work
+    assert st["shards_total"] >= 2
+    res = client.result(sid, timeout=5)
+    assert res.equals(local)
+    for k in res.columns:
+        assert np.array_equal(res[k], local[k]), k
+    assert res.executed_cells == len(local) and res.cache_hits == 0
+    done_workers = {w.worker_id for w in workers if w.shards_done}
+    assert len(done_workers) == 2, "both workers should process shards"
+
+
+def test_registry_study_claims_survive_farm_roundtrip(farm):
+    client, broker, workers = farm
+    sid = client.submit(studies.edp_array_size(smoke=True))
+    drive(broker, workers, client, sid)
+    res = client.result(sid, timeout=5)
+    assert res.claims_ok(), res.check_claims()
+    local = studies.edp_array_size(smoke=True).run()
+    assert res.equals(local)
+
+
+# ---- the fleet-shared dedup cache ---------------------------------------------
+
+def test_prewarmed_cache_executes_zero_cells_across_submissions(farm):
+    client, broker, workers = farm
+    # warm the farm cache with a plain local run — single-process caches
+    # carry straight over to the fleet
+    mk_study().run(cache=broker.dirs.cache_dir())
+    for sid in [client.submit(mk_study()), client.submit(mk_study())]:
+        drive(broker, workers, client, sid)
+        res = client.result(sid, timeout=5)
+        assert res.executed_cells == 0
+        assert res.cache_hits == len(res) == 4
+    m = broker.metrics()
+    assert sum(w.get("cache_hits", 0)
+               for w in m["workers"].values()) == 8
+
+
+def test_cold_farm_then_warm_local_run(farm):
+    """Dedup flows both ways: a farm-executed study warms the cache for
+    a later single-process run."""
+    client, broker, workers = farm
+    sid = client.submit(mk_study())
+    drive(broker, workers, client, sid)
+    res = client.result(sid, timeout=5)
+    local = mk_study().run(cache=broker.dirs.cache_dir())
+    assert local.executed_cells == 0 and local.cache_hits == 4
+    assert local.equals(res)
+
+
+# ---- failure paths --------------------------------------------------------------
+
+def test_killed_worker_shard_requeued_and_study_completes(tmp_path):
+    root = str(tmp_path / "farm")
+    client = FarmClient(root)
+    broker = Broker(root, max_shard_cells=2, lease_seconds=0.0)
+    local = mk_study().run()
+    sid = client.submit(mk_study())
+    broker.step()
+    # a worker claims a shard and dies before writing any result
+    spool = FileSpool(root)
+    dead = spool.claim(SHARDS_TOPIC, "dead-worker")
+    assert dead is not None
+    # lease (0s) expires on the broker's next pass -> shard re-queued
+    out = broker.step()
+    assert out["requeued"] == 1
+    survivor = Worker(root, "survivor")
+    while client.status(sid).get("state") == "running":
+        if not survivor.step():
+            broker.step()
+    res = client.result(sid, timeout=5)
+    assert res.equals(local)
+    assert broker.metrics()["requeued_shards"] == 1
+
+
+def test_cancellation_drops_pending_shards(farm):
+    client, broker, workers = farm
+    sid = client.submit(mk_study())
+    broker.step()                                  # ingest + shard
+    assert broker.spool.depth(SHARDS_TOPIC) >= 2
+    client.cancel(sid)
+    broker.step()                                  # apply the cancel
+    assert client.status(sid)["state"] == "canceled"
+    assert broker.spool.depth(SHARDS_TOPIC) == 0
+    assert not workers[0].step(), "no work left for workers"
+    with pytest.raises(RuntimeError, match="canceled"):
+        client.result(sid, timeout=1)
+
+
+def test_cancel_before_ingest_drops_the_job(farm):
+    client, broker, workers = farm
+    sid = client.submit(mk_study(), study_id="early-cancel")
+    client.cancel(sid)
+    broker.step()   # cancel parks a canceled status; ingest sees it
+    broker.step()
+    assert client.status(sid)["state"] == "canceled"
+    assert broker.spool.depth(SHARDS_TOPIC) == 0
+
+
+def test_bad_spec_marks_study_error(farm):
+    client, broker, workers = farm
+    spec = mk_study().to_spec()
+    spec["workloads"] = {}                         # invalid: no workloads
+    sid = client.submit(spec)
+    broker.step()
+    assert client.status(sid)["state"] == "error"
+    with pytest.raises(RuntimeError, match="failed"):
+        client.result(sid, timeout=1)
+
+
+# ---- streaming + scheduling ------------------------------------------------------
+
+def test_partial_frames_stream_in_plan_order(farm):
+    client, broker, workers = farm
+    sid = client.submit(mk_study())
+    broker.step()
+    assert client.partial_result(sid) is not None
+    assert len(client.partial_result(sid)) == 0
+    workers[0].step()                              # one shard done
+    broker.step()
+    part = client.partial_result(sid)
+    assert 0 < len(part) < 4
+    assert isinstance(part, StudyResult)
+    # partial rows are a prefix-consistent subset of the final frame
+    drive(broker, workers, client, sid)
+    full = client.result(sid, timeout=5)
+    rows = {tuple(r[a] for a in ("design", "workload", "fidelity")):
+            r["total_cycles"] for r in full.rows()}
+    for r in part.rows():
+        key = tuple(r[a] for a in ("design", "workload", "fidelity"))
+        assert rows[key] == r["total_cycles"]
+
+
+def test_priority_orders_shard_claims(farm):
+    client, broker, workers = farm
+    slow = client.submit(mk_study("background"), priority=500)
+    urgent = client.submit(mk_study("urgent"), priority=1)
+    broker.step()
+    w = workers[0]
+    w.step()                                       # claims urgent first
+    broker.step()
+    assert client.status(urgent)["cells_done"] > 0
+    assert client.status(slow)["cells_done"] == 0
+    drive(broker, workers, client, urgent)
+    drive(broker, workers, client, slow)
+    assert client.result(slow, timeout=5).equals(
+        client.result(urgent, timeout=5))
+
+
+def test_broker_restart_resumes_inflight_study(tmp_path):
+    root = str(tmp_path / "farm")
+    client = FarmClient(root)
+    sid = client.submit(mk_study())
+    Broker(root, max_shard_cells=2).step()         # ingest, then "crash"
+    broker2 = Broker(root, max_shard_cells=2)      # fresh process
+    workers = [Worker(root, "w0")]
+    drive(broker2, workers, client, sid)
+    assert client.result(sid, timeout=5).equals(mk_study().run())
+
+
+def test_worker_mesh_mode_matches_plain(farm):
+    client, broker, _ = farm
+    local = mk_study().run()
+    sid = client.submit(mk_study())
+    meshed = Worker(broker.dirs.root, "meshed", use_mesh=True)
+    drive(broker, [meshed], client, sid)
+    res = client.result(sid, timeout=5)
+    for k in ("total_cycles", "energy_pj", "stall_cycles"):
+        assert np.allclose(res[k], local[k], rtol=1e-6)

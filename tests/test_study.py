@@ -274,6 +274,56 @@ def test_run_cache_kwarg_does_not_stick(tmp_path):
     assert again.cache_hits == 0 and again.executed_cells == 1
 
 
+def test_cache_tolerates_corrupt_and_truncated_files(tmp_path):
+    """ISSUE 6 satellite: a torn/garbage cache file is a miss, never a
+    crash — concurrent farm writers (and interrupted single-user runs)
+    leave partial files behind on pre-atomic layouts."""
+    import os
+    cache = str(tmp_path / "cells")
+    mk = lambda: (Study("robust").designs(preset_grid(array=[16, 32]))
+                  .workloads({"wa": OPS_A[:2]}).fidelity("fast")
+                  .cache(cache))
+    first = mk().run()
+    files = sorted(os.listdir(cache))
+    assert files and not [f for f in files if ".tmp." in f], \
+        "atomic store must not leave temp litter"
+    # corrupt one cell every way a torn write or stray file could
+    victim = os.path.join(cache, files[0])
+    for garbage in ("", "{\"schema_version\":", "[1, 2, 3]", "null",
+                    '{"schema_version": "v0-bogus", "metrics": {}}',
+                    '{"metrics": "not-a-dict"}'):
+        with open(victim, "w") as f:
+            f.write(garbage)
+        again = mk().run()
+        # the corrupt cell re-executes (miss), the other still hits
+        assert again.executed_cells == 1 and again.cache_hits == 1
+        assert again.equals(first), garbage
+    # the re-run healed the cache in place
+    final = mk().run()
+    assert final.executed_cells == 0 and final.cache_hits == 2
+
+
+def test_cache_store_is_atomic_rename(tmp_path, monkeypatch):
+    """_cache_store never exposes a partially-written file under the
+    final name: the content appears via os.replace only."""
+    import os
+    seen = []
+    real_replace = os.replace
+
+    def spying_replace(src, dst):
+        # at replace time the temp file is complete and parseable
+        with open(src) as f:
+            json.load(f)
+        seen.append(os.path.basename(dst))
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "replace", spying_replace)
+    cache = str(tmp_path / "cells")
+    (Study("atomic").designs(preset_grid(array=[16]))
+     .workloads({"wa": OPS_A[:1]}).fidelity("fast").cache(cache).run())
+    assert len(seen) == 1 and seen[0].endswith(".json")
+
+
 def test_distinct_evaluators_never_share_cache(tmp_path):
     cache = str(tmp_path / "cells")
 
