@@ -5,7 +5,7 @@ from __future__ import annotations
 from repro.api import Simulator
 from repro.core.accelerator import DramConfig
 from repro.core.dram import linear_trace, simulate_dram, tile_prefetch_trace
-from repro.core.topology import resnet18_six_layers
+from repro.core.workloads import resnet18_six_layers
 from .common import timed
 
 

@@ -4,7 +4,7 @@ through the unified `Simulator` facade."""
 from __future__ import annotations
 
 from repro.api import Simulator
-from repro.core.topology import rcnn, resnet50, vit_base_linear
+from repro.core.workloads import rcnn, resnet50, vit_base_linear
 from .common import timed
 
 

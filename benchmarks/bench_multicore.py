@@ -5,7 +5,7 @@ from __future__ import annotations
 from repro.api import Simulator
 from repro.core.accelerator import AcceleratorConfig, CoreConfig
 from repro.core.multicore import simulate_multicore
-from repro.core.topology import vit_base_linear
+from repro.core.workloads import vit_base_linear
 from .common import timed
 
 

@@ -18,7 +18,7 @@ import os
 
 from repro.api import Simulator, preset_grid
 from repro.core.accelerator import LayoutConfig, SparsityConfig
-from repro.core.topology import Op, resnet18
+from repro.core.workloads import Op, resnet18
 from .common import timed
 
 ARTIFACT = os.environ.get("BENCH_ARTIFACT", "BENCH_sim_throughput.json")
@@ -120,6 +120,21 @@ def run(smoke: bool = False):
                  f"cells_per_sec={cps:.0f}"))
     artifact["study_cells"] = len(sres)
     artifact["study_cells_per_sec"] = cps
+
+    # pod-scale routed NoC sweep (ISSUE 7): 1024-core mesh pods crossing
+    # link bandwidth x DRAM channels through one batched kernel (the
+    # topology is the static flavor; link params are traced columns).
+    # CI gates noc_sweep_designs_per_sec.
+    ngrid = preset_grid("pod-mesh", pods=[1024],
+                        link_bw=[4.0, 32.0, 256.0], channels=[2, 8])
+    nres, us_noc = timed(lambda: base.sweep(ngrid, op), repeat=3)
+    assert nres.batched, "pod NoC sweep cells must batch"
+    ndps = len(ngrid) / (us_noc / 1e6)
+    rows.append((f"noc_sweep_{len(ngrid)}_pods_1024c", us_noc,
+                 f"designs_per_sec={ndps:.0f}"))
+    artifact["noc_sweep_designs"] = len(ngrid)
+    artifact["noc_sweep_cores"] = 1024
+    artifact["noc_sweep_designs_per_sec"] = ndps
 
     # run-farm (ISSUE 6): the same 16-cell study pushed through a broker
     # and 2 workers (in-process, driven synchronously, dedup cache off so

@@ -5,7 +5,7 @@ from __future__ import annotations
 from repro.api import Simulator
 from repro.core.accelerator import SparsityConfig
 from repro.core.sparsity import storage_report
-from repro.core.topology import resnet18, vit_ffn_only
+from repro.core.workloads import resnet18, vit_ffn_only
 from .common import timed
 
 

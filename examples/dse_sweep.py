@@ -9,7 +9,7 @@ import argparse
 
 from repro.api import Study, preset_grid
 from repro.configs import get_config
-from repro.core.topology import lm_ops, total_macs
+from repro.core.workloads import lm_ops, total_macs
 
 
 def main():

@@ -5,7 +5,7 @@ through the unified `Simulator` facade (see DESIGN.md).
 """
 from repro.api import Simulator
 from repro.core.accelerator import SparsityConfig
-from repro.core.topology import Op
+from repro.core.workloads import Op
 
 
 def main():

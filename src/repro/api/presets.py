@@ -11,7 +11,7 @@ import itertools
 from typing import Callable, Dict, List, Optional, Union
 
 from ..core.accelerator import (AcceleratorConfig, CoreConfig, MemoryConfig,
-                                SparsityConfig, near_square_grid,
+                                NocConfig, SparsityConfig, near_square_grid,
                                 tpu_like_config)
 
 _PRESETS: Dict[str, Callable[..., AcceleratorConfig]] = {}
@@ -79,13 +79,27 @@ def with_cores(cfg: AcceleratorConfig, cores: int) -> AcceleratorConfig:
     return cfg.with_(cores=(cfg.cores[0],), mesh_rows=pr, mesh_cols=pc)
 
 
+def with_pod(cfg: AcceleratorConfig, cores: int,
+             topology: str = "mesh") -> AcceleratorConfig:
+    """Re-mesh a config onto a `cores`-core pod with the routed NoC plane
+    enabled (`repro.noc`) — the `pods=` axis of `preset_grid`. Keeps the
+    config's NoC link parameters if the plane is already enabled, else
+    enables it with defaults on `topology`."""
+    import dataclasses
+    noc = (dataclasses.replace(cfg.noc, topology=topology)
+           if cfg.noc.enabled
+           else NocConfig(enabled=True, topology=topology))
+    return with_cores(cfg, cores).with_(noc=noc)
+
+
 def preset_grid(name: str = "tpu-like", *, preset=None, dataflow=None,
-                sparsity=None, cores=None, **axes) -> List[AcceleratorConfig]:
+                sparsity=None, cores=None, pods=None,
+                **axes) -> List[AcceleratorConfig]:
     """Cartesian product of preset kwargs -> list of configs for
     `Study.designs` / `Simulator.sweep`, e.g.
     `preset_grid(array=[8, 16], sram_mb=[1, 8])`.
 
-    Four first-class axes beyond factory kwargs, so study grids span
+    Five first-class axes beyond factory kwargs, so study grids span
     presets, core counts, sparsity regimes and dataflows without manual
     list building:
 
@@ -93,27 +107,36 @@ def preset_grid(name: str = "tpu-like", *, preset=None, dataflow=None,
       the single `name`;
     - `cores=[...]` re-meshes the built config onto each core count via
       `with_cores` (near-square grid of the prototype core);
+    - `pods=[...]` re-meshes onto each core count like `cores` but with
+      the routed NoC plane enabled (`with_pod`; mesh by default) —
+      pod-scale interconnect sweeps (256/1024/4096 cores);
     - `sparsity=[...]` applies each `as_sparsity` value ('dense',
       '2:4', '1:4-rw', (n, m) tuples, SparsityConfig) via `with_`;
     - `dataflow=[...]` (innermost axis) is applied to the built config
       via `with_(dataflow=...)`, so it works for every preset whether or
       not its factory takes a dataflow kwarg.
 
-    Every cell of the resulting grid — sparse, multi-core or layout-
-    enabled alike — runs through the batched sweep kernels
+    Every cell of the resulting grid — sparse, multi-core, layout- or
+    NoC-enabled alike — runs through the batched sweep kernels
     (`fraction_batched == 1.0`; see tests/test_sweep_parity.py).
     """
+    if cores is not None and pods is not None:
+        raise ValueError("pass either cores= or pods=, not both")
     presets = list(preset) if preset is not None else [name]
     dataflows = list(dataflow) if dataflow is not None else [None]
     sparsities = list(sparsity) if sparsity is not None else [None]
     core_counts = list(cores) if cores is not None else [None]
+    remesh = with_cores
+    if pods is not None:
+        core_counts = list(pods)
+        remesh = with_pod
     keys = list(axes)
     out = []
     for pname in presets:
         for combo in itertools.product(*(axes[k] for k in keys)):
             cfg0 = get_preset(pname, **dict(zip(keys, combo)))
             for nc in core_counts:
-                cfg1 = cfg0 if nc is None else with_cores(cfg0, nc)
+                cfg1 = cfg0 if nc is None else remesh(cfg0, nc)
                 for sp in sparsities:
                     cfg2 = (cfg1 if sp is None
                             else cfg1.with_(sparsity=as_sparsity(sp)))
@@ -167,6 +190,25 @@ def _mcm(channels: int = 4, dataflow: str = "ws") -> AcceleratorConfig:
         mesh_rows=2, mesh_cols=2, dataflow=dataflow,
         memory=MemoryConfig(ifmap_sram_bytes=sram, filter_sram_bytes=sram,
                             ofmap_sram_bytes=sram),
+        dram=DramConfig(channels=channels))
+
+
+@register_preset("pod-mesh")
+def _pod_mesh(cores: int = 256, topology: str = "mesh", array: int = 32,
+              link_bw: float = 32.0, flit_bytes: int = 32,
+              buffer_flits: int = 8, channels: int = 8,
+              dataflow: str = "ws") -> AcceleratorConfig:
+    """Pod-scale package (256/1024/4096 cores) with the routed NoC plane
+    enabled: `array`x`array` cores on a near-square `topology` grid, all
+    DRAM traffic routed over flit/credit links to the memory controller
+    at core (0, 0). `link_bw` is bytes/cycle per link; sweep it (and
+    `channels`) to locate the NoP-bound regime (studies.nop_bound)."""
+    from ..core.accelerator import DramConfig
+    cfg = tpu_like_config(array=array, cores=cores, dataflow=dataflow)
+    return cfg.with_(
+        noc=NocConfig(enabled=True, topology=topology,
+                      link_bandwidth_bytes_per_cycle=link_bw,
+                      flit_bytes=flit_bytes, buffer_flits=buffer_flits),
         dram=DramConfig(channels=channels))
 
 

@@ -28,7 +28,7 @@ from ..core.accelerator import (AcceleratorConfig, DramConfig, MemoryConfig,
 from ..core.energy import DEFAULT_ERT, ERT, energy_pj
 from ..core.engine import (_ENERGY_GROUPS, NetworkReport, OpResult,
                            simulate_network, simulate_op)
-from ..core.topology import PAPER_WORKLOADS, Op
+from ..core.workloads import PAPER_WORKLOADS, Op
 from .presets import get_preset
 
 ConfigLike = Union[AcceleratorConfig, dict, str]
@@ -170,7 +170,7 @@ class Simulator:
         """Model one step of an LM architecture (repro.configs ModelConfig)
         on this accelerator — the co-simulation entrypoint shared by the
         train/serve/dryrun drivers and examples."""
-        from ..core.topology import lm_ops
+        from ..core.workloads import lm_ops
         return self.run(lm_ops(model_cfg, seq=seq, batch=batch, mode=mode,
                                cache_len=cache_len))
 
@@ -252,7 +252,8 @@ def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT,
                        mesh_shape: tuple = (1, 1),
                        layout=None, r_cap: int = 0,
                        representation: str = "ellpack_block",
-                       with_sparsity: bool = False):
+                       with_sparsity: bool = False,
+                       noc: Optional[str] = None):
     """Jitted (vmap over designs) sweep kernel, cached module-wide (see
     `_SWEEP_FN_CACHE`) so repeated sweeps — benchmark loops, serving
     traffic, new Simulator sessions — reuse the compiled executable.
@@ -282,7 +283,7 @@ def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT,
     from ..core import replay as _rp
     engine = _rp.resolve_engine(engine)
     key = (dataflow, word_bytes, ert, dram, spec, engine, mesh_shape,
-           layout, r_cap, representation, with_sparsity)
+           layout, r_cap, representation, with_sparsity, noc)
     cached = _SWEEP_FN_CACHE.get(key)
     if cached is not None:
         return cached
@@ -402,16 +403,44 @@ def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT,
         groups = {g: sum(jnp.sum(e[a]) + jnp.sum(ve[a]) for a in acts)
                   for g, acts in _ENERGY_GROUPS.items()}
 
+        # routed-NoP plane (repro.noc): flit/credit contention on each
+        # op's memory traffic toward the MC at core 0. `noc` (the
+        # topology kind) is a static flavor fixing the routing tree; the
+        # link parameters are traced design columns. Sparse ops gate to
+        # zero like the partition stage (single-core compressed stream).
+        noc_cols = {}
+        noc_stall_sum = 0.0
+        if noc is not None and num_cores > 1:
+            from ..noc.router import noc_delay_model
+            from ..noc.traffic import allreduce_cycles, memory_flits
+            gate = ((1.0 - jnp.maximum(d["sp_en"], ov)) if with_sparsity
+                    else jnp.ones_like(M))
+            flits = (memory_flits(s["dram_bytes"], num_cores,
+                                  d["noc_flit"])[..., None]
+                     * jnp.ones(num_cores, jnp.float32))   # (ops, cores)
+            ns = noc_delay_model(noc, Pr, Pc, flits, d["noc_bw"],
+                                 d["noc_flit"], d["noc_buf"], d["nop"],
+                                 s["compute_cycles"])
+            ar = allreduce_cycles(noc, Pr, Pc, M * N * word_bytes,
+                                  d["noc_bw"], d["noc_flit"], d["noc_buf"],
+                                  d["nop"])
+            noc_stall_sum = jnp.sum(ns["stall"] * gate * cnt)
+            noc_cols = dict(
+                noc_stall_cycles=noc_stall_sum,
+                noc_link_util=jnp.max(ns["link_util"] * gate),
+                allreduce_cycles=jnp.sum(ar * gate * cnt))
+
         comp = jnp.sum(comp_t) + jnp.sum(vcyc)
         stall = jnp.sum(stall_t)
         lay_sum = jnp.sum(lay_t)
         dram_b = jnp.sum(dram_t) + jnp.sum(vdram)
-        total = comp + stall + lay_sum
+        total = comp + stall + lay_sum + noc_stall_sum
         util = jnp.minimum(1.0, jnp.sum(macs)
                            / jnp.maximum(1.0, pes * total))
         return dict(total_cycles=total, compute_cycles=comp,
                     stall_cycles=stall, dram_bytes=dram_b,
-                    energy_pj=energy, utilization=util, **groups)
+                    energy_pj=energy, utilization=util, **groups,
+                    **noc_cols)
 
     def fn(design, sdesign, smap, M, N, K, cnt, ov, on, om, velems, vcnt):
         if dram is not None:
@@ -536,12 +565,31 @@ def _sweep_batched(cfgs: Sequence[AcceleratorConfig], ops: Sequence[Op],
         cols["sp_m"] = [c.sparsity.m for c in cfgs]
         cols["sp_rw"] = [1.0 if c.sparsity.row_wise else 0.0 for c in cfgs]
         stream_keys += ["sp_en", "sp_n", "sp_m", "sp_rw"]
+    # routed-NoC flavor: the Study plan key groups by (enabled, topology),
+    # so a group is uniform; validate against direct callers anyway
+    noc_kind = (cfgs[0].noc.topology
+                if cfgs[0].noc.enabled and num_cores > 1 else None)
+    if any((c.noc.enabled and num_cores > 1, c.noc.topology if c.noc.enabled
+            else None) != (noc_kind is not None, noc_kind) for c in cfgs):
+        raise ValueError("sweep group mixes NoC topologies/enablement")
     if num_cores > 1:
         cols["mc_R"] = [[k.rows for k in c.cores] for c in cfgs]
         cols["mc_C"] = [[k.cols for k in c.cores] for c in cfgs]
-        cols["mc_hops"] = [[k.nop_hops for k in c.cores] for c in cfgs]
+        if noc_kind is not None:
+            # per-core hop columns become routed latencies: dimension-
+            # ordered hops to the MC at (0,0) replace the config offsets
+            from ..noc.topology import routed_hop_counts
+            routed = [float(h) for h in
+                      routed_hop_counts(noc_kind, Pr, Pc)]
+            cols["mc_hops"] = [list(routed) for _ in cfgs]
+        else:
+            cols["mc_hops"] = [[k.nop_hops for k in c.cores] for c in cfgs]
         cols["nop"] = [c.nop_cycles_per_hop for c in cfgs]
         stream_keys += ["mc_R", "mc_C", "mc_hops", "nop"]
+    if noc_kind is not None:
+        cols["noc_bw"] = [c.noc.link_bandwidth_bytes_per_cycle for c in cfgs]
+        cols["noc_flit"] = [c.noc.flit_bytes for c in cfgs]
+        cols["noc_buf"] = [c.noc.buffer_flits for c in cfgs]
     sdesign = smap_arr = None
     if dram is not None:
         sdesign = {k: jnp.asarray([cols[k][i] for i in sidx], f32)
@@ -564,7 +612,7 @@ def _sweep_batched(cfgs: Sequence[AcceleratorConfig], ops: Sequence[Op],
                             engine=engine, mesh_shape=(Pr, Pc),
                             layout=layout_key, r_cap=r_cap,
                             representation=representation,
-                            with_sparsity=with_sparsity)
+                            with_sparsity=with_sparsity, noc=noc_kind)
     res = fn(design, sdesign, smap_arr, M, N, K, cnt, ov, on, om,
              velems, vcnt)
     return {k: np.asarray(v, np.float64)[:n] for k, v in res.items()}

@@ -2,8 +2,8 @@
 # vectorizable cycle-accurate simulator. See DESIGN.md for the mapping.
 # The stage-pipeline facade over this layer lives in `repro.api`.
 from .accelerator import (AcceleratorConfig, CoreConfig, DramConfig,
-                          LayoutConfig, MemoryConfig, SparsityConfig,
-                          tpu_like_config)
+                          LayoutConfig, MemoryConfig, NocConfig,
+                          SparsityConfig, tpu_like_config)
 from .dataflow import (compute_cycles, dram_traffic, gemm_summary, map_gemm,
                        pe_utilization, sram_traffic, unmap_gemm)
 from .dram import (DramResult, decode_requests, linear_trace,
@@ -24,4 +24,4 @@ from .partition import (best_plan, enumerate_plans, partition_cycles,
                         partition_footprint)
 from .sparsity import (effective_K, pack_ellpack_block, sparse_compute_cycles,
                        storage_report)
-from .topology import PAPER_WORKLOADS, Op, lm_ops, total_macs
+from .workloads import PAPER_WORKLOADS, Op, lm_ops, total_macs

@@ -26,6 +26,16 @@ class CoreConfig:
     simd_latency: float = 1.0       # cycles per vector op per lane-batch
     nop_hops: int = 0               # NoP hops to main memory (Sec. III-D)
 
+    def __post_init__(self):
+        if self.rows < 1 or self.cols < 1:
+            raise ValueError(
+                f"array shape must be >= 1x1, got {self.rows}x{self.cols}")
+        if self.nop_hops < 0:
+            # a negative hop count silently *reduced* multicore cycles in the
+            # theta-equalization split; fail loudly like the int32 address
+            # guard in trace/contention.py
+            raise ValueError(f"nop_hops must be >= 0, got {self.nop_hops}")
+
     @property
     def num_pes(self) -> int:
         return self.rows * self.cols
@@ -98,6 +108,43 @@ class LayoutConfig:
     w1_step: int = 4
 
 
+NOC_TOPOLOGIES = ("mesh", "torus", "ring")
+
+
+@dataclasses.dataclass(frozen=True)
+class NocConfig:
+    """Routed NoC/NoP interconnect section (repro.noc).
+
+    When enabled, per-core `nop_hops` are *derived* from dimension-ordered
+    routes to the memory controller at core (0, 0) instead of taken from the
+    config, and a flit/credit link model adds contention stalls on top of the
+    zero-load `hops * nop_cycles_per_hop` latency.  `topology` is a static
+    kernel flavor (it fixes the routing tree); the link parameters are traced
+    data, so a sweep over link bandwidth / buffer depth stays one kernel.
+    """
+    enabled: bool = False
+    topology: str = "mesh"                     # mesh | torus | ring
+    link_bandwidth_bytes_per_cycle: float = 32.0
+    flit_bytes: int = 32
+    buffer_flits: int = 8                      # credit depth per link buffer
+
+    def __post_init__(self):
+        if self.topology not in NOC_TOPOLOGIES:
+            raise ValueError(
+                f"noc topology must be one of {NOC_TOPOLOGIES}, "
+                f"got {self.topology!r}")
+        if self.enabled:
+            if self.link_bandwidth_bytes_per_cycle <= 0:
+                raise ValueError(
+                    "link_bandwidth_bytes_per_cycle must be > 0, got "
+                    f"{self.link_bandwidth_bytes_per_cycle}")
+            if self.flit_bytes < 1:
+                raise ValueError(f"flit_bytes must be >= 1, got {self.flit_bytes}")
+            if self.buffer_flits < 1:
+                raise ValueError(
+                    f"buffer_flits must be >= 1, got {self.buffer_flits}")
+
+
 @dataclasses.dataclass(frozen=True)
 class AcceleratorConfig:
     """Top-level config = cores + memories + dram + sparsity + layout."""
@@ -109,12 +156,16 @@ class AcceleratorConfig:
     dram: DramConfig = DramConfig()
     sparsity: SparsityConfig = SparsityConfig()
     layout: LayoutConfig = LayoutConfig()
+    noc: NocConfig = NocConfig()
     clock_ghz: float = 1.0
     nop_cycles_per_hop: float = 2.0      # NoP latency per hop per tile transfer
 
     def __post_init__(self):
         if self.dataflow not in DATAFLOWS:
             raise ValueError(f"dataflow must be one of {DATAFLOWS}")
+        if self.nop_cycles_per_hop < 0:
+            raise ValueError(
+                f"nop_cycles_per_hop must be >= 0, got {self.nop_cycles_per_hop}")
         n = self.mesh_rows * self.mesh_cols
         if len(self.cores) == 1 and n > 1:
             # homogeneous grid: replicate the single prototype core
@@ -147,7 +198,8 @@ class AcceleratorConfig:
         missing sections fall back to defaults, unknown keys are an error)."""
         d = dict(d)
         sections = dict(memory=MemoryConfig, dram=DramConfig,
-                        sparsity=SparsityConfig, layout=LayoutConfig)
+                        sparsity=SparsityConfig, layout=LayoutConfig,
+                        noc=NocConfig)
         kw: dict = {}
         cores = d.pop("cores", None)
         if cores is not None:

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from .accelerator import AcceleratorConfig
 from . import stages as st
 from .energy import DEFAULT_ERT, ERT, edp, power_w
-from .topology import Op
+from .workloads import Op
 
 # Version stamp shared by every serialized result (NetworkReport.to_json,
 # repro.api.study.StudyResult.to_json, the study on-disk cache). Bump when
@@ -89,6 +89,8 @@ class OpResult:
     dram_stats: Optional[Dict[str, float]] = None
     sparse_storage: Optional[Dict[str, float]] = None
     energy_by_action: Optional[Dict[str, float]] = None
+    noc_stall_cycles: float = 0.0       # routed-NoP queueing (repro.noc)
+    noc_stats: Optional[Dict[str, float]] = None
 
     def energy_group(self, group: str) -> float:
         return energy_group_totals(self.energy_by_action)[group]
@@ -107,6 +109,7 @@ class NetworkReport:
     avg_power_w: float
     edp: float
     utilization: float
+    noc_stall_cycles: float = 0.0
 
     def to_json(self) -> str:
         d = dataclasses.asdict(self)
@@ -132,7 +135,8 @@ def _result_from_ctx(ctx: st.OpContext, kind: str) -> OpResult:
         ctx.total, ctx.util, op.macs if kind == "gemm" else 0.0,
         ctx.sram_reads, ctx.sram_writes, ctx.dram_bytes_total,
         ctx.energy_total, ctx.scheme, ctx.dram_stats, ctx.sparse_info,
-        ctx.energy_by_action)
+        ctx.energy_by_action, noc_stall_cycles=ctx.noc_total,
+        noc_stats=ctx.noc_stats)
 
 
 def simulate_op(cfg: AcceleratorConfig, op: Op, *,
@@ -180,7 +184,8 @@ def simulate_network(cfg: AcceleratorConfig, ops: Sequence[Op], *,
         energy_pj=e_total, energy_breakdown=breakdown,
         avg_power_w=power_w(e_total, total, cfg.clock_ghz),
         edp=edp(e_total, total),
-        utilization=min(1.0, macs / max(1.0, pes * total)))
+        utilization=min(1.0, macs / max(1.0, pes * total)),
+        noc_stall_cycles=sum(r.noc_stall_cycles for r in results))
 
 
 # --------------------------------------------------------------------------

@@ -123,25 +123,38 @@ def multicore_model(dataflow: str, scheme: str, M, N, K, rows, cols, hops,
     groups = grid if scheme in ("spatial", "st1") else grid.T  # rows = groups
     total = Sr if scheme in ("spatial", "st1") else Sc
 
-    rates, offsets = [], []
-    for g in range(groups.shape[0]):
-        i = int(groups[g][0])
-        rates.append(f32(1.0) * _scheme_rate(scheme, rows[..., i],
-                                             cols[..., i], Sr, Sc, T, Pr, Pc))
-        offsets.append(f32(1.0) * hops[..., i] * nop_cycles_per_hop)
-    a = jnp.stack(jnp.broadcast_arrays(*rates), axis=0)
-    b = jnp.stack([jnp.broadcast_to(o, a.shape[1:]) for o in offsets], axis=0)
-    shares = split_shares_model(total, a, b)          # (groups, ...)
+    # static index maps over the core axis (no per-core Python loop: the
+    # traced graph stays O(1) in core count, which is what lets 1024-4096
+    # core pods trace in one kernel)
+    g_first = groups[:, 0]                                # (G,) first core/group
+    core_group = np.empty(Pr * Pc, dtype=np.int64)        # core -> its group
+    core_group[groups.ravel()] = np.repeat(np.arange(groups.shape[0]),
+                                           groups.shape[1])
 
-    per_core = [None] * (Pr * Pc)
-    for g in range(groups.shape[0]):
-        s = shares[g]
-        for idx in groups[g]:
-            i = int(idx)
-            cyc = _scheme_cycles(scheme, rows[..., i], cols[..., i], s,
-                                 Sr, Sc, T, Pr, Pc)
-            per_core[i] = cyc + hops[..., i] * nop_cycles_per_hop
-    per_core = jnp.stack(jnp.broadcast_arrays(*per_core), axis=0)
+    # common batch shape of the per-core geometry's leading dims and the
+    # GEMM/nop operands; per-core arrays become (cores, *batch) so the
+    # core axis broadcasts cleanly against op/design axes
+    nop = f32(1.0) * nop_cycles_per_hop
+    batch = jnp.broadcast_shapes(jnp.shape(rows)[:-1], jnp.shape(Sr),
+                                 jnp.shape(Sc), jnp.shape(T),
+                                 jnp.shape(nop))
+
+    def lead(x, k):                       # (..., k) -> (k, *batch)
+        return jnp.moveaxis(jnp.broadcast_to(x, batch + (k,)), -1, 0)
+
+    G = groups.shape[0]
+    a = f32(1.0) * _scheme_rate(
+        scheme, lead(rows[..., g_first], G), lead(cols[..., g_first], G),
+        Sr, Sc, T, Pr, Pc)
+    b = f32(1.0) * lead(hops[..., g_first], G) * nop
+    a, b = jnp.broadcast_arrays(a, b)
+    shares = split_shares_model(total, a, b)          # (groups, *batch)
+
+    cyc = _scheme_cycles(scheme, lead(rows, Pr * Pc), lead(cols, Pr * Pc),
+                         shares[core_group], Sr, Sc, T, Pr, Pc)
+    per_core = cyc + lead(hops, Pr * Pc) * nop
+    per_core = jnp.broadcast_to(
+        per_core, (Pr * Pc,) + jnp.shape(per_core)[1:])
     return jnp.max(per_core, axis=0), per_core, shares
 
 
@@ -168,6 +181,17 @@ def best_multicore_cycles_model(dataflow: str, M, N, K, rows, cols, hops,
     return best_c
 
 
+def effective_nop_hops(cfg: AcceleratorConfig) -> np.ndarray:
+    """Per-core NoP hops to main memory: routed when the NoC plane is
+    enabled (dimension-ordered routes to the MC at core 0, repro.noc),
+    else the per-core `nop_hops` config fields (legacy offsets)."""
+    if cfg.noc.enabled and cfg.num_cores > 1:
+        from ..noc.topology import routed_hop_counts
+        return np.asarray(routed_hop_counts(
+            cfg.noc.topology, cfg.mesh_rows, cfg.mesh_cols), dtype=np.float64)
+    return np.asarray([c.nop_hops for c in cfg.cores], dtype=np.float64)
+
+
 def simulate_multicore(cfg: AcceleratorConfig, M: int, N: int, K: int,
                        scheme: str = "spatial") -> MultiCoreResult:
     """Partition one GEMM over the core grid and return the makespan."""
@@ -181,7 +205,7 @@ def simulate_multicore(cfg: AcceleratorConfig, M: int, N: int, K: int,
     f32 = jnp.float32
     rows = jnp.asarray([c.rows for c in cores], f32)
     cols = jnp.asarray([c.cols for c in cores], f32)
-    hops = jnp.asarray([c.nop_hops for c in cores], f32)
+    hops = jnp.asarray(effective_nop_hops(cfg), f32)
     _, per_core, shares = multicore_model(
         df, scheme, M, N, K, rows, cols, hops, cfg.nop_cycles_per_hop,
         Pr, Pc)

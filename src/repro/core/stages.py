@@ -34,7 +34,7 @@ from .layout import streaming_layout_extra
 from .multicore import best_multicore, best_multicore_cycles_model
 from .sparsity import (sparse_compute_cycles, sparse_compute_cycles_model,
                        storage_bytes_model, storage_report)
-from .topology import Op
+from .workloads import Op
 
 FIDELITIES = ("fast", "cycle", "trace")
 
@@ -66,9 +66,12 @@ class OpContext:
     stall: float = 0.0
     dram_stats: Optional[Dict[str, float]] = None
     layout_extra: float = 0.0
+    noc_extra: float = 0.0            # per instance (repro.noc NocStage)
+    noc_stats: Optional[Dict[str, float]] = None
     # finalized totals (x op.count)
     compute_total: float = 0.0
     stall_total: float = 0.0
+    noc_total: float = 0.0
     layout_total: float = 0.0
     total: float = 0.0
     sram_reads: float = 0.0
@@ -294,8 +297,10 @@ class EnergyStage(Stage):
         op, cfg = ctx.op, ctx.cfg
         ctx.compute_total = ctx.comp * op.count
         ctx.stall_total = ctx.stall * op.count
+        ctx.noc_total = ctx.noc_extra * op.count
         ctx.layout_total = ctx.layout_extra * op.count
-        ctx.total = ctx.compute_total + ctx.stall_total + ctx.layout_total
+        ctx.total = (ctx.compute_total + ctx.stall_total + ctx.noc_total
+                     + ctx.layout_total)
         sram = ctx.sram
         ctx.sram_reads = float(sram["ifmap_reads"] + sram["filter_reads"]
                                + sram["ofmap_reads"]) * op.count
@@ -337,9 +342,11 @@ def build_pipeline(fidelity: str = "fast", *, core_index: int = 0,
         dram = TraceDramStage(core_index, trace_spec, engine)
     else:
         dram = FastDramStage(core_index)
+    from ..noc.stage import NocStage    # lazy: noc depends on core.stages
     return (MappingStage(core_index), PartitionStage(),
-            SparsityStage(core_index), SramStage(core_index), dram,
-            LayoutStage(core_index), EnergyStage())
+            SparsityStage(core_index), SramStage(core_index),
+            NocStage(core_index), dram, LayoutStage(core_index),
+            EnergyStage())
 
 
 def resolve_sparsity(cfg: AcceleratorConfig, op: Op) -> SparsityConfig:

@@ -1,0 +1,189 @@
+"""Flit/credit-level link contention model over the static routing tree.
+
+Same shape as `core/replay.py`: an *order-only precompute* (the static
+(core, ancestor-link) route pairs from topology.py) turns the contention
+fixed point into closed-form scatter reductions, so the whole model is
+jit+vmap traceable with no data-dependent control flow.
+
+Model, per design and per op:
+
+  load[l]   = sum of flits injected by cores whose route crosses link l
+              (one scatter-add over the route pairs; flit conservation
+              load[l] = flits[l] + sum_children load[c] holds by
+              construction and is asserted in tests/test_noc.py)
+  s         = per-flit service interval = max(flit_bytes / link_bw,
+              2 * hop_cycles / buffer_flits) -- a link is either
+              bandwidth-limited or credit-round-trip-limited: with B
+              credits in flight over a 2*hop_cycles loop, a flit cannot
+              be accepted faster than every 2*hop/B cycles
+  busy[l]   = load[l] * s            (link serialization time)
+  route[u]  = max busy over links on u's route       (bottleneck closure)
+  tree[u]   = max busy over the whole subtree hanging off u's route
+              (full head-of-line coupling when buffers cannot decouple
+              neighbors).  Both closures are the fixed point of the
+              monotone relaxation C <- max(busy, max_child C); on a tree
+              it has a closed form as one scatter-max over the same
+              static pairs -- the replay.py prefix-closure trick.
+  eff[u]    = route[u] + kappa * relu(tree[u] - route[u]),
+              kappa = s_credit / s in (0, 1]: deep buffers (s dominated
+              by bandwidth) decouple neighbors, shallow buffers couple
+              the whole subtree.
+  extra[u]  = relu(eff[u] - window)  -- queueing delay past the
+              injection window (the op's compute makespan).  At zero
+              load this is *exactly* 0.0, which is what makes the routed
+              model reproduce the legacy hop-offset cycles bit-for-bit.
+
+`windowed_link_sim` is a plain-numpy per-window flit/credit simulation
+(bounded buffers, credit back-pressure, one hop per window) used by the
+invariant tests; `eager_noc_delay` is the numpy twin of the traced model
+and backs the `force_fallback` differential oracle.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from .topology import link_fanin, parent_links, route_pairs
+
+
+def service_interval(link_bw, flit_bytes, buffer_flits, hop_cycles, xp=jnp):
+    """Per-flit acceptance interval: bandwidth- or credit-limited."""
+    s_bw = flit_bytes / link_bw
+    s_credit = 2.0 * hop_cycles / buffer_flits
+    return xp.maximum(s_bw, s_credit), s_credit
+
+
+def link_loads(topology: str, pr: int, pc: int, flits, xp=jnp):
+    """Flits crossing each link (scatter-add over the static route pairs).
+
+    `flits` has shape (..., n_cores); returns (..., n_links) with
+    n_links == n_cores (link l = core l's outgoing link; load[0] == 0).
+    """
+    pair_core, pair_link = route_pairs(topology, pr, pc)
+    n = pr * pc
+    if xp is jnp:
+        zeros = jnp.zeros(flits.shape[:-1] + (n,), flits.dtype)
+        return zeros.at[..., pair_link].add(flits[..., pair_core])
+    load = np.zeros(flits.shape[:-1] + (n,), dtype=np.float64)
+    np.add.at(load, (..., pair_link), np.asarray(flits)[..., pair_core])
+    return load
+
+
+def noc_delay_model(topology: str, pr: int, pc: int, flits, link_bw,
+                    flit_bytes, buffer_flits, hop_cycles, window
+                    ) -> Dict[str, jnp.ndarray]:
+    """Traced contention closure. flits: (..., n); scalars broadcast (...,).
+
+    Returns per-core `extra` (..., n), design-level `stall` = max extra,
+    `max_busy` (busiest-link serialization time) and `link_util`
+    (demand utilization max_busy / window; > 1 means the NoP is the
+    binding constraint).
+    """
+    pair_core, pair_link = route_pairs(topology, pr, pc)
+    n = pr * pc
+    flits = jnp.asarray(flits, jnp.float32)
+    window = jnp.asarray(window, jnp.float32)
+    s, s_credit = service_interval(
+        jnp.asarray(link_bw, jnp.float32), jnp.asarray(flit_bytes, jnp.float32),
+        jnp.asarray(buffer_flits, jnp.float32),
+        jnp.asarray(hop_cycles, jnp.float32))
+    busy = link_loads(topology, pr, pc, flits) * s[..., None]
+    zeros = jnp.zeros_like(busy)
+    # bottleneck closure: busiest link on each core's own route
+    route = zeros.at[..., pair_core].max(busy[..., pair_link])
+    # subtree closure: busiest link anywhere under each route link, then
+    # max over the route -- full head-of-line coupling
+    sub = zeros.at[..., pair_link].max(busy[..., pair_core])
+    tree = zeros.at[..., pair_core].max(sub[..., pair_link])
+    kappa = (s_credit / s)[..., None]
+    eff = route + kappa * jnp.maximum(tree - route, 0.0)
+    extra = jnp.maximum(eff - window[..., None], 0.0)
+    max_busy = jnp.max(busy, axis=-1)
+    return dict(
+        extra=extra,
+        stall=jnp.max(extra, axis=-1),
+        max_busy=max_busy,
+        link_util=max_busy / jnp.maximum(window, 1.0),
+    )
+
+
+def eager_noc_delay(topology: str, pr: int, pc: int, flits, link_bw,
+                    flit_bytes, buffer_flits, hop_cycles, window
+                    ) -> Dict[str, np.ndarray]:
+    """Pure-numpy float64 twin of `noc_delay_model` (differential oracle)."""
+    pair_core, pair_link = route_pairs(topology, pr, pc)
+    n = pr * pc
+    flits = np.asarray(flits, dtype=np.float64)
+    s_bw = float(flit_bytes) / float(link_bw)
+    s_credit = 2.0 * float(hop_cycles) / float(buffer_flits)
+    s = max(s_bw, s_credit)
+    busy = link_loads(topology, pr, pc, flits, xp=np) * s
+    route = np.zeros_like(busy)
+    np.maximum.at(route, (..., pair_core), busy[..., pair_link])
+    sub = np.zeros_like(busy)
+    np.maximum.at(sub, (..., pair_link), busy[..., pair_core])
+    tree = np.zeros_like(busy)
+    np.maximum.at(tree, (..., pair_core), sub[..., pair_link])
+    kappa = s_credit / s
+    eff = route + kappa * np.maximum(tree - route, 0.0)
+    extra = np.maximum(eff - np.asarray(window, np.float64)[..., None], 0.0)
+    max_busy = busy.max(axis=-1)
+    return dict(
+        extra=extra,
+        stall=extra.max(axis=-1),
+        max_busy=max_busy,
+        link_util=max_busy / np.maximum(np.asarray(window, np.float64), 1.0),
+    )
+
+
+def windowed_link_sim(topology: str, pr: int, pc: int, flits, *,
+                      cap_per_window: float, buffer_flits: int,
+                      windows: int) -> Dict[str, np.ndarray]:
+    """Reference per-window flit/credit simulation (numpy, test-only).
+
+    Every link has a `buffer_flits`-deep input buffer at its parent
+    router; a link may forward at most `cap_per_window` flits per window
+    and only into remaining parent credits (children share the parent's
+    free space by its static fan-in, so occupancy can never exceed the
+    buffer -- the credit non-negativity invariant).  Source cores inject
+    their whole payload into an unbounded local queue up front; flits
+    advance one hop per window.
+
+    Returns per-window histories for the invariant tests:
+      occupancy (W, n), credits (W, n), sink_served (W,), source_left (W,).
+    """
+    parent = parent_links(topology, pr, pc)
+    fanin = link_fanin(topology, pr, pc)
+    n = pr * pc
+    B = float(buffer_flits)
+    q = np.zeros(n)                       # buffer occupancy per link
+    u = np.asarray(flits, dtype=np.float64).copy()  # source backlog
+    u[0] = 0.0                            # core 0 sits at the MC: free
+    occ, cred, sink, left = [], [], [], []
+    sink_total = 0.0
+    for _ in range(windows):
+        # serve from pre-window state: into parent credits (root -> MC sink
+        # is unbounded), children share parent space by fan-in
+        space = np.maximum(B - q[parent], 0.0) / np.maximum(fanin[parent], 1)
+        space[parent == 0] = np.inf
+        srv = np.minimum(np.minimum(q, cap_per_window), space)
+        srv[0] = 0.0
+        entered = np.zeros(n)
+        np.add.at(entered, parent[1:], srv[1:])
+        entered[0] = 0.0                  # flits reaching core 0 hit the MC
+        sink_total += srv[(parent == 0) & (np.arange(n) > 0)].sum()
+        q = q - srv + entered
+        # source admission into own link's buffer, after children landed
+        adm = np.minimum(u, np.maximum(B - q, 0.0))
+        adm = np.minimum(adm, cap_per_window)
+        adm[0] = 0.0
+        q += adm
+        u -= adm
+        occ.append(q.copy())
+        cred.append(B - q)
+        sink.append(sink_total)
+        left.append(u.sum())
+    return dict(occupancy=np.asarray(occ), credits=np.asarray(cred),
+                sink_served=np.asarray(sink), source_left=np.asarray(left))

@@ -1,0 +1,101 @@
+"""NocStage: the routed-interconnect stage of the eager pipeline, plus the
+per-core arrival-skew feed for the shared-DRAM contention queues.
+
+The stage sits between partition and dram in `core.stages.build_pipeline`:
+the partition's compute makespan defines the injection window, and the
+op's DRAM demand (the same capacity-based traffic the dram stage computes
+right after) defines the payload each core pushes over the NoP toward the
+memory controller.  The stage runs the *eager numpy router*
+(`router.eager_noc_delay`) so `force_fallback=True` studies act as a
+differential oracle against the batched jnp model.
+
+Zero-load contract: when links are fast enough that no queueing occurs,
+the stage contributes exactly 0.0 extra cycles, and the partition layer
+already uses the routed hop counts (`multicore.effective_nop_hops`) — so
+a NoC-enabled design at zero load reproduces the legacy hop-offset
+multicore cycles bit-for-bit.
+
+`allreduce_cycles` / `noc_link_util` are *reported* metrics (for
+studies.nop_bound claims), not folded into total cycles: the hop offsets
+in the partition solve already account for output return latency, and an
+explicit collective is workload-dependent.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..core import dataflow as dfm
+from ..core.accelerator import AcceleratorConfig
+from ..core.multicore import effective_nop_hops
+from ..core.stages import CoreStage, OpContext
+from .router import eager_noc_delay
+from .traffic import allreduce_cycles, memory_flits
+
+
+def _noc_active(cfg: AcceleratorConfig) -> bool:
+    return cfg.noc.enabled and cfg.num_cores > 1
+
+
+class NocStage(CoreStage):
+    """Routed NoP contention on the op's memory traffic (eager path)."""
+    name = "noc"
+
+    def apply(self, ctx: OpContext) -> None:
+        cfg = ctx.cfg
+        # sparsity composes like the partition stage: sparse runs model the
+        # single-core compressed stream, so there is no multi-core NoP plane
+        if not _noc_active(cfg) or ctx.sp.enabled:
+            return
+        op, core, noc = ctx.op, self.core(ctx), cfg.noc
+        n = cfg.num_cores
+        # same capacity-based demand the dram stage derives right after
+        # (per instance, filter stream shrunk by upstream sparsity)
+        dram = dfm.dram_traffic(cfg.dataflow, op.M, op.N, op.K,
+                                core.rows, core.cols, cfg.memory)
+        wb = cfg.memory.word_bytes
+        dram_bytes = float(dram["dram_ifmap"]
+                           + dram["dram_filter"] * ctx.filter_shrink
+                           + dram["dram_ofmap_writes"]
+                           + dram["dram_ofmap_reads"]) * wb
+        flits = np.full(n, float(memory_flits(dram_bytes, n, noc.flit_bytes)))
+        stats = eager_noc_delay(
+            noc.topology, cfg.mesh_rows, cfg.mesh_cols, flits,
+            noc.link_bandwidth_bytes_per_cycle, noc.flit_bytes,
+            noc.buffer_flits, cfg.nop_cycles_per_hop, ctx.comp)
+        ctx.noc_extra = float(stats["stall"])
+        # all-reduce of the op's output matrix (per instance) -- same
+        # payload convention as the batched kernel's allreduce column
+        ar = allreduce_cycles(
+            noc.topology, cfg.mesh_rows, cfg.mesh_cols,
+            float(op.M) * float(op.N) * wb,
+            noc.link_bandwidth_bytes_per_cycle, noc.flit_bytes,
+            noc.buffer_flits, cfg.nop_cycles_per_hop)
+        ctx.noc_stats = dict(
+            noc_link_util=float(stats["link_util"]),
+            noc_max_busy=float(stats["max_busy"]),
+            allreduce_cycles=float(ar))
+
+
+def noc_arrival_skew(cfg: AcceleratorConfig, per_core_bytes,
+                     window: float) -> np.ndarray:
+    """Per-core DRAM arrival offset (cycles): zero-load routed latency plus
+    router queueing extra. Feeds `trace.contention.simulate_shared_dram`'s
+    request timestamps so NoP skew spreads the shared-queue burst.
+
+    With the NoC plane disabled this is exactly the legacy
+    `nop_hops * nop_cycles_per_hop` offset (zero extra), keeping the
+    contention path bit-identical to pre-NoC behavior.
+    """
+    hops = effective_nop_hops(cfg)
+    zero_load = hops * cfg.nop_cycles_per_hop
+    if not _noc_active(cfg):
+        return zero_load
+    noc = cfg.noc
+    flits = np.asarray(per_core_bytes, dtype=np.float64) / noc.flit_bytes
+    stats = eager_noc_delay(
+        noc.topology, cfg.mesh_rows, cfg.mesh_cols, flits,
+        noc.link_bandwidth_bytes_per_cycle, noc.flit_bytes,
+        noc.buffer_flits, cfg.nop_cycles_per_hop, float(window))
+    return zero_load + stats["extra"]

@@ -281,6 +281,14 @@ def multicore_contention(cfg: AcceleratorConfig, M: int, N: int, K: int,
     n_totals = [sum(r) * wb / spec.gran_bytes for r in regions]
     common_scale = max(1.0, max(n_totals) / spec.cap)
 
+    # per-core arrival skew over the NoP: the legacy hop offset when the
+    # NoC plane is disabled (bit-identical to the old inline expression),
+    # or routed zero-load latency + router queueing when enabled — the
+    # repro.noc plane feeding the shared-DRAM queues
+    from ..noc.stage import noc_arrival_skew
+    skew = noc_arrival_skew(
+        cfg, [sum(r) * wb for r in regions], max(comps) if comps else 0.0)
+
     per_core = []
     for idx, core in enumerate(cfg.cores):
         m, n, k = subs[idx]
@@ -290,10 +298,7 @@ def multicore_contention(cfg: AcceleratorConfig, M: int, N: int, K: int,
         # issue times live on the scale-compressed axis; the real-cycle
         # NoP offset must be compressed the same way or it decorrelates
         # the cores by cap-dependent amounts after the final rescale
-        t = jnp.where(
-            valid,
-            t + core.nop_hops * cfg.nop_cycles_per_hop / common_scale,
-            _BIG_T)
+        t = jnp.where(valid, t + float(skew[idx]) / common_scale, _BIG_T)
         addr = _route(addr, idx, cfg.dram.channels,
                       cfg.dram.burst_bytes, private_channels)
         per_core.append((t, addr, w, valid))
@@ -325,7 +330,7 @@ def multicore_contention(cfg: AcceleratorConfig, M: int, N: int, K: int,
     shared = run(t, a, w, v, cid, n_cores)
     shared_stalls = [float(s) * common_scale for s in shared.per_core_stall]
 
-    nop = [c.nop_hops * cfg.nop_cycles_per_hop for c in cfg.cores]
+    nop = [float(s) for s in skew]
     return ContentionResult(
         per_core_stall_isolated=tuple(iso),
         per_core_stall_shared=tuple(shared_stalls),

@@ -44,7 +44,7 @@ from ..core import dataflow as dfm
 from ..core.accelerator import AcceleratorConfig, DramConfig
 from ..core.dram import simulate_dram
 from ..core.layout import operand_linear_index
-from ..core.topology import Op
+from ..core.workloads import Op
 
 # One address region per operand (ifmap / filter / ofmap). 32 MiB spacing
 # keeps regions in disjoint DRAM rows while staying inside int32 with the

@@ -10,7 +10,7 @@ from repro.api import (Simulator, as_config, get_preset, list_presets,
 from repro.core import (AcceleratorConfig, simulate_network, simulate_op,
                         tpu_like_config)
 from repro.core.accelerator import LayoutConfig, SparsityConfig
-from repro.core.topology import Op, resnet18
+from repro.core.workloads import Op, resnet18
 
 
 # ---- facade parity ---------------------------------------------------------

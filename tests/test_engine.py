@@ -7,7 +7,7 @@ from repro.core import (AcceleratorConfig, CoreConfig, simulate_network,
                         simulate_op, tpu_like_config)
 from repro.core.accelerator import LayoutConfig, SparsityConfig
 from repro.core.engine import energy_traced, gemm_summary_traced
-from repro.core.topology import Op, lm_ops, resnet18, total_macs
+from repro.core.workloads import Op, lm_ops, resnet18, total_macs
 from repro.configs import get_config
 
 

@@ -14,7 +14,7 @@ import pytest
 
 from repro.api import Study, preset_grid, studies
 from repro.api.study import StudyResult
-from repro.core.topology import Op
+from repro.core.workloads import Op
 from repro.farm import Broker, FarmClient, Worker
 from repro.farm.queue import SHARDS_TOPIC, FileSpool
 

@@ -117,7 +117,7 @@ def test_grouped_sweep_equals_looped_simulate_multicore():
     import pytest
     from repro.api import Study
     from repro.api.presets import get_preset, with_cores
-    from repro.core.topology import Op
+    from repro.core.workloads import Op
     ops = [Op("g", 512, 768, 1024), Op("h", 256, 512, 2048, count=2.0)]
     designs = {}
     for arr in (16, 32):

@@ -1,0 +1,277 @@
+"""Tests for the routed NoC/NoP plane (repro.noc).
+
+Covers the ISSUE-7 contract: flit conservation per link, credit
+non-negativity under backpressure, exact zero-load parity with the legacy
+hop-offset multicore model, batched-vs-eager differential parity on
+randomized mesh/torus grids, and vmap over mixed topologies.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.accelerator import (AcceleratorConfig, CoreConfig,
+                                    NocConfig, tpu_like_config)
+from repro.core.engine import simulate_network
+from repro.core.workloads import Op
+from repro.noc.router import (eager_noc_delay, link_loads, noc_delay_model,
+                              windowed_link_sim)
+from repro.noc.topology import (link_fanin, parent_links, route_pairs,
+                                routed_hop_counts, subtree_sizes)
+from repro.noc.traffic import allreduce_cycles
+
+TOPOS = ("mesh", "torus", "ring")
+GRIDS = ((2, 2), (1, 8), (4, 4), (3, 5), (4, 8))
+
+
+def _noc_cfg(pr, pc, noc=None, hops=None):
+    base = tpu_like_config(array=32)
+    n = pr * pc
+    proto = base.cores[0]
+    cores = tuple(dataclasses.replace(proto, nop_hops=int(h))
+                  for h in (hops if hops is not None else [0] * n))
+    return dataclasses.replace(base, cores=cores, mesh_rows=pr, mesh_cols=pc,
+                               noc=noc or NocConfig())
+
+
+# --- topology: routing tables ------------------------------------------------
+
+def test_routed_hops_mesh_2x2_matches_mcm_offsets():
+    # the mcm-4x32 preset's hand-set (0, 1, 1, 2) offsets ARE the XY
+    # routed distances on a 2x2 mesh
+    assert routed_hop_counts("mesh", 2, 2).tolist() == [0, 1, 1, 2]
+
+
+@pytest.mark.parametrize("topology", TOPOS)
+@pytest.mark.parametrize("pr,pc", GRIDS)
+def test_routes_form_tree_and_hops_match_metric(topology, pr, pc):
+    n = pr * pc
+    parent = parent_links(topology, pr, pc)
+    hops = routed_hop_counts(topology, pr, pc)
+    assert parent[0] == 0 and hops[0] == 0
+    # every route reaches the MC, and each hop decrements the count by 1
+    for u in range(1, n):
+        v, steps = u, 0
+        while v != 0:
+            assert hops[v] == hops[parent[v]] + 1
+            v = int(parent[v])
+            steps += 1
+            assert steps <= n, "route cycles"
+        assert steps == hops[u]
+    # closed-form distance metric
+    i = np.arange(n)
+    r, c = np.divmod(i, pc)
+    want = {"mesh": r + c,
+            "torus": np.minimum(r, pr - r) + np.minimum(c, pc - c),
+            "ring": np.minimum(i, n - i)}[topology]
+    np.testing.assert_array_equal(hops, want)
+
+
+@pytest.mark.parametrize("topology", TOPOS)
+@pytest.mark.parametrize("pr,pc", GRIDS)
+def test_flit_conservation_per_link(topology, pr, pc):
+    """load[l] = flits injected at l + sum of loads of l's child links."""
+    n = pr * pc
+    rng = np.random.default_rng(hash((topology, pr, pc)) % (1 << 32))
+    flits = rng.uniform(0.0, 100.0, n)
+    flits[0] = 0.0                       # the MC core injects nothing
+    load = link_loads(topology, pr, pc, flits, xp=np)
+    parent = parent_links(topology, pr, pc)
+    child_sum = np.zeros(n)
+    np.add.at(child_sum, parent[1:], load[1:])
+    for l in range(1, n):
+        assert load[l] == pytest.approx(flits[l] + child_sum[l])
+    # link l carries exactly its subtree's injections
+    sizes = subtree_sizes(topology, pr, pc)
+    uniform = link_loads(topology, pr, pc, np.full(n, 3.0), xp=np)
+    np.testing.assert_allclose(uniform[1:], 3.0 * sizes[1:])
+    assert load[0] == 0.0
+
+
+# --- windowed reference simulation: credit invariants ------------------------
+
+@pytest.mark.parametrize("topology", ("mesh", "torus"))
+def test_windowed_sim_credit_invariants(topology):
+    pr, pc = 4, 4
+    n = pr * pc
+    rng = np.random.default_rng(7)
+    flits = rng.uniform(10.0, 50.0, n)
+    flits[0] = 0.0
+    B = 4
+    sim = windowed_link_sim(topology, pr, pc, flits, cap_per_window=3.0,
+                            buffer_flits=B, windows=400)
+    # credit non-negativity: occupancy never exceeds the buffer depth
+    assert (sim["credits"] >= -1e-9).all()
+    assert (sim["occupancy"] <= B + 1e-9).all()
+    # end-to-end flit conservation: everything injected eventually sinks
+    assert sim["source_left"][-1] == pytest.approx(0.0, abs=1e-9)
+    assert sim["sink_served"][-1] == pytest.approx(flits[1:].sum())
+    # in-flight accounting per window: injected = sunk + queued + backlog
+    total = flits[1:].sum()
+    inflight = sim["occupancy"].sum(axis=1)
+    np.testing.assert_allclose(
+        sim["sink_served"] + inflight + sim["source_left"], total)
+
+
+def test_windowed_sim_backpressure_slows_drain():
+    """Shallower buffers cannot drain faster (credit backpressure)."""
+    pr, pc = 4, 4
+    flits = np.full(pr * pc, 40.0)
+    flits[0] = 0.0
+
+    def done_at(buffer_flits):
+        sim = windowed_link_sim("mesh", pr, pc, flits, cap_per_window=4.0,
+                                buffer_flits=buffer_flits, windows=600)
+        return int(np.argmax(sim["sink_served"]
+                             >= flits[1:].sum() - 1e-9))
+
+    assert done_at(2) >= done_at(16)
+
+
+# --- zero-load contract ------------------------------------------------------
+
+def _zero_load_noc(topology="mesh"):
+    return NocConfig(enabled=True, topology=topology,
+                     link_bandwidth_bytes_per_cycle=1e9, flit_bytes=32,
+                     buffer_flits=1 << 20)
+
+
+def test_zero_load_extra_is_exactly_zero():
+    n = 16
+    flits = np.full(n, 1000.0)
+    stats = eager_noc_delay("mesh", 4, 4, flits, 1e9, 32, 1 << 20, 2.0,
+                            100.0)
+    assert stats["stall"] == 0.0
+    assert (stats["extra"] == 0.0).all()
+
+
+def test_zero_load_eager_matches_legacy_hop_offsets_bitwise():
+    """Routed NoC at zero load == legacy nop_hops cycles, bit-for-bit."""
+    pr, pc = 4, 4
+    ops = [Op("g0", 384, 256, 512), Op("g1", 512, 128, 256)]
+    legacy = _noc_cfg(pr, pc, hops=routed_hop_counts("mesh", pr, pc))
+    routed = _noc_cfg(pr, pc, noc=_zero_load_noc())
+    a = simulate_network(legacy, ops)
+    b = simulate_network(routed, ops)
+    assert b.total_cycles == a.total_cycles
+    assert b.noc_stall_cycles == 0.0
+    for ra, rb in zip(a.ops, b.ops):
+        assert rb.compute_cycles == ra.compute_cycles
+        assert rb.total_cycles == ra.total_cycles
+
+
+def test_zero_load_batched_matches_legacy_exactly():
+    from repro.api.study import Study
+    pr, pc = 4, 4
+    ops = [Op("g0", 384, 256, 512)]
+    designs = {
+        "legacy": _noc_cfg(pr, pc, hops=routed_hop_counts("mesh", pr, pc)),
+        "routed": _noc_cfg(pr, pc, noc=_zero_load_noc()),
+    }
+    r = (Study().designs(designs).workloads({"w": ops}).fidelity("fast")
+         .run())
+    assert r.fraction_batched == 1.0
+    t = {str(d): float(v) for d, v in zip(r["design"], r["total_cycles"])}
+    assert t["routed"] == t["legacy"]
+    assert float(r.filter(design="routed")["noc_stall_cycles"][0]) == 0.0
+
+
+# --- batched vs eager differential parity ------------------------------------
+
+@pytest.mark.parametrize("topology", ("mesh", "torus"))
+@pytest.mark.parametrize("cores", (4, 16))
+def test_batched_matches_eager_oracle(topology, cores):
+    from repro.api.study import Study
+    pr = {4: 2, 16: 4}[cores]
+    pc = cores // pr
+    rng = np.random.default_rng(cores + len(topology))
+    ops = [Op("g0", 256, 256, 512), Op("g1", 512, 128, 384)]
+    designs = {}
+    for i in range(4):
+        noc = NocConfig(enabled=True, topology=topology,
+                        link_bandwidth_bytes_per_cycle=float(
+                            rng.choice([1.0, 4.0, 32.0, 256.0])),
+                        flit_bytes=int(rng.choice([16, 32, 64])),
+                        buffer_flits=int(rng.choice([2, 8, 64])))
+        designs[f"d{i}"] = _noc_cfg(pr, pc, noc=noc)
+
+    def frame(ff):
+        return (Study().designs(designs).workloads({"w": ops})
+                .fidelity("fast").options(force_fallback=ff).run())
+
+    batched, eager = frame(False), frame(True)
+    assert batched.fraction_batched == 1.0
+    assert eager.fraction_batched == 0.0
+    for m in ("total_cycles", "noc_stall_cycles", "noc_link_util",
+              "allreduce_cycles"):
+        a = np.asarray(batched[m], dtype=float)
+        b = np.asarray(eager[m], dtype=float)
+        rel = np.abs(a - b) / np.maximum(np.abs(b), 1.0)
+        assert rel.max() <= 1e-3, (m, a, b)
+
+
+def test_vmap_over_mixed_topologies_stays_batched():
+    """mesh + torus + ring designs in one study: one kernel per topology
+    flavor, every cell batched."""
+    from repro.api.study import Study
+    ops = [Op("g0", 256, 256, 512)]
+    designs = {
+        t: _noc_cfg(4, 4, noc=NocConfig(
+            enabled=True, topology=t, link_bandwidth_bytes_per_cycle=8.0))
+        for t in TOPOS}
+    r = (Study().designs(designs).workloads({"w": ops}).fidelity("fast")
+         .run())
+    assert r.fraction_batched == 1.0
+    assert len(r) == 3
+    # under congestion the mesh is the worst of the three: its column-0
+    # bottleneck link carries a 12-core subtree on a 4x4 grid, vs 8 for
+    # the ring's longest arc (and the torus halves the mesh's arcs)
+    t = {str(d): float(v) for d, v in zip(r["design"], r["total_cycles"])}
+    assert t["mesh"] >= t["ring"]
+    assert t["mesh"] >= t["torus"]
+
+
+# --- traffic: collectives ----------------------------------------------------
+
+def test_allreduce_torus_beats_mesh_at_fixed_budget():
+    for pr, pc in ((4, 4), (8, 8)):
+        mesh = float(allreduce_cycles("mesh", pr, pc, 1 << 22, 8.0, 32, 8,
+                                      2.0))
+        torus = float(allreduce_cycles("torus", pr, pc, 1 << 22, 8.0, 32, 8,
+                                       2.0))
+        assert torus < mesh
+
+
+def test_allreduce_single_core_is_free():
+    assert float(allreduce_cycles("mesh", 1, 1, 1 << 20, 8.0, 32, 8,
+                                  2.0)) == 0.0
+
+
+# --- config validation (satellite: negative nop fields fail loudly) ----------
+
+def test_negative_nop_hops_rejected():
+    with pytest.raises(ValueError, match="nop_hops"):
+        CoreConfig(nop_hops=-1)
+
+
+def test_negative_nop_cycles_per_hop_rejected():
+    with pytest.raises(ValueError, match="nop_cycles_per_hop"):
+        AcceleratorConfig(nop_cycles_per_hop=-0.5)
+
+
+def test_noc_config_validation():
+    with pytest.raises(ValueError, match="topology"):
+        NocConfig(topology="hypercube")
+    with pytest.raises(ValueError, match="link_bandwidth"):
+        NocConfig(enabled=True, link_bandwidth_bytes_per_cycle=0.0)
+    with pytest.raises(ValueError, match="buffer_flits"):
+        NocConfig(enabled=True, buffer_flits=0)
+    # disabled configs may carry default link fields without validation
+    NocConfig(enabled=False)
+
+
+def test_noc_config_survives_dict_round_trip():
+    cfg = _noc_cfg(2, 2, noc=NocConfig(enabled=True, topology="torus",
+                                       link_bandwidth_bytes_per_cycle=8.0))
+    back = AcceleratorConfig.from_dict(cfg.to_dict())
+    assert back.noc == cfg.noc

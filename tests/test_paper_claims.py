@@ -7,7 +7,7 @@ import pytest
 from repro.core import simulate_network, tpu_like_config
 from repro.core.accelerator import DramConfig, SparsityConfig
 from repro.core.dram import simulate_dram, tile_prefetch_trace, linear_trace
-from repro.core.topology import resnet18, resnet18_six_layers
+from repro.core.workloads import resnet18, resnet18_six_layers
 
 
 @pytest.fixture(scope="module")
@@ -126,7 +126,7 @@ def test_queue_sweep_fig10():
 def test_multicore_iso_compute_table6():
     """Table VI: iso-compute 128x128 vs 16x 32x32: the multi-core config
     narrows the ws/is latency gap."""
-    from repro.core.topology import vit_base_linear
+    from repro.core.workloads import vit_base_linear
     gaps = {}
     for cores, arr in ((1, 128), (16, 32)):
         lat = {}
@@ -143,7 +143,7 @@ def test_multicore_iso_compute_table6():
 def test_energy_fig15_os_wins():
     """Fig. 15: OS dataflow spends the least energy in most configs
     (psums never leave the array)."""
-    from repro.core.topology import resnet18
+    from repro.core.workloads import resnet18
     wins = 0
     for arr in (32, 64):
         e = {}

@@ -18,7 +18,7 @@ from repro.core.accelerator import DramConfig
 from repro.core.dram import (decode_requests, linear_trace, replay_requests,
                              simulate_dram, strided_trace,
                              tile_prefetch_trace)
-from repro.core.topology import Op
+from repro.core.workloads import Op
 from repro.trace.contention import simulate_shared_dram
 
 ENGINES = ("xla", "pallas")

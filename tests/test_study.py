@@ -9,7 +9,7 @@ import pytest
 
 from repro.api import (Simulator, Study, StudyResult, get_study,
                        list_studies, preset_grid, register_study, studies)
-from repro.core.topology import Op
+from repro.core.workloads import Op
 
 OPS_A = [Op("a", 256, 1024, 512), Op("b", 512, 197, 768, count=3.0),
          Op("v", kind="vector", vector_elems=8192.0, count=2.0)]

@@ -13,7 +13,7 @@ import pytest
 from repro.api import Simulator, Study, preset_grid
 from repro.api.presets import as_sparsity, get_preset, with_cores
 from repro.core.accelerator import LayoutConfig, SparsityConfig
-from repro.core.topology import Op
+from repro.core.workloads import Op
 
 PARITY_COLUMNS = ("total_cycles", "compute_cycles", "stall_cycles",
                   "dram_bytes", "energy_pj", "utilization", "edp",

@@ -12,7 +12,7 @@ import pytest
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.core import simulate_network, tpu_like_config
-from repro.core.topology import lm_ops
+from repro.core.workloads import lm_ops
 from repro.data.pipeline import DataConfig, SyntheticLMDataset
 from repro.models.zoo import ModelBundle
 from repro.optim import adamw_init

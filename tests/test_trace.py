@@ -14,7 +14,7 @@ from repro.core.accelerator import (AcceleratorConfig, CoreConfig,
 from repro.core.dataflow import map_gemm, unmap_gemm
 from repro.core.dram import linear_trace
 from repro.core.multicore import simulate_multicore_contention
-from repro.core.topology import Op
+from repro.core.workloads import Op
 from repro.trace import (TraceSpec, gemm_trace_stats, trace_op,
                          trace_op_stats)
 
