@@ -52,6 +52,7 @@ from ..core.engine import (ENERGY_GROUP_COLUMNS, RESULT_SCHEMA_VERSION,
                            energy_group_totals, simulate_network,
                            write_csv_table)
 from ..core.workloads import Op
+from ..faults import fs as _fs
 from .simulator import _sweep_batched, as_config, as_workload
 
 AXIS_COLUMNS = ("design", "workload", "fidelity")
@@ -69,6 +70,22 @@ _METRIC_ALIASES = {"latency": "total_cycles", "cycles": "total_cycles",
 # evaluator: (config, ops, fidelity) -> {metric: float}
 Evaluator = Callable[[AcceleratorConfig, Sequence[Op], str],
                      Dict[str, float]]
+
+
+def _flag_non_finite(metrics: Dict[str, float]) -> None:
+    """Sentinel a sick cell in place: NaN anywhere, or ±Inf on a
+    *canonical* metric column, sets `cell_status = 1.0` (failed).
+    ±Inf on custom-evaluator columns is legitimate output (e.g.
+    `contention_summary`'s stall_inflation on a zero-stall baseline)
+    and is left alone."""
+    for k, v in metrics.items():
+        if k in ("batched", "cell_status"):
+            continue
+        bad = v != v or (k in METRIC_COLUMNS
+                         and (v == float("inf") or v == float("-inf")))
+        if bad:
+            metrics["cell_status"] = 1.0
+            return
 
 
 def _code_digest(code) -> str:
@@ -137,7 +154,11 @@ class StudyResult:
 
     Axis columns (`design`, `workload`, `fidelity`) are object arrays of
     labels; metric columns are float64; `batched` is 1.0 for cells that
-    ran through a vmapped sweep kernel (0.0 = per-op engine fallback).
+    ran through a vmapped sweep kernel (0.0 = per-op engine fallback);
+    `cell_status` is 1.0 for *failed* cells (evaluator raised,
+    non-finite canonical metrics, or a quarantined farm shard) whose
+    metric columns read NaN — `ok()` drops them, `failed_cells` lists
+    them, and `argbest`/`pareto` never pick them.
     """
 
     def __init__(self, columns: Dict[str, np.ndarray],
@@ -228,8 +249,31 @@ class StudyResult:
             out[key] = self.filter(**eq)
         return out
 
+    @property
+    def failed_cells(self) -> List[int]:
+        """Row indices of failed cells (`cell_status == 1`): evaluator
+        raised, non-finite canonical metrics, or quarantined shard."""
+        if "cell_status" not in self.columns:
+            return []
+        return [int(i) for i in
+                np.nonzero(self.columns["cell_status"] == 1.0)[0]]
+
+    def ok(self) -> "StudyResult":
+        """Subframe of the healthy rows only (drops failed cells)."""
+        if "cell_status" not in self.columns:
+            return self
+        return self._subset(self.columns["cell_status"] != 1.0)
+
     def argbest(self, metric: str = "edp") -> int:
-        return int(np.argmin(np.asarray(self[metric], dtype=float)))
+        """Row index minimizing `metric`. NaN rows (failed cells) never
+        win; an all-NaN column raises instead of returning garbage."""
+        vals = np.asarray(self[metric], dtype=float)
+        masked = np.where(np.isnan(vals), np.inf, vals)
+        if not len(masked) or not np.isfinite(masked).any():
+            raise ValueError(
+                f"argbest({metric!r}): no finite values "
+                f"({len(self.failed_cells)} failed cells of {len(self)})")
+        return int(np.argmin(masked))
 
     def best(self, metric: str = "edp",
              by: Optional[Union[str, Sequence[str]]] = None):
@@ -240,14 +284,17 @@ class StudyResult:
                 for k, sub in self.group(by).items()}
 
     def pareto(self, *objectives: str) -> "StudyResult":
-        """Non-dominated rows, minimizing every objective."""
+        """Non-dominated rows, minimizing every objective. Rows with a
+        non-finite objective value (failed cells' NaNs, ±Inf) are
+        excluded — NaN compares false against everything, so without
+        this a failed cell would always survive as "non-dominated"."""
         if not objectives:
             objectives = ("total_cycles", "energy_pj")
         vals = np.stack([np.asarray(self[m], dtype=float)
                          for m in objectives], axis=1)
-        keep = np.ones(len(self), dtype=bool)
-        for i in range(len(self)):
-            dominated = ((vals <= vals[i]).all(axis=1)
+        keep = np.isfinite(vals).all(axis=1)
+        for i in np.nonzero(keep)[0]:
+            dominated = (keep & (vals <= vals[i]).all(axis=1)
                          & (vals < vals[i]).any(axis=1))
             if dominated.any():
                 keep[i] = False
@@ -345,10 +392,15 @@ class StudyResult:
         lines = [f"{len(self)} cells | axes: "
                  + "; ".join(f"{a}={list(v)}" for a, v in self.axes.items())]
         metrics = [c for c in self.columns
-                   if c not in AXIS_COLUMNS and c != "batched"]
+                   if c not in AXIS_COLUMNS
+                   and c not in ("batched", "cell_status")]
+        failed = set(self.failed_cells)
         for i in range(len(self)):
             tag = " ".join(str(self.columns[a][i]) for a in AXIS_COLUMNS
                            if a in self.columns)
+            if i in failed:
+                lines.append(f"  {tag}: FAILED")
+                continue
             vals = " ".join(f"{m}={float(self.columns[m][i]):.4g}"
                             for m in metrics[:6])
             lines.append(f"  {tag}: {vals}")
@@ -724,18 +776,16 @@ class Study:
         cache dir, then `os.replace` it into place — a reader (or a farm
         worker racing on the same cell) sees either no file or a complete
         one, never a torn write. Racing writers both produce the same
-        deterministic content, so last-replace-wins is harmless."""
-        os.makedirs(cache_dir, exist_ok=True)
+        deterministic content, so last-replace-wins is harmless.
+
+        Routed through the fault shim (`site="cache.store"`) so the
+        chaos schedules can land corrupt cache entries — which
+        `_cache_load` must degrade to misses, never crashes."""
         path = os.path.join(cache_dir, h + ".json")
-        tmp = f"{path}.tmp.{os.getpid()}"
-        try:
-            with open(tmp, "w") as f:
-                json.dump({"schema_version": RESULT_SCHEMA_VERSION,
-                           "study": self.name, "metrics": metrics}, f)
-            os.replace(tmp, path)
-        finally:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
+        _fs.atomic_write_json(
+            path, {"schema_version": RESULT_SCHEMA_VERSION,
+                   "study": self.name, "metrics": metrics},
+            site="cache.store", indent=None)
 
     def run(self, *, mesh=None, cache: Optional[str] = None) -> StudyResult:
         """Execute the plan and return the columnar frame.
@@ -766,6 +816,16 @@ class Study:
         (restricted to the selected, cache-missing members); per-design
         results are bit-identical regardless of how the group was sliced
         into shards, because vmap maps designs independently.
+
+        Failure semantics: a cell whose evaluation raises, or whose
+        canonical metrics come back NaN (or ±Inf on a canonical column),
+        degrades to a *failed cell* — `cell_status == 1.0`, NaN metrics
+        in the frame — instead of poisoning the whole study/shard.
+        `ValueError` is the deliberate exception: it marks an invalid
+        configuration (validation is loud and early), so it propagates
+        rather than silently degrading.
+        Completed cells checkpoint to the cache as they finish, so a
+        killed long run resumes from its last completed cell on re-run.
         """
         if indices is None:
             sel = set(range(len(plan.cells)))
@@ -788,6 +848,21 @@ class Study:
                     hits += 1
         loaded = set(results)
 
+        def checkpoint(i: int) -> None:
+            # incremental resume point: a completed cell lands in the
+            # cache the moment it exists, so a killed run re-started
+            # later skips straight past it. Best-effort (a full disk
+            # must not fail a computed cell), loaded cells are never
+            # rewritten (pure I/O churn), failed cells are never cached
+            # (a transient failure must re-execute next run).
+            if (cache_dir is None or i in loaded
+                    or results[i].get("cell_status")):
+                return
+            try:
+                self._cache_store(cache_dir, hashes[i], results[i])
+            except OSError:
+                pass
+
         # batched groups: one vmapped sweep kernel per flavor, executing
         # only the selected, cache-missing cells of each group
         for grp in plan.groups:
@@ -795,16 +870,26 @@ class Study:
             if not miss:
                 continue
             ops = self._workloads[grp.workload]
-            vals = _sweep_batched(
-                [plan.cells[i].config for i in miss], ops, grp.dataflow,
-                grp.word_bytes, self._ert, mesh, dram=grp.dram,
-                spec=self._spec_for(grp.fidelity), engine=self._engine,
-                core_index=self._core_index)
-            vals["edp"] = _edp(vals["energy_pj"], vals["total_cycles"])
+            try:
+                vals = _sweep_batched(
+                    [plan.cells[i].config for i in miss], ops,
+                    grp.dataflow, grp.word_bytes, self._ert, mesh,
+                    dram=grp.dram, spec=self._spec_for(grp.fidelity),
+                    engine=self._engine, core_index=self._core_index)
+                vals["edp"] = _edp(vals["energy_pj"],
+                                   vals["total_cycles"])
+            except ValueError:
+                raise    # invalid configuration: loud, never a failed cell
+            except Exception:  # noqa: BLE001 — group fails, study lives
+                for i in miss:
+                    results[i] = {"batched": 1.0, "cell_status": 1.0}
+                continue
             for j, i in enumerate(miss):
                 results[i] = {k: float(v[j]) for k, v in vals.items()}
                 results[i]["batched"] = 1.0
+                _flag_non_finite(results[i])
                 executed += 1
+                checkpoint(i)
 
         # per-op engine fallback (and custom evaluators)
         pipelines: Dict[str, tuple] = {}
@@ -813,47 +898,49 @@ class Study:
                 continue
             cell = plan.cells[i]
             ops = self._workloads[cell.workload]
-            if self._evaluator is not None:
-                m = {k: float(v) for k, v in
-                     self._evaluator(cell.config, ops,
-                                     cell.fidelity).items()}
-            else:
-                if cell.fidelity not in pipelines:
-                    pipelines[cell.fidelity] = st.build_pipeline(
-                        cell.fidelity, core_index=self._core_index,
-                        trace_spec=self._spec_for(cell.fidelity),
-                        engine=self._engine)
-                rep = simulate_network(cell.config, ops,
-                                       dram_fidelity=cell.fidelity,
-                                       ert=self._ert,
-                                       pipeline=pipelines[cell.fidelity])
-                m = dict(total_cycles=rep.total_cycles,
-                         compute_cycles=rep.compute_cycles,
-                         stall_cycles=rep.stall_cycles,
-                         dram_bytes=rep.dram_bytes,
-                         energy_pj=rep.energy_pj,
-                         utilization=rep.utilization, edp=rep.edp,
-                         **energy_group_totals(rep.energy_breakdown))
-                if (cell.config.noc.enabled
-                        and cell.config.num_cores > 1):
-                    m["noc_stall_cycles"] = rep.noc_stall_cycles
-                    m["noc_link_util"] = max(
-                        (o.noc_stats or {}).get("noc_link_util", 0.0)
-                        for o in rep.ops)
-                    m["allreduce_cycles"] = sum(
-                        (o.noc_stats or {}).get("allreduce_cycles", 0.0)
-                        * o_count for o, o_count in
-                        zip(rep.ops, (op.count for op in ops)))
+            try:
+                if self._evaluator is not None:
+                    m = {k: float(v) for k, v in
+                         self._evaluator(cell.config, ops,
+                                         cell.fidelity).items()}
+                else:
+                    if cell.fidelity not in pipelines:
+                        pipelines[cell.fidelity] = st.build_pipeline(
+                            cell.fidelity, core_index=self._core_index,
+                            trace_spec=self._spec_for(cell.fidelity),
+                            engine=self._engine)
+                    rep = simulate_network(
+                        cell.config, ops, dram_fidelity=cell.fidelity,
+                        ert=self._ert,
+                        pipeline=pipelines[cell.fidelity])
+                    m = dict(total_cycles=rep.total_cycles,
+                             compute_cycles=rep.compute_cycles,
+                             stall_cycles=rep.stall_cycles,
+                             dram_bytes=rep.dram_bytes,
+                             energy_pj=rep.energy_pj,
+                             utilization=rep.utilization, edp=rep.edp,
+                             **energy_group_totals(rep.energy_breakdown))
+                    if (cell.config.noc.enabled
+                            and cell.config.num_cores > 1):
+                        m["noc_stall_cycles"] = rep.noc_stall_cycles
+                        m["noc_link_util"] = max(
+                            (o.noc_stats or {}).get("noc_link_util", 0.0)
+                            for o in rep.ops)
+                        m["allreduce_cycles"] = sum(
+                            (o.noc_stats or {}).get(
+                                "allreduce_cycles", 0.0)
+                            * o_count for o, o_count in
+                            zip(rep.ops, (op.count for op in ops)))
+            except ValueError:
+                raise    # invalid configuration: loud, never a failed cell
+            except Exception:  # noqa: BLE001 — one bad cell, study lives
+                results[i] = {"batched": 0.0, "cell_status": 1.0}
+                continue
             m["batched"] = 0.0
             results[i] = m
+            _flag_non_finite(results[i])
             executed += 1
-
-        if cache_dir is not None:
-            for i in sorted(sel):
-                # only cells executed this run — hits came from these
-                # exact files, rewriting them is pure I/O churn
-                if i not in loaded:
-                    self._cache_store(cache_dir, hashes[i], results[i])
+            checkpoint(i)
 
         return results, executed, hits
 
@@ -886,7 +973,7 @@ class Study:
         metric_names: List[str] = [m for m in METRIC_COLUMNS
                                    if any(m in r for r in results)]
         extra = sorted({k for r in results for k in r}
-                       - set(metric_names) - {"batched"})
+                       - set(metric_names) - {"batched", "cell_status"})
         metric_names += extra
         if self._metrics is not None:
             missing = set(self._metrics) - set(metric_names)
@@ -906,6 +993,11 @@ class Study:
                                dtype=np.float64)
         cols["batched"] = np.array([r.get("batched", 0.0) for r in results],
                                    dtype=np.float64)
+        # 1.0 = the cell failed (evaluator raised, non-finite canonical
+        # metrics, or quarantined shard); its metric columns read NaN
+        cols["cell_status"] = np.array(
+            [r.get("cell_status", 0.0) for r in results],
+            dtype=np.float64)
         axes = {"design": [l for l, _ in self._designs],
                 "workload": list(self._workloads),
                 "fidelity": list(self._fidelities)}

@@ -70,6 +70,23 @@ class DramConfig:
     write_queue: int = 128
     bandwidth_bytes_per_cycle: float = 19.2  # peak per channel (2400MT/s*8B/1GHz)
 
+    def __post_init__(self):
+        for field in ("channels", "banks_per_channel", "row_bytes",
+                      "burst_bytes", "read_queue", "write_queue"):
+            if getattr(self, field) < 1:
+                raise ValueError(
+                    f"dram {field} must be >= 1, "
+                    f"got {getattr(self, field)}")
+        for field in ("tRCD", "tRP", "tCAS", "tBURST"):
+            if getattr(self, field) < 1:
+                raise ValueError(
+                    f"dram timing {field} must be a positive cycle "
+                    f"count, got {getattr(self, field)}")
+        if self.bandwidth_bytes_per_cycle <= 0:
+            raise ValueError(
+                "dram bandwidth_bytes_per_cycle must be > 0, got "
+                f"{self.bandwidth_bytes_per_cycle}")
+
 
 @dataclasses.dataclass(frozen=True)
 class SparsityConfig:
@@ -133,16 +150,19 @@ class NocConfig:
             raise ValueError(
                 f"noc topology must be one of {NOC_TOPOLOGIES}, "
                 f"got {self.topology!r}")
-        if self.enabled:
-            if self.link_bandwidth_bytes_per_cycle <= 0:
-                raise ValueError(
-                    "link_bandwidth_bytes_per_cycle must be > 0, got "
-                    f"{self.link_bandwidth_bytes_per_cycle}")
-            if self.flit_bytes < 1:
-                raise ValueError(f"flit_bytes must be >= 1, got {self.flit_bytes}")
-            if self.buffer_flits < 1:
-                raise ValueError(
-                    f"buffer_flits must be >= 1, got {self.buffer_flits}")
+        # link parameters are validated even when disabled: a config
+        # built with flit_bytes=0 must fail loudly at construction, not
+        # divide-by-zero later when someone flips `enabled` on a
+        # dataclasses.replace()'d copy
+        if self.link_bandwidth_bytes_per_cycle <= 0:
+            raise ValueError(
+                "link_bandwidth_bytes_per_cycle must be > 0, got "
+                f"{self.link_bandwidth_bytes_per_cycle}")
+        if self.flit_bytes < 1:
+            raise ValueError(f"flit_bytes must be >= 1, got {self.flit_bytes}")
+        if self.buffer_flits < 1:
+            raise ValueError(
+                f"buffer_flits must be >= 1, got {self.buffer_flits}")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -178,6 +178,100 @@ def _cmd_smoke(args) -> int:
     return rc
 
 
+def _cmd_chaos(args) -> int:
+    """CI chaos soak: run one study through the farm under each seeded
+    fault schedule and require (a) termination, (b) a frame whose every
+    column is bit-identical to a fault-free local `Study.run()`, and
+    (c) the study's claims. One process, synchronous deterministic
+    driver: the broker and an N-worker pool are stepped round-robin, an
+    `InjectedCrash` kills a worker mid-protocol and a fresh one is
+    spawned (exactly what a process kill + respawn does, minus the
+    fork cost and flakiness). Real fleets get the same schedules via
+    the REPRO_FAULTS env var (see repro.faults)."""
+    import numpy as np
+
+    from ..faults import CHAOS_SCHEDULES, InjectedCrash, chaos_schedule
+
+    names = args.schedules or sorted(CHAOS_SCHEDULES)
+    study = _build_study(args.study, args.smoke)
+    print(f"chaos: fault-free reference run of {args.study}"
+          f"{' --smoke' if args.smoke else ''}", flush=True)
+    ref = study.run()
+
+    report, ok_all = {}, True
+    for name in names:
+        plan = chaos_schedule(name, args.seed)
+        root = os.path.join(args.root, name)
+        t0 = time.time()
+        kills = rounds = 0
+        res = None
+        with plan.active():
+            # short lease so crashed claims re-deliver within the soak;
+            # a raised attempts budget keeps bounded injection bursts
+            # from quarantining healthy shards (quarantine semantics
+            # have their own unit tests)
+            broker = Broker(root, lease_seconds=0.2, max_shard_cells=2,
+                            max_shard_attempts=8)
+            client = FarmClient(root)
+            workers = [Worker(root, f"chaos-w{i}")
+                       for i in range(args.workers)]
+            sid = client.submit(study)
+            state = "running"
+            while time.time() - t0 < args.timeout:
+                rounds += 1
+                broker.step()
+                for i, w in enumerate(workers):
+                    try:
+                        while w.step():
+                            pass
+                    except InjectedCrash:
+                        kills += 1           # respawn, like a supervisor
+                        workers[i] = Worker(root, f"chaos-w{i}r{kills}")
+                    except OSError:
+                        pass                 # injected I/O at claim time
+                state = client.status(sid).get("state")
+                if state in ("done", "canceled", "error"):
+                    break
+                time.sleep(0.02)             # age the short leases
+            broker.step()                    # final fold
+            state = client.status(sid).get("state")
+            if state == "done":
+                res = client.result(sid, timeout=30)
+        m = broker.metrics()
+        bad_cols = ([] if res is None else
+                    [c for c in ref.columns
+                     if not np.array_equal(ref.columns[c],
+                                           res.columns.get(
+                                               c, np.array([])))])
+        claims = res.check_claims() if res is not None else {}
+        entry = {
+            "ok": state == "done",
+            "bit_identical": res is not None and res.equals(ref)
+            and not bad_cols,
+            "claims_ok": bool(claims) and all(claims.values()),
+            "state": state, "seconds": round(time.time() - t0, 2),
+            "rounds": rounds, "worker_kills": kills,
+            "requeued_shards": m["requeued_shards"],
+            "quarantined_shards": m["quarantined_shards"],
+            "mismatched_columns": bad_cols,
+            "faults": plan.report(),
+        }
+        report[name] = entry
+        good = (entry["ok"] and entry["bit_identical"]
+                and entry["claims_ok"])
+        ok_all = ok_all and good
+        print(f"chaos[{name}]: {'PASS' if good else 'FAIL'} "
+              f"state={state} kills={kills} "
+              f"requeued={entry['requeued_shards']} "
+              f"injected={entry['faults']['total_injected']} "
+              f"bit_identical={entry['bit_identical']} "
+              f"({entry['seconds']}s)", flush=True)
+    write_json_atomic(args.report, report)
+    print(f"chaos: wrote {args.report}; "
+          f"{'all schedules PASS' if ok_all else 'FAILURES above'}")
+    return 0 if ok_all else 1
+
+
 # ---- argument plumbing --------------------------------------------------------
 
 def _main(argv: Optional[Sequence[str]] = None) -> int:
@@ -253,6 +347,22 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
                    help="small shards so every worker sees work")
     p.add_argument("--metrics", default="FARM_metrics.json")
     p.set_defaults(fn=_cmd_smoke)
+
+    p = sub.add_parser(
+        "chaos",
+        help="CI chaos soak: seeded fault schedules, bit-identity gated")
+    common(p)
+    p.add_argument("--study", default="edp_array_size")
+    p.add_argument("--smoke", action="store_true",
+                   help="use the study factory's smoke variant")
+    p.add_argument("--workers", type=int, default=2)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--timeout", type=float, default=300.0,
+                   help="per-schedule wall ceiling (seconds)")
+    p.add_argument("--schedules", nargs="*", default=None,
+                   help="subset of schedules (default: all three)")
+    p.add_argument("--report", default="FAULTS_report.json")
+    p.set_defaults(fn=_cmd_chaos)
 
     args = ap.parse_args(argv)
     return args.fn(args)

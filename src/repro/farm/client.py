@@ -97,8 +97,14 @@ class FarmClient:
             if not (name.startswith("shard-") and name.endswith(".json")):
                 continue
             payload = read_json(os.path.join(rdir, name))
-            if payload is None:
+            if not isinstance(payload, dict):
                 continue                      # mid-write; next poll sees it
+            if payload.get("quarantined"):
+                # broker gave up on this shard: its cells surface as
+                # failed frame rows (cell_status == 1), not an exception
+                for i in payload.get("failed_cells", []):
+                    results[int(i)] = {"cell_status": 1.0}
+                continue
             if "error" in payload:
                 errors.append(f"shard {payload.get('shard')}: "
                               f"{payload['error']}")

@@ -34,6 +34,9 @@ import time
 import uuid
 from typing import Callable, Dict, List, Optional, Tuple
 
+from ..faults import fs as _fs
+from ..faults.retry import with_retries
+
 __all__ = ["FarmDirs", "FileSpool", "JOBS_TOPIC", "QueueItem",
            "SHARDS_TOPIC", "read_json", "write_json_atomic"]
 
@@ -43,17 +46,12 @@ JOBS_TOPIC = "jobs"
 SHARDS_TOPIC = "shards"
 
 
-def write_json_atomic(path: str, obj) -> None:
-    """Temp-file + `os.replace` JSON write (readers see all or nothing)."""
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    tmp = f"{path}.tmp.{os.getpid()}.{uuid.uuid4().hex[:6]}"
-    try:
-        with open(tmp, "w") as f:
-            json.dump(obj, f, indent=1)
-        os.replace(tmp, path)
-    finally:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
+def write_json_atomic(path: str, obj, *, site: str = "fs.write") -> None:
+    """Temp-file + `os.replace` JSON write (readers see all or nothing),
+    with bounded retries on transient `OSError`. `site` names the write
+    for the fault-injection plane (`repro.faults`) — a no-op unless a
+    `FaultPlan` is active."""
+    _fs.atomic_write_json(path, obj, site=site)
 
 
 def read_json(path: str, default=None):
@@ -95,16 +93,41 @@ class FileSpool:
     # ---- producer -------------------------------------------------------------
     def put(self, topic: str, payload: dict, *, priority: int = 100) -> str:
         """Enqueue one message; lower `priority` values are claimed
-        first (FIFO within a priority class). Returns the item id."""
+        first (FIFO within a priority class). Returns the item id.
+
+        Hardened against transient I/O and torn staging writes: the
+        staging file must parse back to JSON before it is renamed into
+        `pending/` (a torn write would otherwise become a poison
+        message, silently dropped by `claim` — a lost shard), and the
+        whole write retries with backoff on `OSError`."""
         if not 0 <= int(priority) <= 9999:
             raise ValueError("priority must be in [0, 9999]")
         tmp, pending, _ = self._dirs(topic)
         item_id = (f"p{int(priority):04d}-{time.time_ns():020d}"
                    f"-{uuid.uuid4().hex[:8]}")
         staging = os.path.join(tmp, item_id + ".json")
-        with open(staging, "w") as f:
-            json.dump(payload, f)
-        os.replace(staging, os.path.join(pending, item_id + ".json"))
+        text = json.dumps(payload)
+
+        def _write() -> None:
+            _fs.crash_point("spool.put")
+            try:
+                _fs.write_text(staging, text, site="spool.put")
+                with open(staging) as f:   # torn-write read-back check
+                    json.load(f)
+            except ValueError as e:
+                raise OSError(f"torn staging write for {item_id}: {e}") \
+                    from e
+            _fs.replace(staging, os.path.join(pending, item_id + ".json"),
+                        site="spool.put")
+
+        try:
+            # 9 attempts: a put must outlast a worst-case burst of
+            # transient errors AND torn stagings back to back (the
+            # chaos torn-writes schedule injects up to 6 in a row)
+            with_retries(_write, retries=8)
+        finally:
+            if os.path.exists(staging):
+                os.unlink(staging)
         return item_id
 
     # ---- consumer -------------------------------------------------------------
@@ -129,7 +152,9 @@ class FileSpool:
                 continue              # another claimant won this item
             os.utime(dst)             # lease starts now, not at put()
             payload = read_json(dst)
-            if payload is None:       # poison message: drop, keep going
+            if not isinstance(payload, dict):
+                # poison message (torn, or valid JSON of the wrong
+                # shape): drop it, keep going — never crash a consumer
                 try:
                     os.unlink(dst)
                 except OSError:
@@ -149,12 +174,16 @@ class FileSpool:
             pass
 
     # ---- broker-side maintenance ----------------------------------------------
-    def requeue_stale(self, topic: str, lease_seconds: float) -> List[str]:
-        """Move claimed items older than the lease back to pending/
-        (the owner is presumed dead). Returns the requeued item ids."""
-        _, pending, claimed = self._dirs(topic)
-        now = time.time()
-        out: List[str] = []
+    def stale_claims(self, topic: str, lease_seconds: float
+                     ) -> List[Tuple[str, str, float, str]]:
+        """[(item_id, owner, age, path)] for claimed items whose lease
+        expired. Ages are measured against the *fault clock*
+        (`faults.fs.now`), so an injected skew turns every claim stale
+        at once — the lease-storm schedule. Read-only: the broker
+        decides per item whether to requeue or quarantine."""
+        _, _, claimed = self._dirs(topic)
+        now = _fs.now("clock")
+        out: List[Tuple[str, str, float, str]] = []
         for name in sorted(os.listdir(claimed)):
             if not name.endswith(".json") or "__" not in name:
                 continue
@@ -165,12 +194,30 @@ class FileSpool:
                 continue              # owner acked while we listed
             if age < lease_seconds:
                 continue
-            item_id = name[:-len(".json")].split("__", 1)[0]
-            try:
-                os.rename(src, os.path.join(pending, item_id + ".json"))
+            item_id, owner = name[:-len(".json")].split("__", 1)
+            out.append((item_id, owner, age, src))
+        return out
+
+    def requeue(self, topic: str, item_id: str, path: str) -> bool:
+        """Move one claimed item back to pending/ (its owner is presumed
+        dead). False if it was acked or re-claimed under us."""
+        _, pending, _ = self._dirs(topic)
+        try:
+            os.rename(path, os.path.join(pending, item_id + ".json"))
+            return True
+        except OSError:
+            return False
+
+    def requeue_stale(self, topic: str, lease_seconds: float) -> List[str]:
+        """Move every claimed item older than the lease back to
+        pending/. Returns the requeued item ids. (The broker uses the
+        budgeted per-item path via `stale_claims`; this convenience
+        wrapper is the unbudgeted whole-topic sweep.)"""
+        out: List[str] = []
+        for item_id, _owner, _age, path in self.stale_claims(
+                topic, lease_seconds):
+            if self.requeue(topic, item_id, path):
                 out.append(item_id)
-            except OSError:
-                pass                  # acked (or re-claimed) under us
         return out
 
     def drop_pending(self, topic: str,
@@ -206,7 +253,7 @@ class FileSpool:
     def claimed_items(self, topic: str) -> List[Tuple[str, str, float]]:
         """[(item_id, owner, lease_age_seconds)] for leased items."""
         _, _, claimed = self._dirs(topic)
-        now = time.time()
+        now = time.time()        # introspection only: the real clock
         out = []
         for name in sorted(os.listdir(claimed)):
             if not name.endswith(".json") or "__" not in name:
@@ -231,6 +278,7 @@ class FarmDirs:
     state written with `write_json_atomic`::
 
         <root>/studies/<sid>/spec.json     the submitted study spec
+        <root>/studies/<sid>/manifest.json immutable shard->cells map
         <root>/studies/<sid>/status.json   broker-owned progress/state
         <root>/results/<sid>/shard-*.json  worker-written shard results
         <root>/control/<sid>.cancel        client cancellation requests
@@ -250,6 +298,14 @@ class FarmDirs:
 
     def status_path(self, study_id: str) -> str:
         return os.path.join(self.study_dir(study_id), "status.json")
+
+    def manifest_path(self, study_id: str) -> str:
+        """Immutable ingest-time record (shard -> cell indices, totals,
+        priority): written once before any shard is claimable, it is
+        what lets a broker rebuild a corrupt/missing `status.json` by
+        re-folding shard results, re-enqueue lost or unreadable shards,
+        and quarantine a shard into its exact failed cells."""
+        return os.path.join(self.study_dir(study_id), "manifest.json")
 
     def results_dir(self, study_id: str) -> str:
         return os.path.join(self.root, "results",

@@ -35,6 +35,7 @@ from typing import Dict, Optional, Tuple
 
 from ..api.study import Study, StudyPlan
 from ..dist import ElasticPlan, plan_elastic_remesh
+from ..faults import fs as _fs
 from .queue import SHARDS_TOPIC, FarmDirs, FileSpool, read_json, \
     write_json_atomic
 
@@ -75,6 +76,10 @@ class Worker:
         """Claim and execute at most one shard. Returns True if a shard
         was processed (work may remain), False if the queue was empty."""
         item = self.spool.claim(SHARDS_TOPIC, self.worker_id)
+        if item is not None:
+            # kill-point: died holding a fresh claim — the lease expires
+            # and the broker re-delivers (a budgeted attempt)
+            _fs.crash_point("worker.claimed")
         self._heartbeat(current=item.item_id if item else None)
         if item is None:
             return False
@@ -103,7 +108,11 @@ class Worker:
                    "seconds": time.perf_counter() - t0}
         # result BEFORE ack: a crash in between re-delivers the shard,
         # and the duplicate result is byte-identical (deterministic cells)
-        write_json_atomic(self.dirs.shard_result_path(sid, shard), out)
+        write_json_atomic(self.dirs.shard_result_path(sid, shard), out,
+                          site="worker.result")
+        # kill-point: result durable, shard still leased — the broker
+        # requeues it and the re-executed duplicate folds once
+        _fs.crash_point("worker.pre_ack")
         self.spool.ack(item)
         self.shards_done += 1
         self._heartbeat(current=None)
@@ -142,10 +151,19 @@ class Worker:
         return self._studies[sid]
 
     def _heartbeat(self, current: Optional[str]) -> None:
-        write_json_atomic(self.dirs.worker_path(self.worker_id), {
-            "worker": self.worker_id, "time": time.time(),
-            "pid": os.getpid(), "shards_done": self.shards_done,
-            "cells_done": self.cells_done, "cache_hits": self.cache_hits,
-            "current_shard": current,
-            "mesh": (list(self._mesh_plan.mesh_shape)
-                     if self._mesh_plan else None)})
+        """Advisory liveness ping. A failing heartbeat write (disk
+        hiccup) must never kill a worker mid-shard — the broker treats
+        a stale/unreadable heartbeat as dead-worker, which is exactly
+        the degradation we want."""
+        try:
+            write_json_atomic(self.dirs.worker_path(self.worker_id), {
+                "worker": self.worker_id, "time": time.time(),
+                "pid": os.getpid(), "shards_done": self.shards_done,
+                "cells_done": self.cells_done,
+                "cache_hits": self.cache_hits,
+                "current_shard": current,
+                "mesh": (list(self._mesh_plan.mesh_shape)
+                         if self._mesh_plan else None)},
+                site="worker.heartbeat")
+        except OSError:
+            pass

@@ -77,6 +77,24 @@ class TraceSpec:
     tile_c: int = 32
     stride_elems: int = 1
 
+    def __post_init__(self):
+        if self.cap < 1:
+            raise ValueError(f"trace cap must be >= 1, got {self.cap}")
+        if self.gran_bytes < 1:
+            raise ValueError(
+                f"gran_bytes must be >= 1, got {self.gran_bytes}")
+        if self.layout not in ("row", "col", "tiled", "strided"):
+            raise ValueError(
+                "trace layout must be one of "
+                f"('row', 'col', 'tiled', 'strided'), got {self.layout!r}")
+        if self.tile_r < 1 or self.tile_c < 1:
+            raise ValueError(
+                f"trace tile must be >= 1x1, got "
+                f"{self.tile_r}x{self.tile_c}")
+        if self.stride_elems < 1:
+            raise ValueError(
+                f"stride_elems must be >= 1, got {self.stride_elems}")
+
 
 # The one default spec shared by every entry point (per-op stage, batched
 # sweep, contention) so spec=None means the same stream everywhere.

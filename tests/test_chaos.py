@@ -1,0 +1,247 @@
+"""End-to-end chaos: the farm under seeded fault schedules (ISSUE 8).
+
+Synchronous deterministic drivers (no subprocesses, no sleeps beyond
+lease aging): a `FaultPlan` is active while broker.step()/worker.step()
+run by hand, `InjectedCrash` kills a worker mid-protocol and the driver
+respawns a fresh one — the in-process equivalent of kill -9 + supervisor
+restart. The acceptance bar everywhere is *bit-identity*: the frame
+produced under faults equals the fault-free local run, column for
+column.
+
+Also pinned here: the broker's recovery machinery on its own — shard
+quarantine past the attempts budget, corrupt-status rebuild from the
+manifest, and torn-result patience -> re-enqueue.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import Study, preset_grid
+from repro.core.workloads import Op
+from repro.farm import Broker, FarmClient, Worker
+from repro.farm.queue import SHARDS_TOPIC, FarmDirs, FileSpool
+from repro.faults import (CHAOS_SCHEDULES, FaultPlan, FaultRule,
+                          InjectedCrash)
+
+OPS = [Op("a", 256, 1024, 512), Op("b", 128, 512, 256)]
+
+
+def mk_study(name="chaostest"):
+    return (Study(name).designs(preset_grid(array=[8, 16]))
+            .workloads({"wa": OPS[:1], "wb": OPS[1:]}).fidelity("fast"))
+
+
+def chaos_drive(root, sid, *, n_workers=2, max_rounds=400,
+                lease_seconds=0.0, max_shard_attempts=8):
+    """Broker + worker pool stepped round-robin under the active plan;
+    InjectedCrash respawns the worker. Returns (broker, final state)."""
+    broker = Broker(root, max_shard_cells=2, lease_seconds=lease_seconds,
+                    max_shard_attempts=max_shard_attempts)
+    client = FarmClient(root)
+    workers = [Worker(root, f"cw{i}") for i in range(n_workers)]
+    kills = 0
+    for _ in range(max_rounds):
+        broker.step()
+        for i, w in enumerate(workers):
+            try:
+                while w.step():
+                    pass
+            except InjectedCrash:
+                kills += 1
+                workers[i] = Worker(root, f"cw{i}r{kills}")
+            except OSError:
+                pass
+        state = client.status(sid).get("state")
+        if state in ("done", "canceled", "error"):
+            broker.step()
+            return broker, client.status(sid).get("state")
+    raise AssertionError(
+        f"chaos farm did not settle: {client.status(sid)}")
+
+
+@pytest.mark.parametrize("schedule", sorted(CHAOS_SCHEDULES))
+def test_schedule_terminates_bit_identical(tmp_path, schedule):
+    local = mk_study().run()
+    root = str(tmp_path / "farm")
+    plan = CHAOS_SCHEDULES[schedule](seed=0)
+    with plan.active():
+        client = FarmClient(root)
+        sid = client.submit(mk_study())
+        _, state = chaos_drive(root, sid)
+        assert state == "done"
+        res = client.result(sid, timeout=5)
+    assert res.equals(local)
+    for k in local.columns:
+        assert np.array_equal(res[k], local[k]), k
+    assert not res.failed_cells
+
+
+def test_worker_kills_schedule_actually_requeues(tmp_path):
+    """The kill schedule must exercise re-delivery, not just survive it."""
+    root = str(tmp_path / "farm")
+    plan = CHAOS_SCHEDULES["worker-kills"](seed=0)
+    with plan.active():
+        client = FarmClient(root)
+        sid = client.submit(mk_study())
+        broker, state = chaos_drive(root, sid)
+    assert state == "done"
+    rep = plan.report()
+    assert rep["total_injected"] > 0
+    assert broker.metrics()["requeued_shards"] > 0
+    assert broker.metrics()["quarantined_shards"] == 0
+
+
+def test_same_seed_same_fault_schedule_same_frame(tmp_path):
+    frames, reports = [], []
+    for run in ("a", "b"):
+        root = str(tmp_path / run)
+        plan = CHAOS_SCHEDULES["torn-writes"](seed=7)
+        with plan.active():
+            client = FarmClient(root)
+            sid = client.submit(mk_study())
+            _, state = chaos_drive(root, sid)
+            assert state == "done"
+            frames.append(client.result(sid, timeout=5))
+        reports.append(plan.report()["injected"])
+    assert frames[0].equals(frames[1])
+    assert reports[0] == reports[1]      # the schedule itself replayed
+
+
+# ---- quarantine: the poison-shard budget ------------------------------------
+
+def test_poison_shard_quarantined_into_failed_cells(tmp_path):
+    """A shard that can never complete (its worker dies on every claim)
+    burns its attempts budget and degrades to failed cells — the study
+    completes instead of requeue-looping forever."""
+    root = str(tmp_path / "farm")
+    client = FarmClient(root)
+    sid = client.submit(mk_study())
+    plan = FaultPlan(0, {"worker.claimed": FaultRule("crash", p=1.0)})
+    with plan.active():
+        broker, state = chaos_drive(root, sid, max_shard_attempts=3)
+    assert state == "done"
+    assert broker.metrics()["quarantined_shards"] >= 1
+    res = client.result(sid, timeout=5)
+    assert len(res) == 4
+    # every claim died, so every shard quarantined: all cells failed
+    failed = res.failed_cells
+    assert failed == [0, 1, 2, 3] and len(res.ok()) == 0
+    assert all(res["cell_status"][i] == 1.0 for i in failed)
+    st = client.status(sid)
+    assert st["cells_failed"] == len(failed)
+    assert st["cells_done"] == 4         # quarantined cells count done
+
+
+# ---- broker recovery machinery ----------------------------------------------
+
+def test_corrupt_status_rebuilt_from_manifest(tmp_path):
+    """kill -9 the broker, corrupt its status.json: a successor rebuilds
+    from the manifest and the study converges to the same frame."""
+    root = str(tmp_path / "farm")
+    client = FarmClient(root)
+    local = mk_study().run()
+    sid = client.submit(mk_study())
+    Broker(root, max_shard_cells=2).step()          # ingest, then "crash"
+    dirs = FarmDirs(root)
+    with open(dirs.status_path(sid), "w") as f:
+        f.write('{"study_id": "x", "state": "runn')  # torn mid-write
+    broker2 = Broker(root, max_shard_cells=2)       # fresh process
+    st = client.status(sid)
+    assert st.get("state") == "running" and "recovered_at" in st
+    workers = [Worker(root, "w0")]
+    for _ in range(50):
+        if client.status(sid).get("state") != "running":
+            break
+        for w in workers:
+            w.step()
+        broker2.step()
+    assert client.status(sid)["state"] == "done"
+    assert client.result(sid, timeout=5).equals(local)
+
+
+def test_done_status_torn_after_the_fact_is_self_healed(tmp_path):
+    """Status is only written on change — a torn write landing on the
+    terminal transition must be repaired by the live broker's sweep,
+    or the study stays unobservable forever."""
+    root = str(tmp_path / "farm")
+    client = FarmClient(root)
+    sid = client.submit(mk_study())
+    broker = Broker(root, max_shard_cells=2)
+    workers = [Worker(root, "w0")]
+    broker.step()
+    while client.status(sid).get("state") == "running":
+        if not workers[0].step():
+            broker.step()
+    assert client.status(sid)["state"] == "done"
+    dirs = FarmDirs(root)
+    with open(dirs.status_path(sid), "w") as f:
+        f.write('{"study_id"')                       # torn terminal write
+    assert client.status(sid).get("state") == "queued"  # unreadable
+    broker.step()                                    # self-heal sweep
+    assert client.status(sid)["state"] == "done"
+
+
+def test_unreadable_result_patience_then_reenqueue(tmp_path):
+    """A result file that stays unparseable is tolerated for
+    `result_patience` passes (mid-write race), then deleted; the
+    reconcile pass re-enqueues the shard from the manifest and a
+    healthy worker completes the study."""
+    root = str(tmp_path / "farm")
+    client = FarmClient(root)
+    local = mk_study().run()
+    sid = client.submit(mk_study())
+    broker = Broker(root, max_shard_cells=2, result_patience=2)
+    broker.step()
+    # consume one shard as a sick worker: claim, write a torn result, ack
+    spool, dirs = FileSpool(root), FarmDirs(root)
+    item = spool.claim(SHARDS_TOPIC, "sick")
+    assert item is not None
+    shard = int(item.payload["shard"])
+    os.makedirs(dirs.results_dir(sid), exist_ok=True)
+    with open(dirs.shard_result_path(sid, shard), "w") as f:
+        f.write('{"study_id": "torn')
+    spool.ack(item)
+    # healthy worker drains the rest; broker waits out its patience,
+    # deletes the torn file, reconciles, and re-delivers the shard
+    w = Worker(root, "healthy")
+    for _ in range(30):
+        if client.status(sid).get("state") != "running":
+            break
+        while w.step():
+            pass
+        broker.step()
+    assert client.status(sid)["state"] == "done"
+    assert client.result(sid, timeout=5).equals(local)
+    att = client.status(sid).get("attempts", {})
+    assert att.get(str(shard), 0) >= 1
+
+
+def test_error_shard_requeued_within_budget(tmp_path):
+    """A worker-reported shard error is a failed attempt: the broker
+    re-enqueues it (bounded), and a healthy retry completes the study —
+    the old behavior poisoned the whole study on first error."""
+    root = str(tmp_path / "farm")
+    client = FarmClient(root)
+    local = mk_study().run()
+    sid = client.submit(mk_study())
+    broker = Broker(root, max_shard_cells=2)
+    broker.step()
+    spool, dirs = FileSpool(root), FarmDirs(root)
+    item = spool.claim(SHARDS_TOPIC, "sick")
+    shard = int(item.payload["shard"])
+    os.makedirs(dirs.results_dir(sid), exist_ok=True)
+    with open(dirs.shard_result_path(sid, shard), "w") as f:
+        json.dump({"study_id": sid, "shard": shard, "worker": "sick",
+                   "error": "RuntimeError: transient"}, f)
+    spool.ack(item)
+    w = Worker(root, "healthy")
+    for _ in range(30):
+        if client.status(sid).get("state") != "running":
+            break
+        while w.step():
+            pass
+        broker.step()
+    assert client.status(sid)["state"] == "done"
+    assert client.result(sid, timeout=5).equals(local)

@@ -62,3 +62,29 @@ def test_conservation_bytes():
     t, a, w = linear_trace(100, gran_bytes=64)
     res = simulate_dram(t, a, w, DramConfig(), gran_bytes=64)
     assert float(res.bytes_moved) == 100 * 64
+
+
+def test_dram_config_rejects_nonsense_fields():
+    """Nonsensical DRAM parameters fail loudly at construction — a
+    zero timing or queue depth would otherwise surface as a hang or a
+    silent divide-by-zero deep inside the cycle model."""
+    with pytest.raises(ValueError, match="channels"):
+        DramConfig(channels=0)
+    with pytest.raises(ValueError, match="banks_per_channel"):
+        DramConfig(banks_per_channel=-1)
+    with pytest.raises(ValueError, match="row_bytes"):
+        DramConfig(row_bytes=0)
+    with pytest.raises(ValueError, match="burst_bytes"):
+        DramConfig(burst_bytes=0)
+    for timing in ("tRCD", "tRP", "tCAS", "tBURST"):
+        with pytest.raises(ValueError, match=timing):
+            DramConfig(**{timing: 0})
+        with pytest.raises(ValueError, match=timing):
+            DramConfig(**{timing: -3})
+    with pytest.raises(ValueError, match="read_queue"):
+        DramConfig(read_queue=0)
+    with pytest.raises(ValueError, match="write_queue"):
+        DramConfig(write_queue=0)
+    with pytest.raises(ValueError, match="bandwidth"):
+        DramConfig(bandwidth_bytes_per_cycle=0.0)
+    DramConfig()  # defaults stay valid

@@ -210,6 +210,59 @@ def test_killed_worker_shard_requeued_and_study_completes(tmp_path):
     assert broker.metrics()["requeued_shards"] == 1
 
 
+def test_lease_expiry_race_folds_exactly_one_result(tmp_path):
+    """The at-least-once race: a shard is requeued while its original
+    owner is still finishing. The slow owner's late duplicate result
+    and stale ack must be absorbed — exactly one folded result, frame
+    identical to the fault-free run."""
+    root = str(tmp_path / "farm")
+    client = FarmClient(root)
+    broker = Broker(root, max_shard_cells=2, lease_seconds=0.0)
+    local = mk_study().run()
+    sid = client.submit(mk_study())
+    broker.step()
+    spool = FileSpool(root)
+    slow = spool.claim(SHARDS_TOPIC, "slow-worker")   # A claims, stalls
+    assert slow is not None
+    out = broker.step()                      # lease expired -> requeued
+    assert out["requeued"] == 1
+    fast = Worker(root, "fast-worker")       # B does all the work
+    while client.status(sid).get("state") == "running":
+        if not fast.step():
+            broker.step()
+    assert client.status(sid)["state"] == "done"
+    assert client.status(sid)["cells_done"] == 4
+    # A wakes up: writes its duplicate result (same bytes, different
+    # worker id) and acks the long-requeued claim
+    shard = int(slow.payload["shard"])
+    path = broker.dirs.shard_result_path(sid, shard)
+    dup = json.load(open(path))
+    dup["worker"] = "slow-worker"
+    with open(path + ".tmp", "w") as f:
+        json.dump(dup, f)
+    os.replace(path + ".tmp", path)
+    spool.ack(slow)                          # stale ack: no-op
+    broker.step()
+    st = client.status(sid)
+    assert st["state"] == "done" and st["cells_done"] == 4  # folded once
+    assert client.result(sid, timeout=5).equals(local)
+
+
+def test_requeue_stale_reads_the_fault_clock(tmp_path):
+    """Lease ages come from faults.fs.now(): an injected clock skew
+    turns a fresh claim stale at once (the lease-storm mechanism)."""
+    from repro.faults import FaultPlan, FaultRule
+    sp = FileSpool(str(tmp_path))
+    sp.put("t", {"x": 1})
+    a = sp.claim("t", "w0")
+    assert sp.requeue_stale("t", lease_seconds=3600.0) == []
+    plan = FaultPlan(0, {"clock": FaultRule("skew", skew=1e6, p=1.0)})
+    with plan.active():
+        assert sp.requeue_stale("t", lease_seconds=3600.0) == [a.item_id]
+    b = sp.claim("t", "w1")
+    assert b is not None and b.payload == {"x": 1}
+
+
 def test_cancellation_drops_pending_shards(farm):
     client, broker, workers = farm
     sid = client.submit(mk_study())

@@ -1,0 +1,233 @@
+"""repro.faults unit contracts: deterministic schedules, the fs shims,
+retry/backoff, and the spool's torn-write hardening.
+
+The chaos *end-to-end* soaks live in test_chaos.py; this module pins the
+plane's local semantics — same seed => same schedule, bounded rules stop
+firing, torn/corrupt writes land the documented bytes, `atomic_write_json`
+retries transient OSErrors, and `FileSpool.put` never publishes a torn
+staging file as a poison message.
+"""
+import errno
+import json
+import os
+
+import pytest
+
+from repro.farm.queue import FileSpool
+from repro.faults import (CHAOS_SCHEDULES, FaultPlan, FaultRule,
+                          InjectedCrash, active_plan, backoff_delays,
+                          chaos_schedule, with_retries)
+from repro.faults import fs as ffs
+from repro.faults.plan import ENV_VAR
+
+
+# ---- FaultPlan decision procedure ------------------------------------------
+
+def _schedule(plan, site, kinds, n):
+    return [plan.decide(site, kinds) is not None for _ in range(n)]
+
+
+def test_same_seed_replays_identical_schedule():
+    mk = lambda: FaultPlan(7, {"x": FaultRule("os_error", p=0.5)})
+    a = _schedule(mk(), "x", ("os_error",), 64)
+    b = _schedule(mk(), "x", ("os_error",), 64)
+    assert a == b
+    assert any(a) and not all(a)       # p=0.5 actually branches
+    c = _schedule(FaultPlan(8, {"x": FaultRule("os_error", p=0.5)}),
+                  "x", ("os_error",), 64)
+    assert a != c                      # different seed, different schedule
+
+
+def test_times_caps_total_injections():
+    plan = FaultPlan(0, {"x": FaultRule("crash", p=1.0, times=3)})
+    fired = _schedule(plan, "x", ("crash",), 10)
+    assert sum(fired) == 3 and fired[:3] == [True] * 3
+
+
+def test_after_skips_the_first_calls():
+    plan = FaultPlan(0, {"x": FaultRule("torn", p=1.0, after=2, times=1)})
+    fired = _schedule(plan, "x", ("torn",), 5)
+    assert fired == [False, False, True, False, False]
+
+
+def test_site_globs_and_kind_filter():
+    plan = FaultPlan(0, {"worker.*": FaultRule("crash", p=1.0)})
+    assert plan.decide("worker.claimed", ("crash",)) is not None
+    assert plan.decide("broker.status", ("crash",)) is None
+    # a crash-only rule is invisible to a write-kind query
+    assert plan.decide("worker.result", ("os_error", "torn")) is None
+
+
+def test_report_counts_what_fired():
+    plan = FaultPlan(0, {"x": FaultRule("os_error", p=1.0, times=2)})
+    _schedule(plan, "x", ("os_error",), 5)
+    rep = plan.report()
+    assert rep["injected"] == {"x:os_error": 2}
+    assert rep["total_injected"] == 2 and rep["seed"] == 0
+
+
+def test_rule_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultRule("meltdown")
+    with pytest.raises(ValueError, match="probability"):
+        FaultRule("torn", p=1.5)
+    with pytest.raises(ValueError, match="times"):
+        FaultRule("torn", times=-1)
+
+
+def test_json_round_trip_and_env_activation(monkeypatch):
+    plan = FaultPlan(3, {"spool.put": [FaultRule("torn", p=0.5, times=2)],
+                         "clock": FaultRule("skew", skew=100.0)})
+    back = FaultPlan.from_json(plan.to_json())
+    assert back.seed == 3 and back.rules == plan.rules
+    # env activation: a worker subprocess builds its plan from REPRO_FAULTS
+    monkeypatch.setenv(ENV_VAR, plan.to_json())
+    monkeypatch.setattr("repro.faults.plan._ACTIVE", None)
+    monkeypatch.setattr("repro.faults.plan._ENV_CHECKED", False)
+    got = active_plan()
+    assert got is not None and got.seed == 3
+    monkeypatch.setattr("repro.faults.plan._ACTIVE", None)
+    monkeypatch.setattr("repro.faults.plan._ENV_CHECKED", True)
+    assert active_plan() is None
+
+
+def test_bad_env_schedule_is_no_schedule(monkeypatch):
+    monkeypatch.setenv(ENV_VAR, "{not json")
+    monkeypatch.setattr("repro.faults.plan._ACTIVE", None)
+    monkeypatch.setattr("repro.faults.plan._ENV_CHECKED", False)
+    assert active_plan() is None
+
+
+# ---- fs shims ---------------------------------------------------------------
+
+def test_shims_are_passthrough_without_a_plan(tmp_path):
+    p = tmp_path / "a.json"
+    ffs.write_text(str(p), '{"v": 1}', site="anything")
+    assert json.load(open(p)) == {"v": 1}
+    ffs.crash_point("worker.claimed")          # no-op
+    assert abs(ffs.now() - __import__("time").time()) < 5.0
+
+
+def test_torn_and_corrupt_writes_land_unparseable_bytes(tmp_path):
+    plan = FaultPlan(0, {"t": FaultRule("torn", p=1.0, times=1),
+                         "c": FaultRule("corrupt", p=1.0, times=1)})
+    text = json.dumps({"k": list(range(50))})
+    with plan.active():
+        ffs.write_text(str(tmp_path / "t.json"), text, site="t")
+        ffs.write_text(str(tmp_path / "c.json"), text, site="c")
+    torn = open(tmp_path / "t.json").read()
+    assert torn == text[:len(torn)] and 0 < len(torn) < len(text)
+    for name in ("t.json", "c.json"):
+        with pytest.raises(ValueError):
+            json.load(open(tmp_path / name))
+
+
+def test_crash_point_is_base_exception():
+    plan = FaultPlan(0, {"x": FaultRule("crash", p=1.0, times=1)})
+    with plan.active():
+        with pytest.raises(InjectedCrash):
+            try:
+                ffs.crash_point("x")
+            except Exception:  # noqa: BLE001 — the guard under test
+                pytest.fail("InjectedCrash must not be an Exception: "
+                            "except-Exception guards would absorb kills")
+
+
+def test_clock_skew_applies_per_scheduled_read():
+    plan = FaultPlan(0, {"clock": FaultRule("skew", skew=1e6, p=1.0,
+                                            times=1)})
+    import time as _t
+    with plan.active():
+        assert ffs.now() - _t.time() > 9e5       # skewed once
+        assert abs(ffs.now() - _t.time()) < 5.0  # budget spent
+
+
+def test_atomic_write_json_retries_transient_errors(tmp_path):
+    p = tmp_path / "out.json"
+    plan = FaultPlan(0, {"s": FaultRule("os_error", p=1.0, times=3)})
+    with plan.active():
+        ffs.atomic_write_json(str(p), {"ok": 1}, site="s")
+    assert json.load(open(p)) == {"ok": 1}
+    assert plan.report()["injected"] == {"s:os_error": 3}
+    assert not [n for n in os.listdir(tmp_path) if ".tmp." in n]
+
+
+def test_atomic_write_json_exhausts_retries_loudly(tmp_path):
+    plan = FaultPlan(0, {"s": FaultRule("os_error", p=1.0)})  # unbounded
+    with plan.active():
+        with pytest.raises(OSError) as ei:
+            ffs.atomic_write_json(str(tmp_path / "x.json"), {}, site="s",
+                                  retries=2)
+    assert ei.value.errno == errno.ENOSPC
+    assert not os.path.exists(tmp_path / "x.json")
+
+
+# ---- retry/backoff ----------------------------------------------------------
+
+def test_backoff_delays_grow_with_bounded_jitter():
+    import random
+    d = backoff_delays(retries=5, base=0.01, factor=2.0,
+                       rng=random.Random(0))
+    assert len(d) == 5
+    for i, x in enumerate(d):
+        nominal = 0.01 * 2.0 ** i
+        assert 0.5 * nominal <= x < 1.5 * nominal
+    assert d == backoff_delays(retries=5, base=0.01, factor=2.0,
+                               rng=random.Random(0))
+
+
+def test_with_retries_passes_through_and_reraises():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError(errno.EIO, "eio")
+        return "ok"
+
+    assert with_retries(flaky, sleep=lambda s: None) == "ok"
+    assert len(calls) == 3
+    with pytest.raises(ValueError):   # non-retryable passes straight out
+        with_retries(lambda: (_ for _ in ()).throw(ValueError("x")),
+                     sleep=lambda s: None)
+
+
+# ---- spool put hardening ----------------------------------------------------
+
+def test_spool_put_survives_torn_staging_write(tmp_path):
+    """A torn staging write must never publish a poison message: put
+    detects it on read-back, retries, and the published item parses."""
+    sp = FileSpool(str(tmp_path))
+    plan = FaultPlan(0, {"spool.put": FaultRule("torn", p=1.0, times=2)})
+    with plan.active():
+        item_id = sp.put("t", {"study_id": "s", "cells": list(range(40))})
+    assert plan.report()["injected"] == {"spool.put:torn": 2}
+    got = sp.claim("t", "w")
+    assert got is not None and got.item_id == item_id
+    assert got.payload["cells"] == list(range(40))
+
+
+def test_spool_claim_drops_wrong_shape_payloads(tmp_path):
+    sp = FileSpool(str(tmp_path))
+    sp.put("t", {"ok": True})
+    # hand-plant a non-dict JSON file in pending/ (valid JSON, wrong shape)
+    pending = os.path.join(str(tmp_path), "t", "pending")
+    with open(os.path.join(pending, "p0000-0-zz.json"), "w") as f:
+        f.write("[1, 2, 3]")
+    got = sp.claim("t", "w")
+    assert got is not None and got.payload == {"ok": True}
+    assert sp.depth("t") == 0        # the poison file was consumed too
+
+
+# ---- schedule registry ------------------------------------------------------
+
+def test_chaos_schedule_registry():
+    assert set(CHAOS_SCHEDULES) == {"worker-kills", "torn-writes",
+                                    "lease-storms"}
+    for name in CHAOS_SCHEDULES:
+        plan = chaos_schedule(name, 5)
+        assert plan.seed == 5
+        # every rule bounded: chaos runs provably stop injecting
+        assert all(r.times is not None for _, r in plan.rules)
+    with pytest.raises(KeyError):
+        chaos_schedule("surprise")

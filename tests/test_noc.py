@@ -266,7 +266,12 @@ def test_noc_config_validation():
         NocConfig(enabled=True, link_bandwidth_bytes_per_cycle=0.0)
     with pytest.raises(ValueError, match="buffer_flits"):
         NocConfig(enabled=True, buffer_flits=0)
-    # disabled configs may carry default link fields without validation
+    # link fields are validated even while disabled: a bad value must
+    # not lie dormant until someone replace()s enabled=True
+    with pytest.raises(ValueError, match="flit_bytes"):
+        NocConfig(enabled=False, flit_bytes=0)
+    with pytest.raises(ValueError, match="link_bandwidth"):
+        NocConfig(enabled=False, link_bandwidth_bytes_per_cycle=-1.0)
     NocConfig(enabled=False)
 
 

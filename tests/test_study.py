@@ -363,3 +363,120 @@ def test_study_validation_errors():
     with pytest.raises(KeyError):
         (Study().designs(preset_grid(array=[16]))
          .workloads({"w": OPS_A[:1]}).metrics("not_a_metric").run())
+
+
+# ---- failure semantics (ISSUE 8) ------------------------------------------
+
+def test_evaluator_exception_degrades_to_failed_cell():
+    """One sick cell must not poison the study: its row gets
+    cell_status 1.0 + NaN metrics, the rest stay healthy."""
+    def ev(cfg, ops, fid):
+        if cfg.cores[0].rows == 16:
+            raise RuntimeError("sick cell")
+        return {"m": float(cfg.cores[0].rows), "edp": 1.0}
+
+    res = (Study("sick").designs(preset_grid(array=[8, 16, 32]))
+           .workloads({"w": OPS_B[:1]}).fidelity("fast")
+           .evaluator(ev).run())
+    assert len(res) == 3
+    assert res.failed_cells == [1]
+    assert res["cell_status"][1] == 1.0 and np.isnan(res["m"][1])
+    ok = res.ok()
+    assert len(ok) == 2 and (ok["cell_status"] == 0.0).all()
+    assert res.argbest("m") == 0          # NaN row never wins
+    assert res.best("m")["design"] == res["design"][0]
+
+
+def test_non_finite_canonical_metrics_flag_cell_failed():
+    """NaN anywhere fails a cell; Inf fails only canonical metric
+    columns — a custom evaluator column may legitimately be Inf."""
+    def ev(cfg, ops, fid):
+        r = cfg.cores[0].rows
+        if r == 8:
+            return {"edp": float("nan")}
+        if r == 16:
+            return {"total_cycles": float("inf"), "edp": 1.0}
+        return {"edp": 2.0, "stall_inflation": float("inf")}
+
+    res = (Study("nonfinite").designs(preset_grid(array=[8, 16, 32]))
+           .workloads({"w": OPS_B[:1]}).fidelity("fast")
+           .evaluator(ev).run())
+    assert res.failed_cells == [0, 1]
+    assert res["cell_status"][2] == 0.0
+    assert res["stall_inflation"][2] == float("inf")
+
+
+def test_argbest_all_failed_raises_loudly():
+    def ev(cfg, ops, fid):
+        return {"m": float("nan")}
+    res = (Study("allbad").designs(preset_grid(array=[8, 16]))
+           .workloads({"w": OPS_B[:1]}).fidelity("fast")
+           .evaluator(ev).run())
+    assert res.failed_cells == [0, 1]
+    with pytest.raises(ValueError, match="no finite"):
+        res.argbest("m")
+
+
+def test_pareto_excludes_failed_rows():
+    """NaN compares false against everything: without the finite mask a
+    failed cell would always survive as 'non-dominated'."""
+    cols = {
+        "design": np.array(["d0", "d1", "d2"], dtype=object),
+        "workload": np.array(["w", "w", "w"], dtype=object),
+        "fidelity": np.array(["fast"] * 3, dtype=object),
+        "a": np.array([1.0, np.nan, 2.0]),
+        "b": np.array([2.0, np.nan, 1.0]),
+        "cell_status": np.array([0.0, 1.0, 0.0]),
+    }
+    res = StudyResult(cols, {"design": ["d0", "d1", "d2"],
+                             "workload": ["w"], "fidelity": ["fast"]})
+    front = res.pareto("a", "b")
+    assert sorted(front["design"]) == ["d0", "d2"]
+
+
+def test_failed_cells_never_cached(tmp_path):
+    """A transient failure must re-execute next run — caching a failed
+    cell would make it permanent."""
+    cache = str(tmp_path / "cells")
+    attempt = {"n": 0}
+
+    def ev(cfg, ops, fid):
+        if cfg.cores[0].rows == 16:
+            attempt["n"] += 1
+            if attempt["n"] == 1:
+                raise RuntimeError("transient")
+        return {"m": float(cfg.cores[0].rows)}
+
+    mk = lambda: (Study("retry").designs(preset_grid(array=[8, 16, 32]))
+                  .workloads({"w": OPS_B[:1]}).fidelity("fast")
+                  .evaluator(ev).cache(cache))
+    first = mk().run()
+    assert first.failed_cells == [1] and first.executed_cells == 2
+    second = mk().run()             # healthy cells hit, sick cell retries
+    assert second.failed_cells == [] and not np.isnan(second["m"]).any()
+    assert second.cache_hits == 2 and second.executed_cells == 1
+
+
+def test_checkpoint_resume_after_midrun_crash(tmp_path):
+    """Cells checkpoint to the cache as they complete: a run killed
+    mid-study resumes from its last completed cell."""
+    from repro.faults import InjectedCrash
+    cache = str(tmp_path / "cells")
+    calls = []
+
+    def ev(cfg, ops, fid):
+        calls.append(cfg.cores[0].rows)
+        if len(calls) == 3:
+            raise InjectedCrash("kill -9 mid-study")
+        return {"m": float(cfg.cores[0].rows)}
+
+    mk = lambda: (Study("ckpt").designs(preset_grid(array=[8, 16, 32, 64]))
+                  .workloads({"w": OPS_B[:1]}).fidelity("fast")
+                  .evaluator(ev).cache(cache))
+    with pytest.raises(InjectedCrash):
+        mk().run()
+    assert len(calls) == 3          # two completed + the killed one
+    res = mk().run()                # resumes: only 2 cells re-execute
+    assert res.cache_hits == 2 and res.executed_cells == 2
+    assert res.failed_cells == []
+    assert list(res["m"]) == [8.0, 16.0, 32.0, 64.0]

@@ -204,3 +204,22 @@ def test_contention_nop_offsets_respected():
                                       spec=TraceSpec(cap=1024))
     assert len(r.per_core_stall_shared) == 2
     assert r.row_hits + r.row_misses + r.row_conflicts > 0
+
+
+def test_trace_spec_rejects_nonsense_fields():
+    """TraceSpec is the static (hashable) half of the trace kernels —
+    a zero cap or unknown layout must fail at construction, not as a
+    shape error inside a jitted sweep."""
+    with pytest.raises(ValueError, match="cap"):
+        TraceSpec(cap=0)
+    with pytest.raises(ValueError, match="gran_bytes"):
+        TraceSpec(gran_bytes=0)
+    with pytest.raises(ValueError, match="layout"):
+        TraceSpec(layout="diagonal")
+    with pytest.raises(ValueError, match="tile"):
+        TraceSpec(tile_r=0)
+    with pytest.raises(ValueError, match="tile"):
+        TraceSpec(tile_c=-2)
+    with pytest.raises(ValueError, match="stride_elems"):
+        TraceSpec(stride_elems=0)
+    TraceSpec()  # defaults stay valid
