@@ -172,6 +172,51 @@ def run(smoke: bool = False):
     artifact["farm_workers"] = 2
     artifact["farm_cells_per_sec"] = fcps
 
+    # search layer (ISSUE 9): a seeded smoke search (screen + one propose
+    # round, fast fidelity, cold cache per repeat) over a 96-cell space.
+    # search_evals_per_sec tracks the driver's scheduling overhead on top
+    # of the batched round studies; CI gates it. The exhaustive fraction
+    # is recorded so the budget trajectory is visible across PRs (the
+    # flagship search_edp gates <= 5% in its own claims).
+    import dataclasses as _dc
+    from repro.api import get_preset
+    from repro.core.accelerator import CoreConfig
+    from repro.search import SearchDriver, SearchSpace, choice, \
+        int_log_range
+
+    def _sram(cfg, kb):
+        s = int(kb) * 1024 // 3
+        return cfg.with_(memory=_dc.replace(
+            cfg.memory, ifmap_sram_bytes=s, filter_sram_bytes=s,
+            ofmap_sram_bytes=s))
+
+    sspace = SearchSpace("bench-search", get_preset("edge-8"), [
+        choice("array", (8, 16, 32),
+               lambda c, v: c.with_(cores=(CoreConfig(rows=v, cols=v),)),
+               short="a"),
+        int_log_range("sram_kb", 64, 1024, 16, _sram, short="s"),
+        choice("dataflow", ("ws", "os"),
+               lambda c, v: c.with_(dataflow=v), short=""),
+    ])
+
+    def search_run():
+        with tempfile.TemporaryDirectory() as cdir:
+            return SearchDriver(sspace, {"g": op}, seed=0, metric="edp",
+                                ladder=("fast",), screen=24, eta=4.0,
+                                explore_rounds=1, cache=cdir).run()
+
+    sres2, us_search = timed(search_run, repeat=3)
+    assert sres2.executed_cells == sres2.spent_evals, \
+        "cold-cache search must execute every requested eval"
+    seps = sres2.spent_evals / (us_search / 1e6)
+    sfrac = sres2.spent_evals / sres2.exhaustive_cells
+    rows.append((f"search_{sres2.spent_evals}_evals", us_search,
+                 f"evals_per_sec={seps:.0f};vs_exhaustive={sfrac:.3f};"
+                 f"winner={sres2.winner['design']}"))
+    artifact["search_evals"] = sres2.spent_evals
+    artifact["search_evals_per_sec"] = seps
+    artifact["search_evals_vs_exhaustive"] = sfrac
+
     # the retained reference scan on the same grid, for the ISSUE 3
     # chunked-vs-reference engine comparison (single repeat: it is slow)
     rsim = Simulator("paper-32", fidelity="trace", engine="reference")

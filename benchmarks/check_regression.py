@@ -27,6 +27,9 @@ GATES = {
     # farm throughput folds in service overhead (spool I/O, broker
     # scheduling), which is noisier than pure kernel time: wider gate
     "farm_cells_per_sec": 0.3,
+    # search folds in per-round study compilation + cell-cache I/O on
+    # top of the batched kernels: wider gate like the farm's
+    "search_evals_per_sec": 0.3,
 }
 
 

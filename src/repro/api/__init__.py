@@ -27,6 +27,10 @@ from .presets import (as_sparsity, get_preset, list_presets, preset_grid,
 from .simulator import (Simulator, SweepResult, as_config, as_workload)
 from .study import (Study, StudyPlan, StudyResult, get_study, list_studies,
                     register_study, studies)
+# the search layer registers its studies (studies.search_edp) on import;
+# imported last so repro.search's own imports of repro.api.* submodules
+# find them already initialized
+from .. import search as _search  # noqa: E402,F401
 
 __all__ = [
     "AcceleratorConfig", "FIDELITIES", "NetworkReport", "OpResult",

@@ -222,6 +222,33 @@ def _ws64_sparse(n: int = 2, m: int = 4,
         sparsity=SparsityConfig(enabled=True, n=n, m=m, row_wise=row_wise))
 
 
+@register_preset("table-v-corner")
+def _table_v_corner(array: int = 64, sram_kb: int = 8192,
+                    dataflow: str = "ws", channels: int = 2,
+                    bandwidth: float = 19.2,
+                    layout_banks: int = 0) -> AcceleratorConfig:
+    """One cell of the Table-V design-space search (`repro.search`,
+    studies.search_edp): a single-core `array`x`array` systolic core with
+    `sram_kb` KiB of operand SRAM split evenly across the three operand
+    buffers, DRAM capped at paper-class provisioning (`channels` channels
+    of `bandwidth` bytes/cycle), optionally the data-layout stage on
+    `layout_banks` banks. Defaults are the paper's EdP winner; the
+    search space's axes perturb exactly these kwargs."""
+    from ..core.accelerator import DramConfig, LayoutConfig
+    sram = int(sram_kb) * 1024 // 3
+    cfg = AcceleratorConfig(
+        cores=(CoreConfig(rows=array, cols=array),),
+        dataflow=dataflow,
+        memory=MemoryConfig(ifmap_sram_bytes=sram, filter_sram_bytes=sram,
+                            ofmap_sram_bytes=sram),
+        dram=DramConfig(channels=channels,
+                        bandwidth_bytes_per_cycle=bandwidth))
+    if layout_banks:
+        cfg = cfg.with_(layout=LayoutConfig(enabled=True,
+                                            num_banks=layout_banks))
+    return cfg
+
+
 @register_preset("edge-8")
 def _edge(dataflow: str = "ws") -> AcceleratorConfig:
     """A small edge-class design: 8x8 array, 192 KiB of operand SRAM."""

@@ -161,6 +161,10 @@ class StudyResult:
     them, and `argbest`/`pareto` never pick them.
     """
 
+    # every in-process frame speaks the current schema; concat() checks
+    # it so frames from a future/foreign schema can never silently mix
+    schema_version = RESULT_SCHEMA_VERSION
+
     def __init__(self, columns: Dict[str, np.ndarray],
                  axes: Dict[str, List[str]], *,
                  executed_cells: int = 0, cache_hits: int = 0,
@@ -170,6 +174,9 @@ class StudyResult:
         self.executed_cells = executed_cells
         self.cache_hits = cache_hits
         self._claims = list(claims or [])
+        # run-time annotations (e.g. the search layer's accounting);
+        # like claims, meta does not survive to_json/to_csv round-trips
+        self.meta: Dict[str, object] = {}
 
     # ---- basic access ------------------------------------------------------
     def __len__(self) -> int:
@@ -198,9 +205,15 @@ class StudyResult:
         return [self.row(i) for i in range(len(self))]
 
     def equals(self, other: "StudyResult") -> bool:
+        # positional NaN counts as equal: a failed cell round-trips as
+        # the same failed cell, and replay identity must not break on it
+        def _eq(a: np.ndarray, b: np.ndarray) -> bool:
+            if a.dtype.kind == "f" and b.dtype.kind == "f":
+                return np.array_equal(a, b, equal_nan=True)
+            return np.array_equal(a, b)
         return (list(self.columns) == list(other.columns)
                 and self.axes == other.axes
-                and all(np.array_equal(self.columns[k], other.columns[k])
+                and all(_eq(self.columns[k], other.columns[k])
                         for k in self.columns))
 
     # ---- relational ops ----------------------------------------------------
@@ -299,6 +312,73 @@ class StudyResult:
             if dominated.any():
                 keep[i] = False
         return self._subset(keep)
+
+    def topk(self, metric: str, k: int) -> "StudyResult":
+        """The `k` lowest-`metric` rows as a subframe, sorted ascending
+        (stable: original row order breaks ties). NaN-safe — rows with a
+        non-finite metric value (failed cells) never place, so the
+        subframe may hold fewer than `k` rows."""
+        if k < 0:
+            raise ValueError(f"topk k must be >= 0, got {k}")
+        vals = np.asarray(self[metric], dtype=float)
+        finite = np.isfinite(vals)
+        order = np.argsort(np.where(finite, vals, np.inf), kind="stable")
+        return self._subset(order[:min(int(k), int(finite.sum()))])
+
+    @staticmethod
+    def concat(frames: Sequence["StudyResult"]) -> "StudyResult":
+        """Row-concatenate frames (the search layer's round folding).
+
+        Columns are the union in first-seen order: a metric missing from
+        a frame fills with NaN (NaN-safe consumers — topk/pareto/argbest
+        — already ignore it); axis columns must be present in every
+        frame. Axis vocabularies merge in first-seen order. Every frame
+        must carry the current result schema version — mixing schemas
+        silently is exactly the bug this check exists for. Claims and
+        meta do not propagate; executed/cache-hit counts sum.
+        """
+        frames = list(frames)
+        if not frames:
+            raise ValueError("concat() needs at least one frame")
+        for f in frames:
+            if getattr(f, "schema_version", None) != RESULT_SCHEMA_VERSION:
+                raise ValueError(
+                    f"cannot concat frame with schema_version "
+                    f"{getattr(f, 'schema_version', None)!r} != supported "
+                    f"{RESULT_SCHEMA_VERSION}")
+        names: List[str] = []
+        for f in frames:
+            for c in f.column_names():
+                if c not in names:
+                    names.append(c)
+        cols: Dict[str, np.ndarray] = {}
+        for c in names:
+            if c in AXIS_COLUMNS:
+                missing = [i for i, f in enumerate(frames)
+                           if c not in f.columns]
+                if missing:
+                    raise ValueError(
+                        f"axis column {c!r} missing from concat frame(s) "
+                        f"{missing}")
+                cols[c] = np.concatenate(
+                    [np.asarray(f.columns[c], dtype=object)
+                     for f in frames])
+            else:
+                cols[c] = np.concatenate(
+                    [np.asarray(f.columns[c], dtype=np.float64)
+                     if c in f.columns
+                     else np.full(len(f), np.nan) for f in frames])
+        axes: Dict[str, List[str]] = {}
+        for f in frames:
+            for a, vocab in f.axes.items():
+                dst = axes.setdefault(a, [])
+                for v in vocab:
+                    if v not in dst:
+                        dst.append(v)
+        return StudyResult(
+            cols, axes,
+            executed_cells=sum(f.executed_cells for f in frames),
+            cache_hits=sum(f.cache_hits for f in frames))
 
     def compare(self, metric: str, *, axis: str,
                 baseline: str) -> Dict[str, np.ndarray]:
@@ -1326,6 +1406,9 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--json", dest="json_out",
                     help="write the result frame as JSON")
     ap.add_argument("--cache", help="on-disk cell-cache directory")
+    ap.add_argument("--search-log", dest="search_log",
+                    help="write the SearchLog JSON artifact "
+                         "(search studies only)")
     args = ap.parse_args(argv)
 
     factory = _STUDIES[args.study]
@@ -1338,7 +1421,15 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
     res = study.run()
     print(f"study {args.study}: executed {res.executed_cells} cells "
           f"({res.cache_hits} cache hits)")
-    print(res.summary())
+    if len(res) <= 200:
+        print(res.summary())
+    else:
+        # a search frame holds thousands of rows; print its accounting
+        # instead and leave the rows to --csv/--json
+        print(f"{len(res)} rows (row dump suppressed; use --csv/--json)")
+        for k, v in sorted(res.meta.items()):
+            if k != "search_log":
+                print(f"  {k} = {v}")
     claims = res.check_claims()
     for name, ok in claims.items():
         print(f"claim {'PASS' if ok else 'FAIL'}: {name}")
@@ -1349,6 +1440,15 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
         with open(args.json_out, "w") as f:
             f.write(res.to_json())
         print(f"wrote {args.json_out}")
+    if args.search_log:
+        blob = res.meta.get("search_log")
+        if blob is None:
+            print(f"--search-log: {args.study} is not a search study "
+                  f"(no log on its result)")
+            return 1
+        with open(args.search_log, "w") as f:
+            f.write(str(blob))
+        print(f"wrote {args.search_log}")
     return 0 if all(claims.values()) else 1
 
 

@@ -1,0 +1,289 @@
+"""The search layer (repro.search): deterministic space sampling,
+successive-halving promotion, frontier proposals, and the SearchDriver's
+invariants — seeded replay, resume-from-cache accounting, budget
+enforcement, and farm-vs-local bit-identity. The flagship search_edp
+claims run in CI (`python -m repro.api --study search_edp --smoke`); here
+we cover the machinery on a tiny fast space."""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.api import StudyResult, get_preset, get_study
+from repro.core.accelerator import CoreConfig
+from repro.core.workloads import Op
+from repro.search import (FarmExecutor, SearchDriver, SearchLog,
+                          SearchSpace, choice, int_log_range, promote,
+                          propose, rung_sizes)
+
+OPS = [Op("g", 64, 64, 64)]
+
+
+def _apply_sram(cfg, kb):
+    sram = int(kb) * 1024 // 3
+    return cfg.with_(memory=dataclasses.replace(
+        cfg.memory, ifmap_sram_bytes=sram, filter_sram_bytes=sram,
+        ofmap_sram_bytes=sram))
+
+
+def tiny_space(name="tiny"):
+    base = get_preset("edge-8")
+    axes = [
+        choice("array", (8, 16),
+               lambda c, v: c.with_(cores=(CoreConfig(rows=v, cols=v),)),
+               short="a"),
+        int_log_range("sram_kb", 48, 384, 8, _apply_sram, short="s"),
+        choice("dataflow", ("ws", "os"),
+               lambda c, v: c.with_(dataflow=v), short=""),
+    ]
+    validity = [lambda v: not (v["array"] == 16 and v["sram_kb"] < 96)]
+    return SearchSpace(name, base, axes, validity)
+
+
+def mk_driver(space, cache, **kw):
+    kw.setdefault("seed", 0)
+    kw.setdefault("metric", "edp")
+    kw.setdefault("ladder", ("fast",))
+    kw.setdefault("screen", 8)
+    kw.setdefault("eta", 4.0)
+    kw.setdefault("explore_rounds", 2)
+    return SearchDriver(space, {"g64": OPS}, cache=cache, **kw)
+
+
+# ---- space -----------------------------------------------------------------
+
+def test_space_sampling_is_deterministic_and_valid():
+    sp = tiny_space()
+    a = sp.sample(6, seed=0)
+    b = sp.sample(6, seed=0)
+    assert [sp.label(p) for p in a] == [sp.label(p) for p in b]
+    assert all(sp.is_valid(p) for p in a)
+    assert len({sp.label(p) for p in a}) == 6
+    # a different seed draws a different prefix
+    c = sp.sample(6, seed=1)
+    assert [sp.label(p) for p in a] != [sp.label(p) for p in c]
+    # exclusion removes exactly the excluded labels from the stream
+    d = sp.sample(6, seed=0, exclude=[sp.label(a[0])])
+    assert sp.label(a[0]) not in {sp.label(p) for p in d}
+
+
+def test_space_valid_size_neighbors_and_exhaustion():
+    sp = tiny_space()
+    brute = sum(1 for p in sp.points() if sp.is_valid(p))
+    assert sp.valid_size() == brute < len(sp)
+    # neighbors: ±1 per axis, in bounds
+    p = sp.sample(1, seed=3)[0]
+    for nb in sp.neighbors(p):
+        assert sum(i != j for i, j in zip(p.idx, nb.idx)) == 1
+        assert all(0 <= i < len(a.values)
+                   for i, a in zip(nb.idx, sp.axes))
+    # asking for more points than exist returns every valid point once
+    everything = sp.sample(10 * len(sp), seed=0)
+    assert len(everything) == sp.valid_size()
+
+
+def test_config_compiles_axis_values():
+    sp = tiny_space()
+    p = sp.sample(1, seed=7)[0]
+    vals = sp.values(p)
+    cfg = sp.config(p)
+    assert cfg.cores[0].rows == vals["array"]
+    assert cfg.dataflow == vals["dataflow"]
+    assert cfg.memory.ifmap_sram_bytes == vals["sram_kb"] * 1024 // 3
+
+
+# ---- halving ---------------------------------------------------------------
+
+@pytest.fixture()
+def rung_frame():
+    # a: fast+hungry, b: balanced (best edp), c: slow+frugal — all three
+    # pareto-optimal; d dominated by b; e failed (NaN)
+    cols = {
+        "design": np.array(list("abcde"), dtype=object),
+        "workload": np.array(["w"] * 5, dtype=object),
+        "fidelity": np.array(["fast"] * 5, dtype=object),
+        "total_cycles": np.array([1e6, 2e6, 8e6, 3e6, np.nan]),
+        "energy_pj": np.array([9e9, 2e9, 1e9, 3e9, np.nan]),
+        "edp": np.array([9e6, 4e6, 8e6, 9e6, np.nan]),
+        "cell_status": np.array([0, 0, 0, 0, 1.0]),
+    }
+    axes = {"design": list("abcde"), "workload": ["w"],
+            "fidelity": ["fast"]}
+    return StudyResult(cols, axes)
+
+
+def test_rung_sizes_are_ceil_halving():
+    assert rung_sizes(64, 4, 3) == [64, 16, 4]
+    assert rung_sizes(9, 3, 4) == [9, 3, 1, 1]
+    assert rung_sizes(10, 4, 2) == [10, math.ceil(10 / 4)]
+    with pytest.raises(ValueError):
+        rung_sizes(0, 4, 2)
+    with pytest.raises(ValueError):
+        rung_sizes(8, 1, 2)
+
+
+def test_promote_exact_counts_and_nan_safety(rung_frame):
+    # scalar promotion: exactly k, ordered by metric, NaN never promotes
+    assert promote(rung_frame, 2, metric="edp") == ["b", "c"]
+    assert promote(rung_frame, 10, metric="edp") == ["b", "c", "a", "d"]
+    # pareto-rank promotion keeps frontier endpoints alive before the
+    # dominated row, even when their scalar metric is worse
+    objs = ("total_cycles", "energy_pj")
+    assert promote(rung_frame, 3, pareto=objs) == ["b", "c", "a"]
+    assert promote(rung_frame, 4, pareto=objs) == ["b", "c", "a", "d"]
+    assert promote(rung_frame, 0, pareto=objs) == []
+
+
+def test_proposer_is_deterministic_and_tops_up():
+    sp = tiny_space()
+    parents = sp.sample(2, seed=0)
+    labels = [sp.label(p) for p in parents]
+    a = propose(sp, parents, 4, seed=0, round_idx=1, exclude=labels)
+    b = propose(sp, parents, 4, seed=0, round_idx=1, exclude=labels)
+    assert [sp.label(p) for p in a] == [sp.label(p) for p in b]
+    assert len(a) == 4
+    got = {sp.label(p) for p in a}
+    assert not (got & set(labels))
+    # asking for more than the neighborhoods hold fills from sampling
+    big = propose(sp, parents, 20, seed=0, round_idx=1, exclude=labels)
+    assert len(big) == 20
+    assert len({sp.label(p) for p in big}) == 20
+
+
+# ---- driver invariants -----------------------------------------------------
+
+def test_same_seed_same_winner_log_and_frame(tmp_path):
+    sp = tiny_space()
+    r1 = mk_driver(sp, str(tmp_path / "c1")).run()
+    r2 = mk_driver(sp, str(tmp_path / "c2")).run()
+    assert r1.log.digest() == r2.log.digest()
+    assert r1.frame.equals(r2.frame)
+    assert r1.winner == r2.winner
+    # the eval sequence (cohort order per round) is part of the log
+    assert [e["cohort"] for e in r1.log.rounds] == \
+        [e["cohort"] for e in r2.log.rounds]
+    # a different seed screens a different cohort
+    r3 = mk_driver(sp, str(tmp_path / "c3"), seed=1).run()
+    assert r3.log.rounds[0]["cohort"] != r1.log.rounds[0]["cohort"]
+    # log JSON round-trips with a stable digest
+    assert SearchLog.from_json(r1.log.to_json()).digest() == \
+        r1.log.digest()
+
+
+def test_killed_search_resumes_executing_only_new_cells(tmp_path):
+    sp = tiny_space()
+    cache = str(tmp_path / "shared")
+    # "killed" after the screen round: budget stops the search there
+    part = mk_driver(sp, cache, budget=8).run()
+    assert part.spent_evals == 8
+    assert part.executed_cells == 8 and part.cache_hits == 0
+    # resumed full search: the screen's 8 cells come from the cache,
+    # only genuinely new cells execute
+    full = mk_driver(sp, cache).run()
+    assert full.cache_hits == 8
+    assert full.executed_cells == full.spent_evals - 8
+    # and the resumed run is bit-identical to a cold full run
+    cold = mk_driver(sp, str(tmp_path / "cold")).run()
+    assert full.frame.equals(cold.frame)
+    assert full.log.digest() == cold.log.digest()
+
+
+def test_budget_is_a_hard_cap(tmp_path):
+    sp = tiny_space()
+    res = mk_driver(sp, str(tmp_path / "c"), budget=5).run()
+    assert res.spent_evals == 5
+    assert len(res.frame) == 5
+    assert res.log.rounds[-1]["spent_evals"] == 5
+
+
+def test_driver_promotes_ceil_n_over_eta_and_rung_sizes(tmp_path):
+    sp = tiny_space()
+    res = mk_driver(sp, str(tmp_path / "c"), screen=8, eta=4.0,
+                    explore_rounds=1, ladder=("fast", "trace"),
+                    rung_sizes=(3,)).run()
+    kinds = [(e["kind"], e["fidelity"], len(e["cohort"]),
+              len(e["parents"])) for e in res.log.rounds]
+    # screen 8 -> propose from ceil(8/4)=2 parents -> trace rung of 3
+    assert kinds[0] == ("screen", "fast", 8, 0)
+    assert kinds[1] == ("propose", "fast", 2, 2)
+    assert kinds[2] == ("rung", "trace", 3, 3)
+    # the trace rung re-evaluates designs already measured at fast
+    trace = res.frame.filter(fidelity="trace")
+    fast_designs = set(res.frame.filter(fidelity="fast")["design"])
+    assert set(trace["design"]) <= fast_designs
+    assert res.winner["fidelity"] == "trace"
+
+
+def test_cycle_rung_runs_per_op(tmp_path):
+    sp = tiny_space("tiny-cycle")
+    res = mk_driver(sp, str(tmp_path / "c"), screen=4, explore_rounds=0,
+                    ladder=("fast", "cycle"), rung_sizes=(1,)).run()
+    cyc = res.frame.filter(fidelity="cycle")
+    assert len(cyc) == 1
+    assert (cyc["batched"] == 0.0).all()          # per-op engine path
+    assert np.isfinite(cyc["total_cycles"]).all()
+
+
+def test_farm_executed_search_matches_local_bitwise(tmp_path):
+    from repro.farm import Broker, FarmClient, Worker
+    sp = tiny_space()
+    local = mk_driver(sp, str(tmp_path / "local"),
+                      explore_rounds=1).run()
+
+    root = str(tmp_path / "farm")
+    broker = Broker(root, max_shard_cells=4)
+    workers = [Worker(root, f"w{i}") for i in range(2)]
+
+    def pump():
+        for w in workers:
+            w.step()
+        broker.step()
+
+    ex = FarmExecutor(root, pump=pump)
+    farm = SearchDriver(sp, {"g64": OPS}, seed=0, metric="edp",
+                        ladder=("fast",), screen=8, eta=4.0,
+                        explore_rounds=1, cache=ex.cache_dir,
+                        executor=ex).run()
+    assert farm.log.digest() == local.log.digest()
+    assert list(farm.frame.columns) == list(local.frame.columns)
+    for k in farm.frame.columns:
+        assert np.array_equal(farm.frame[k], local.frame[k]), k
+    # the farm's shared dedup cache was warmed by the rounds
+    assert farm.executed_cells == local.executed_cells
+
+
+def test_checkpoint_records_progress(tmp_path):
+    import json
+    sp = tiny_space()
+    ckpt = tmp_path / "ckpt.json"
+    res = mk_driver(sp, str(tmp_path / "c"), explore_rounds=1,
+                    checkpoint=str(ckpt)).run()
+    d = json.loads(ckpt.read_text())
+    assert d["rounds_done"] == len(res.log.rounds)
+    assert d["spent_evals"] == res.spent_evals
+    assert d["log_digest"] == res.log.digest()
+
+
+# ---- the registry study ----------------------------------------------------
+
+def test_search_edp_is_registered_with_claims():
+    s = get_study("search_edp", smoke=True)
+    names = [n for n, _ in s._claims]
+    assert "edp_winner_is_64x64" in names
+    assert "seeded_replay_bit_identical" in names
+    # a search study has no static plan to shard
+    with pytest.raises(ValueError):
+        s.plan()
+
+
+def test_table_v_space_contains_the_corner_and_exceeds_1e5():
+    from repro.search import table_v_space
+    sp = table_v_space()
+    assert sp.valid_size() >= 100_000
+    labels = {a.name for a in sp.axes}
+    assert {"array", "sram_kb", "dataflow", "channels", "bw",
+            "layout_banks"} == labels
+    arrays = dict(zip([a.name for a in sp.axes],
+                      [a.values for a in sp.axes]))["array"]
+    assert arrays == (32, 64, 128)

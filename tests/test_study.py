@@ -153,6 +153,102 @@ def test_filter_group_compare(fixture_frame):
         f.compare("total_cycles", axis="design", baseline="zzz")
 
 
+def test_topk_is_stable_sorted_and_nan_safe(fixture_frame):
+    f = fixture_frame
+    assert list(f.topk("edp", 2)["design"]) == ["b", "c"]
+    # k past the frame clamps; result is sorted ascending
+    top = f.topk("edp", 99)
+    assert list(top["design"]) == ["b", "c", "a"]
+    assert list(top["edp"]) == sorted(f["edp"])
+    assert len(f.topk("edp", 0)) == 0
+    with pytest.raises(ValueError):
+        f.topk("edp", -1)
+    # NaN rows (failed cells) never place, even with k >= len
+    g = f._subset(np.array([True, True, True]))
+    g.columns["edp"] = np.array([9e6, np.nan, 8e6])
+    assert list(g.topk("edp", 3)["design"]) == ["c", "a"]
+    # ties keep original row order (stable sort)
+    h = f._subset(np.array([True, True, True]))
+    h.columns["edp"] = np.array([5e6, 5e6, 1e6])
+    assert list(h.topk("edp", 3)["design"]) == ["c", "a", "b"]
+
+
+def test_concat_unions_columns_and_nan_fills(fixture_frame):
+    other = StudyResult(
+        {
+            "design": np.array(["d"], dtype=object),
+            "workload": np.array(["w"], dtype=object),
+            "fidelity": np.array(["trace"], dtype=object),
+            "total_cycles": np.array([4e6]),
+            "energy_pj": np.array([3e9]),
+            "edp": np.array([6e6]),
+            # a metric fixture_frame does not have
+            "dram_stall_cycles": np.array([1e5]),
+        },
+        {"design": ["d"], "workload": ["w"], "fidelity": ["trace"]},
+        executed_cells=1, cache_hits=2)
+    fixture_frame.executed_cells = 3
+    cat = StudyResult.concat([fixture_frame, other])
+    assert len(cat) == 4
+    # column union in first-seen order, missing metrics NaN-filled
+    assert cat.column_names()[:len(fixture_frame.column_names())] == \
+        fixture_frame.column_names()
+    assert "dram_stall_cycles" in cat.columns
+    assert np.isnan(cat["dram_stall_cycles"][:3]).all()
+    assert cat["dram_stall_cycles"][3] == 1e5
+    # fixture_frame lacks "batched"? no — other lacks it: NaN-filled
+    assert np.isnan(cat["batched"][3])
+    # axis vocabularies merge first-seen
+    assert cat.axes["design"] == ["a", "b", "c", "d"]
+    assert cat.axes["fidelity"] == ["fast", "trace"]
+    # accounting sums; claims/meta never propagate
+    assert cat.executed_cells == 4 and cat.cache_hits == 2
+    assert cat._claims == [] and cat.meta == {}
+    # NaN-safe consumers ignore the fill
+    assert cat.best("edp")["design"] == "b"
+    with pytest.raises(ValueError):
+        StudyResult.concat([])
+
+
+def test_concat_checks_schema_version_and_axis_columns(fixture_frame):
+    alien = fixture_frame._subset(np.array([True, False, False]))
+    alien.schema_version = 999  # a frame from a foreign/future schema
+    with pytest.raises(ValueError, match="schema_version"):
+        StudyResult.concat([fixture_frame, alien])
+    # axis columns must exist in every frame — no NaN fill for axes
+    noaxis = StudyResult(
+        {"design": np.array(["e"], dtype=object),
+         "workload": np.array(["w"], dtype=object),
+         "edp": np.array([1.0])},
+        {"design": ["e"], "workload": ["w"]})
+    with pytest.raises(ValueError, match="fidelity"):
+        StudyResult.concat([fixture_frame, noaxis])
+
+
+def test_concat_and_topk_roundtrip_csv_json(tmp_path, fixture_frame):
+    other = fixture_frame._subset(np.array([True, True, False]))
+    other.columns["design"] = np.array(["x", "y"], dtype=object)
+    other.axes["design"] = ["x", "y"]
+    other.columns["fidelity"] = np.array(["trace", "trace"], dtype=object)
+    other.axes["fidelity"] = ["trace"]
+    cat = StudyResult.concat([fixture_frame, other])
+    assert cat.equals(StudyResult.from_json(cat.to_json()))
+    p = tmp_path / "cat.csv"
+    cat.to_csv(str(p))
+    back = StudyResult.from_csv(str(p))
+    for k in cat.columns:
+        assert np.array_equal(back.columns[k], cat.columns[k]), k
+    # NaN survives the trip too
+    cat.columns["edp"][0] = np.nan
+    cat.to_csv(str(p))
+    nback = StudyResult.from_csv(str(p))
+    assert np.isnan(nback["edp"][0])
+    assert nback.equals(StudyResult.from_json(cat.to_json()))
+    # and topk subframes serialize like any frame
+    top = cat.topk("total_cycles", 2)
+    assert top.equals(StudyResult.from_json(top.to_json()))
+
+
 # ---- serialization + cache -------------------------------------------------
 
 def test_csv_json_roundtrip_and_schema(tmp_path):
