@@ -79,15 +79,31 @@ def run(smoke: bool = False):
 
     tgrid = big                # same design points as the fast-path sweep,
     #                            so the two designs_per_sec are comparable
-    tres, us_tsweep = timed(lambda: tsim.sweep(tgrid, op), repeat=3)
+    tres, us_tsweep = timed(lambda: tsim.sweep(tgrid, op), repeat=5)
     assert tres.batched, "trace-fidelity sweep must not fall back"
     tdps = len(tgrid) / (us_tsweep / 1e6)
     rows.append((f"trace_sweep_{len(tgrid)}_designs", us_tsweep,
                  f"designs_per_sec={tdps:.0f}"))
     artifact["trace_sweep_designs"] = len(tgrid)
     artifact["trace_sweep_designs_per_sec"] = tdps
-    artifact["trace_engine"] = Simulator("paper-32",
-                                         fidelity="trace").engine
+    artifact["trace_engine"] = tres.engine
+
+    # the fused-megakernel engine on the same grid ("pallas": one kernel
+    # launch with designs batched along the Pallas grid on TPU; its XLA
+    # twin off-TPU — the resolved label is recorded with the number so
+    # CI always knows which form it gated). Must match the default
+    # engine's stalls bit-for-bit off-TPU (same math by construction).
+    psim = Simulator("paper-32", fidelity="trace", engine="pallas")
+    pres, us_psweep = timed(lambda: psim.sweep(tgrid, op), repeat=5)
+    assert pres.batched, "megakernel trace sweep must not fall back"
+    assert pres.engine.startswith("pallas"), \
+        f"'pallas' silently resolved to {pres.engine!r}"
+    pdps = len(tgrid) / (us_psweep / 1e6)
+    rows.append((f"trace_megakernel_{len(tgrid)}_designs", us_psweep,
+                 f"designs_per_sec={pdps:.0f};engine={pres.engine}"))
+    artifact["trace_megakernel_designs"] = len(tgrid)
+    artifact["trace_megakernel_designs_per_sec"] = pdps
+    artifact["trace_megakernel_engine"] = pres.engine
 
     # mixed sparse+dense sweep (ISSUE 5): a 32-design grid crossing
     # {dense, 2:4, 1:4, 1:4 row-wise} sparsity with array/SRAM sizes —

@@ -6,12 +6,21 @@ from typing import Callable, List, Tuple
 
 
 def timed(fn: Callable, *args, repeat: int = 3, **kw):
+    """Best-of-`repeat` wall time (us per call).
+
+    Min, not mean: scheduler preemption and cache-cold hiccups only ever
+    add time, so the minimum is the low-noise estimate of the true cost.
+    Averaging let runner jitter both hide real regressions (a slow
+    baseline run raises the floor) and cry wolf on healthy code — the
+    regression gate needs the repeatable number.
+    """
     fn(*args, **kw)                      # warmup / compile
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(repeat):
+        t0 = time.perf_counter()
         out = fn(*args, **kw)
-    dt = (time.perf_counter() - t0) / repeat
-    return out, dt * 1e6                 # us per call
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e6               # us per call
 
 
 def emit(rows: List[Tuple[str, float, str]]) -> None:

@@ -67,6 +67,9 @@ class SweepResult:
     energy_pj: np.ndarray
     utilization: np.ndarray
     batched: bool = True          # False when the python fallback ran
+    # resolved runtime replay-engine label of the sweep's DRAM replay
+    # ('' for fidelities that replay nothing) — see NetworkReport.engine
+    engine: str = ""
 
     @property
     def edp(self) -> np.ndarray:
@@ -231,6 +234,7 @@ class Simulator:
         return SweepResult(
             configs=cfgs,
             batched=bool(np.all(frame["batched"] > 0)),
+            engine=str(frame.meta.get("engine", "")),
             **{k: frame[k] for k in ("total_cycles", "compute_cycles",
                                      "stall_cycles", "dram_bytes",
                                      "energy_pj", "utilization")})
@@ -282,7 +286,12 @@ def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT,
     """
     from ..core import replay as _rp
     engine = _rp.resolve_engine(engine)
-    key = (dataflow, word_bytes, ert, dram, spec, engine, mesh_shape,
+    # key on the *runtime-resolved* label ("pallas" -> "pallas:twin" /
+    # "pallas:interpret" off-TPU), not the requested name: a "pallas"
+    # sweep must never alias an "xla" cache entry, and the label in the
+    # key matches what result metadata reports
+    key = (dataflow, word_bytes, ert, dram, spec,
+           _rp.resolve_engine_runtime(engine), mesh_shape,
            layout, r_cap, representation, with_sparsity, noc)
     cached = _SWEEP_FN_CACHE.get(key)
     if cached is not None:
@@ -346,9 +355,13 @@ def _batched_design_fn(dataflow: str, word_bytes: int, ert: ERT,
             _op_streams, in_axes=(0,) + (None,) * 6)(
                 sdesign, M, N, K, ov, on, om)
         fb, ch, row = decode_requests(addr, dram)   # one flat decode
-        if engine == "xla":
-            # batch-native: one chunk scan over the whole (streams, ops)
-            # batch instead of a vmapped per-stream replay
+        if engine in ("xla", "pallas"):
+            # batch-native: the whole (streams, ops) batch goes through
+            # one chunk scan ("xla") or one megakernel launch with the
+            # batch flattened onto the Pallas grid ("pallas") — never a
+            # vmapped per-stream replay, and "pallas" never silently
+            # rides the "xla" driver (replay_decoded resolves it to the
+            # megakernel on TPU or its interpret/twin form off-TPU)
             stall = _replay(t, fb, ch, row, wbit, val)
         else:
             stall = jax.vmap(jax.vmap(_replay))(t, fb, ch, row, wbit, val)

@@ -1081,8 +1081,16 @@ class Study:
         axes = {"design": [l for l, _ in self._designs],
                 "workload": list(self._workloads),
                 "fidelity": list(self._fidelities)}
-        return StudyResult(cols, axes, executed_cells=executed,
-                           cache_hits=hits, claims=self._claims)
+        res = StudyResult(cols, axes, executed_cells=executed,
+                          cache_hits=hits, claims=self._claims)
+        # surface the *resolved* replay engine ("pallas" -> its runtime
+        # twin/interpret form off-TPU) when any fidelity of this study
+        # replays a DRAM stream — result consumers must never have to
+        # guess whether "pallas" actually ran or quietly became "xla"
+        if any(f in ("trace", "cycle") for f in self._fidelities):
+            from ..core import replay as _rp
+            res.meta["engine"] = _rp.resolve_engine_runtime(self._engine)
+        return res
 
 
 # --------------------------------------------------------------------------

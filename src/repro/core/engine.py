@@ -110,6 +110,10 @@ class NetworkReport:
     edp: float
     utilization: float
     noc_stall_cycles: float = 0.0
+    # resolved runtime replay-engine label of the DRAM stage that actually
+    # ran ('' for the fast model): "xla", "pallas", "pallas:twin",
+    # "pallas:interpret" or "reference" — never the unresolved request
+    engine: str = ""
 
     def to_json(self) -> str:
         d = dataclasses.asdict(self)
@@ -185,7 +189,8 @@ def simulate_network(cfg: AcceleratorConfig, ops: Sequence[Op], *,
         avg_power_w=power_w(e_total, total, cfg.clock_ghz),
         edp=edp(e_total, total),
         utilization=min(1.0, macs / max(1.0, pes * total)),
-        noc_stall_cycles=sum(r.noc_stall_cycles for r in results))
+        noc_stall_cycles=sum(r.noc_stall_cycles for r in results),
+        engine=st.pipeline_engine(pipeline))
 
 
 # --------------------------------------------------------------------------

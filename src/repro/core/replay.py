@@ -6,32 +6,23 @@ thousands of sequential steps, each a handful of dynamic `.at[fb]`
 updates.  That serialization is what made trace-fidelity sweeps ~27x
 slower than fast fidelity.  This module replays the same timing model in
 fixed-size request chunks; inside a chunk everything is vectorized, and
-the chunk scan carries only the true architectural state (per-bank
-free/open-row, per-channel bus time, in-flight rings, queue counters,
+the chunk loop carries only the true architectural state (per-bank
+free time, per-channel bus time, in-flight rings, queue counters,
 per-core shift) so chunk boundaries are invisible.
 
-The implementation is shaped by what a backend executes efficiently:
-fused elementwise chains, `take_along_axis` gathers, and log-step
-shift-reduce prefixes.  There are no sorts and no scatters on the hot
-path, and every function is *batch-native* — leading batch dimensions
-(design grids, op batches) flow through the same ops instead of a vmap
-wrapper, so a sweep replays a whole (designs, ops) stream batch in one
-scan.
-
   order-only precompute (exact, hoisted out of the chunk scan)
-    Row-buffer state is "last writer wins" per bank, so each request's
-    open-row comparison depends only on *stream order*.  The previous
-    same-bank link is built in two exact levels: shifted compares find
-    links closer than a subblock, and a per-(bank, subblock)
-    last-occurrence summary (one masked reduce + a tiny prefix over
-    subblocks) finds the rest — no (banks x chunk) prefix scans on the
-    wide path.  Classification (hit / empty / conflict) follows from
-    the links and is bit-identical to the reference scan by
-    construction.  Queue-slot indices, ring survivors (request d is the
-    last writer of slot (d + idx0) %% Q iff no later d' = d + kQ in the
-    chunk), weighted channel prefixes and per-bank/per-channel last
-    requests are likewise order-only and computed for the whole stream
-    in wide fused ops *before* the scan.
+    Row-buffer state is "last writer wins" per bank, so *everything
+    about classification* — each request's previous-same-bank link, its
+    row hit/empty/conflict class, and its access latency — depends only
+    on stream order, never on timing.  In-chunk links are built in two
+    exact levels (shifted compares + per-(bank, subblock) last
+    occurrence); cross-chunk links come from a per-(bank, chunk)
+    last-occurrence table prefixed over the chunk axis.  The whole
+    stream is therefore classified in wide fused ops *before* the scan
+    — no open-row carry remains — and the counters are bit-identical to
+    the reference scan by construction.  Queue-slot indices, ring
+    survivors, weighted channel prefixes and per-bank/per-channel last
+    requests are likewise order-only and hoisted.
 
   chunk resolve (two exact closures + fixed point)
     Completion times obey
@@ -48,15 +39,19 @@ scan.
     closures with the previous iterate (so bank-raised completions of
     other banks propagate down the channel chain), plus a pruned
     same-bank gather (links whose channel path already outweighs their
-    lat are provably dominated and dropped) and intra-chunk queue
-    heads when a queue is shorter than the chunk.  The operator is
-    monotone from below and each pass finalizes at least the first
-    not-yet-exact request, so its least fixed point *is* the serial
-    result.  Three passes are statically unrolled (realistic streams
-    converge within them); if the third pass still moved a completion
-    by more than `tol` cycles (default 0.25) a lax.cond escapes into a
-    while_loop capped at chunk + 2 passes, so adversarial streams
-    still reach the fixed point.
+    lat are provably dominated and dropped) and intra-chunk queue heads
+    when a queue is shorter than the chunk.
+
+  fixed-point contract (identical under every chunked engine; see
+  `kernels.replay.chunkmath.iterate_fixed_point`)
+    Two statically-unrolled passes of the monotone closure operator;
+    if the second pass still moved a completion by more than `tol`
+    cycles (default 0.25) the iteration continues in a while_loop until
+    converged, capped at `max_passes` total passes when given, else
+    chunk + 2 (each pass finalizes at least the first not-yet-exact
+    request, so the cap never binds).  `tol=0.0` reaches the exact
+    fixed point under every engine — `simulate_shared_dram`'s
+    private-channel decomposition invariant relies on that.
 
 Bit-exactness: classification counts are exact.  Completion/stall times
 agree with the reference scan up to f32 rounding (the closed-form
@@ -66,14 +61,28 @@ relative tolerance — and bit-for-bit when `busy` is exactly
 representable.
 
 Engines:
-  "xla"       chunked replay, segmented closures (default; batch-native)
-  "pallas"    same chunking, but the inner resolve runs as a Pallas
-              kernel: the gathers/segment scans become masked (C, C)
-              row-max contractions over VMEM-resident matrices
-              (interpret-mode fallback off-TPU; 1-D streams — vmap for
-              batches)
-  "reference" the original per-request scan, kept for differential
-              testing and as the semantics oracle (1-D streams)
+  "xla"       this scan driver: hoisted precompute + a `lax.scan` over
+              chunks, tuned for XLA's strengths (take_along_axis
+              gathers, log-step shift-reduce prefixes, no sorts or
+              scatters).  Batch-native: leading batch dims (design
+              grids, op batches) flow through the same ops, so a sweep
+              replays a whole (designs, ops) stream batch in one scan.
+              Default engine.
+  "pallas"    the fused trace-replay megakernel
+              (`kernels.replay.megakernel`): one `pallas_call`, streams
+              flattened along the grid, the per-stream chunk loop and
+              all architectural state resident in VMEM/registers, the
+              chunk math expressed as masked one-hot contractions
+              (`kernels.replay.chunkmath`).  Batch-native from day one.
+              Off-TPU the compiled kernel is unavailable and dispatch
+              *resolves* (never silently — see
+              `resolve_engine_runtime`, whose label callers record in
+              result metadata) to interpret mode (`interpret=True`: the
+              literal kernel body on CPU, used by the differential
+              suite) or to this module's XLA driver ("pallas:twin").
+  "reference" the original per-request scan
+              (`core.dram._reference_scan`), kept for differential
+              testing and as the semantics oracle (1-D streams).
 """
 from __future__ import annotations
 
@@ -82,15 +91,14 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
 from .accelerator import DramConfig
 from .dram import row_buffer_latency
 
 ENGINES = ("xla", "pallas", "reference")
-# The one-line default switch (ISSUE 3): the chunked engine is the default
-# now that tests/test_replay.py's differential suite passes against the
-# reference scan.  Set to "reference" to restore the legacy per-request scan.
+# The chunked scan driver stays the default engine; "pallas" resolves to
+# the megakernel on TPU (and to this driver off-TPU — recorded, never
+# silent).  Set to "reference" to restore the legacy per-request scan.
 DEFAULT_ENGINE = "xla"
 DEFAULT_CHUNK = 64
 # Fixed-point stopping threshold (cycles): a pass that moves no completion
@@ -108,6 +116,31 @@ def resolve_engine(engine: Optional[str]) -> str:
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def resolve_engine_runtime(engine: Optional[str],
+                           interpret: Optional[bool] = None) -> str:
+    """The engine that will actually execute on this backend.
+
+    "pallas" is a *request*; what runs depends on the runtime:
+      - on TPU: the compiled megakernel        -> "pallas"
+      - off-TPU, interpret=True: the literal kernel body under the
+        Pallas interpreter (slow; the differential suite uses this to
+        execute the megakernel on CPU)          -> "pallas:interpret"
+      - off-TPU otherwise: this module's XLA scan driver
+                                               -> "pallas:twin"
+    The label is recorded in `NetworkReport.engine` / Study frames so a
+    fallback is never silent.  "xla" and "reference" resolve to
+    themselves.
+    """
+    eng = resolve_engine(engine)
+    if eng != "pallas":
+        return eng
+    if interpret is True:
+        return "pallas:interpret" if _default_interpret() else "pallas"
+    if _default_interpret():
+        return "pallas:twin"
+    return "pallas"
 
 
 def _shifted(x: jnp.ndarray, k: int, fill) -> jnp.ndarray:
@@ -141,6 +174,19 @@ def _cumsum(x: jnp.ndarray) -> jnp.ndarray:
     return x
 
 
+def _rmax(x: jnp.ndarray) -> jnp.ndarray:
+    """Max-reduce the last axis via an explicit halving tree.  XLA:CPU
+    lowers plain row reductions to reduce-window, which benches ~2x
+    slower than this form on the hot shapes; max is idempotent, so an
+    odd length just overlaps the middle element."""
+    n = x.shape[-1]
+    while n > 1:
+        h = (n + 1) // 2
+        x = jnp.maximum(x[..., :h], x[..., n - h:n])
+        n = h
+    return x[..., 0]
+
+
 def _take(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     """Batched gather along the last axis."""
     return jnp.take_along_axis(x, idx, axis=-1)
@@ -153,95 +199,22 @@ def _take_guard(x: jnp.ndarray, idx: jnp.ndarray, default) -> jnp.ndarray:
 
 
 # --------------------------------------------------------------------------
-# Pallas inner resolve: the closures as masked (C, C) row-max contractions
-# in VMEM (bank-grouped gather + segmented scans as matrices).
+# Order-only stream precompute (wide fused ops, outside the scan).
+# Per-chunk inputs are (nc, ..., C): the leading chunk axis is just
+# another batch dim for the in-chunk tables, and the axis the global
+# classification prefixes over.
 # --------------------------------------------------------------------------
 
-def _fixed_point_kernel(t_ref, lat_ref, head0_ref, bank0_ref, bus0_ref,
-                        shift0_ref, w_ref, v_ref, ghead_ref, gprev_ref,
-                        mbank_ref, mshift_ref, mchan_ref, done_ref, *,
-                        busy: float, max_passes: int, tol: float):
-    t = t_ref[...]
-    lat = lat_ref[...]
-    head0 = head0_ref[...]
-    bank0 = bank0_ref[...]
-    bus0 = bus0_ref[...]
-    shift0 = shift0_ref[...]
-    w = w_ref[...]                  # per-request channel edge weight
-    v = v_ref[...]
-    ghead = ghead_ref[...]          # one-hot: intra-chunk queue-head source
-    gprev = gprev_ref[...]          # one-hot: unpruned previous same-bank
-    mbank = mbank_ref[...]          # incl-lower & same-bank & valid
-    mshift = mshift_ref[...]        # strict-lower & same-core & valid
-    mchan = mchan_ref[...]          # incl-lower & same-channel & valid
-    neg = jnp.float32(-jnp.inf)
-    # segmented prefixes as masked row contractions
-    W = jnp.sum(jnp.where(mchan, w[None, :], 0.0), axis=1)
-    V = jnp.sum(jnp.where(mbank, lat[None, :] + busy, 0.0), axis=1)
-
-    def rowmax(mask, x):
-        return jnp.max(jnp.where(mask, x[None, :], neg), axis=1)
-
-    def one_pass(done):
-        head = jnp.maximum(head0, rowmax(ghead, done))
-        g = jnp.where(v, head - t, neg)
-        ss = jnp.maximum(shift0, rowmax(mshift, g))
-        issue_ok = jnp.maximum(t + ss, head)
-        bankp = jnp.maximum(bank0, rowmax(gprev, done))
-        # seed with the previous iterate so cross-bank raises propagate
-        # down the channel chain (see the xla one_pass)
-        s = jnp.maximum(jnp.maximum(issue_ok, bankp) + lat + busy, done)
-        # channel closure
-        u = jnp.maximum(rowmax(mchan, jnp.where(v, s - W, neg)) + W,
-                        bus0 + W)
-        # bank closure
-        d = rowmax(mbank, jnp.where(v, u - V, neg)) + V
-        return jnp.where(v, d, 0.0)
-
-    d0 = one_pass(jnp.zeros_like(t))
-    d1 = one_pass(d0)
-
-    def cond(s):
-        return jnp.logical_and(s[2] < max_passes,
-                               jnp.any(s[1] - s[0] > tol))
-
-    def body(s):
-        return (s[1], one_pass(s[1]), s[2] + 1)
-
-    _, done, _ = jax.lax.while_loop(cond, body, (d0, d1, jnp.int32(2)))
-    done_ref[...] = done
-
-
-def _pallas_fixed_point(t, lat, head0, bank0, bus0, shift0, w, v, ghead,
-                        gprev, mbank, mshift, mchan, *, busy: float,
-                        max_passes: int, tol: float,
-                        interpret: Optional[bool]):
-    interpret = _default_interpret() if interpret is None else interpret
-    C = t.shape[0]
-    return pl.pallas_call(
-        functools.partial(_fixed_point_kernel, busy=busy,
-                          max_passes=max_passes, tol=tol),
-        out_shape=jax.ShapeDtypeStruct((C,), jnp.float32),
-        interpret=interpret,
-    )(t, lat.astype(jnp.float32), head0, bank0, bus0, shift0, w, v,
-      ghead, gprev, mbank, mshift, mchan)
-
-
-# --------------------------------------------------------------------------
-# Order-only stream precompute (wide fused ops, outside the scan).  All
-# inputs are (..., C) with arbitrary leading batch dims (the chunk axis
-# is just another batch dim here).
-# --------------------------------------------------------------------------
-
-def _precompute_chunk(t, fb, ch, row, w, v, cid, *, cfg: DramConfig,
-                      busy: float, n_cores: int, n_qg: int):
+def _precompute_stream(t, fb, ch, row, w, v, cid, row_flat, v_flat, *,
+                       cfg: DramConfig, busy: float, n_cores: int,
+                       n_qg: int):
     C = t.shape[-1]
+    nc = t.shape[0]
     f32 = jnp.float32
     ch_n = cfg.channels
     n_banks = ch_n * cfg.banks_per_channel
     Qr, Qw = cfg.read_queue, cfg.write_queue
     i_idx = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), fb.shape)
-    neg = f32(-jnp.inf)
     r_mask = v & ~w
     w_mask = v & w
     qg = ch if n_qg > 1 else jnp.zeros_like(fb)
@@ -249,7 +222,7 @@ def _precompute_chunk(t, fb, ch, row, w, v, cid, *, cfg: DramConfig,
     # ---- previous same-bank link, two exact levels ------------------------
     # near links (closer than a subblock) by shifted compares; the same
     # shifted masks also accumulate the near part of the bank-closure
-    # prefix Vr (filled in after lat_intra exists, via the saved masks)
+    # prefix Vr (filled in after lat exists, via the saved masks)
     prev_near = jnp.full(fb.shape, -1, jnp.int32)
     near_hits = []
     for k in range(1, _SUB):
@@ -265,37 +238,62 @@ def _precompute_chunk(t, fb, ch, row, w, v, cid, *, cfg: DramConfig,
         if pad_c:
             x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad_c)],
                         constant_values=fill)
-        return red(x.reshape(x.shape[:-1] + (nsub, _SUB)), axis=-1)
+        x = x.reshape(x.shape[:-1] + (nsub, _SUB))
+        return _rmax(x) if red is jnp.max else jnp.sum(x, axis=-1)
 
     bank_oh = (jnp.arange(n_banks)[:, None] == fb[..., None, :]) & \
-        v[..., None, :]                                     # (..., B, C)
+        v[..., None, :]                                     # (nc,...,B,C)
     marked = jnp.where(bank_oh, i_idx[..., None, :], -1)
-    last_sb = _sb(marked, -1, jnp.max)                      # (..., B, nsub)
+    last_sb = _sb(marked, -1, jnp.max)                      # (...,B,nsub)
     prev_sb = _cummax(last_sb, exclusive=True, fill=-1)
-    last_b = jnp.max(last_sb, axis=-1)                      # (..., B)
+    last_b = _rmax(last_sb)                                 # (nc,...,B)
     sb_idx = i_idx // _SUB
 
     def _from_sb(tbl):
         """tbl (..., B, nsub) -> per-request value at (fb_i, subblock_i):
-        gather each request's bank row, then its subblock column."""
-        rows = jnp.take_along_axis(
-            tbl, jnp.broadcast_to(fb[..., :, None],
-                                  fb.shape + (tbl.shape[-1],)), axis=-2)
-        return jnp.take_along_axis(rows, sb_idx[..., None],
-                                   axis=-1)[..., 0]
+        one flat gather over the fused (bank, subblock) axis."""
+        flat = tbl.reshape(tbl.shape[:-2] + (n_banks * nsub,))
+        return _take(flat, fb * nsub + sb_idx)
 
     prev_far = _from_sb(prev_sb)
     prev_bank = jnp.maximum(prev_near, prev_far)
-
     intra = prev_bank >= 0
-    row_prev = _take(row, jnp.maximum(prev_bank, 0))
-    # lat of intra-linked requests is order-only (first-per-bank requests
-    # read the carried open row instead — classified inside the scan)
-    lat_intra, _, _ = row_buffer_latency(cfg, row_prev, row)
-    lat_intra = jnp.where(intra, lat_intra, 0).astype(f32)
 
-    # bank-closure prefix Vr_i = sum of (lat + busy) over same-bank j <= i,
-    # with the same near/far split (offsets cancel within a bank)
+    # ---- global classification (no scan, no open-row carry) --------------
+    # cross-chunk links: a bank's last request before this chunk is an
+    # exclusive running max of its per-chunk last occurrence (as global
+    # stream positions) over the chunk axis
+    cidx = jnp.reshape(jnp.arange(nc, dtype=jnp.int32),
+                       (nc,) + (1,) * (fb.ndim - 1))
+    last_b_g = jnp.where(last_b >= 0, cidx * C + last_b, -1)
+
+    def _shift_c(x, k):
+        # shift down the leading chunk axis (log-step cummax building
+        # block; lax.cummax lowers to slow reduce-window on CPU)
+        padn = [(k, 0)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, padn, constant_values=-1)[:-k]
+
+    before = _shift_c(last_b_g, 1)
+    k = 1
+    while k < nc:
+        before = jnp.maximum(before, _shift_c(before, k))
+        k *= 2
+    cross = _take(before, fb)                               # (nc,...,C)
+    gprev = jnp.where(intra, cidx * C + prev_bank, cross)
+    gp = jnp.moveaxis(gprev, 0, -2).reshape(row_flat.shape)
+    seen = jnp.where(gp >= 0, _take(row_flat, jnp.maximum(gp, 0)), -1)
+    lat_flat, hit, empty = row_buffer_latency(cfg, seen, row_flat)
+    hits = jnp.sum(hit & v_flat, axis=-1)
+    misses = jnp.sum(empty & v_flat, axis=-1)
+    conflicts = jnp.sum((~hit) & (~empty) & v_flat, axis=-1)
+    batch = row_flat.shape[:-1]
+    lat = jnp.moveaxis(
+        lat_flat.astype(f32).reshape(batch + (nc, C)), -2, 0)
+    lat_intra = jnp.where(intra, lat, 0.0)
+
+    # bank-closure prefix Vr_i = sum of (lat + busy) over same-bank
+    # intra-linked j <= i, with the same near/far split (offsets cancel
+    # within a bank); first-per-bank requests carry no in-chunk edge
     w_bank = jnp.where(v & intra, lat_intra + busy, 0.0)
     v_near = w_bank
     sb_pos = i_idx % _SUB
@@ -310,7 +308,7 @@ def _precompute_chunk(t, fb, ch, row, w, v, cid, *, cfg: DramConfig,
     # edge prefixes fold the lat of contiguous same-bank runs into the
     # channel chain
     chan_oh = (jnp.arange(ch_n)[:, None] == ch[..., None, :]) & \
-        v[..., None, :]                                     # (..., ch_n, C)
+        v[..., None, :]                                     # (...,ch_n,C)
     pin = _cummax(jnp.where(chan_oh, i_idx[..., None, :], -1),
                   exclusive=True, fill=-1)
     fb_pin = _take(fb, jnp.maximum(pin, 0).reshape(
@@ -319,13 +317,10 @@ def _precompute_chunk(t, fb, ch, row, w, v, cid, *, cfg: DramConfig,
     we = jnp.where(chan_oh,
                    busy + jnp.where(linked, lat_intra[..., None, :], 0.0),
                    0.0)
-    chan_W = _cumsum(we)                                    # (..., ch_n, C)
-    chan_last = jnp.max(jnp.where(chan_oh, i_idx[..., None, :], -1),
-                        axis=-1)                            # (..., ch_n)
+    chan_W = _cumsum(we)                                    # (...,ch_n,C)
+    chan_last = _rmax(jnp.where(chan_oh, i_idx[..., None, :], -1))
     flatW = chan_W.reshape(chan_W.shape[:-2] + (ch_n * C,))
     W_all = _take(flatW, ch * C + i_idx)
-    we_req = _take(we.reshape(we.shape[:-2] + (ch_n * C,)),
-                   ch * C + i_idx)
 
     # Bank links whose channel path already outweighs their lat can never
     # dominate (completions grow by >= W_i - W_p along the path): prune
@@ -362,7 +357,7 @@ def _precompute_chunk(t, fb, ch, row, w, v, cid, *, cfg: DramConfig,
         eq_w = (wdx[..., None, :] == (wdx[..., :, None] - Qw)) & \
             w_mask[..., None, :] & w_mask[..., :, None] & same_g
         eq = jnp.where(w[..., :, None], eq_w, eq_r)
-        src = jnp.max(jnp.where(eq, i_idx[..., None, :], -1), axis=-1)
+        src = _rmax(jnp.where(eq, i_idx[..., None, :], -1))
 
     # ring survivors: for residue s0 = d %% Q, the surviving writer is the
     # request with the largest direction index d >= n_dir - Q (if any);
@@ -371,17 +366,31 @@ def _precompute_chunk(t, fb, ch, row, w, v, cid, *, cfg: DramConfig,
     def survivors(mask, dix, ndir, Q):
         if Q >= C:
             # every chunk request survives (dix < C <= Q) and residues
-            # are the direction indices themselves: a (C, C) equality
-            # map padded to Q slots, no occupancy test needed
-            oh = (jnp.arange(C)[:, None] == dix[..., None, :]) & \
-                mask[..., None, :]                          # (..., C, C)
-            got = jnp.max(jnp.where(oh, i_idx[..., None, :], -1), axis=-1)
+            # are the direction indices themselves, which are monotone
+            # over the masked subsequence — so the map residue -> source
+            # is a searchsorted over the mask's running count, done as a
+            # branchless binary search (log C thin gathers; never
+            # materializes the (C, C) equality map)
+            cs = _cumsum(mask.astype(jnp.int32))
+            q = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32),
+                                 mask.shape)
+            pos = jnp.zeros_like(q)     # running #{i : cs_i <= q}
+            step = 1
+            while step < C:
+                step *= 2
+            step //= 2
+            while step >= 1:
+                nxt = pos + step
+                val = _take(cs, jnp.minimum(nxt, C) - 1)
+                pos = jnp.where((nxt <= C) & (val <= q), nxt, pos)
+                step //= 2
+            got = jnp.where(cs[..., -1:] > q, pos, -1)
             padq = [(0, 0)] * (got.ndim - 1) + [(0, Q - C)]
             return jnp.pad(got, padq, constant_values=-1)
         surv = mask & (dix + Q >= _take(ndir, qg))
         oh = (jnp.arange(Q)[:, None] == (dix % Q)[..., None, :]) & \
             surv[..., None, :]                              # (..., Q, C)
-        return jnp.max(jnp.where(oh, i_idx[..., None, :], -1), axis=-1)
+        return _rmax(jnp.where(oh, i_idx[..., None, :], -1))
 
     ring_src_r = jnp.stack(
         [survivors(r_mask & (qg == g), rdx, nr, Qr)
@@ -392,38 +401,32 @@ def _precompute_chunk(t, fb, ch, row, w, v, cid, *, cfg: DramConfig,
 
     core_mask = jnp.stack([v & (cid == s) for s in range(n_cores)],
                           axis=-2)                          # (..., cores, C)
-    return dict(
-        intra=intra, row_prev=row_prev, prev_link=prev_link,
-        Vr=Vr, we=we_req, chan_oh=chan_oh, chan_W=chan_W,
-        last_b=last_b, chan_last=chan_last,
-        qg=qg, rdx=rdx, wdx=wdx, src=src, nr=nr, nw=nw,
-        ring_src_r=ring_src_r, ring_src_w=ring_src_w,
-        core_mask=core_mask)
+    pre = dict(
+        lat=lat, prev_link=prev_link, Vr=Vr, chan_oh=chan_oh,
+        chan_W=chan_W, chan_last=chan_last, last_b=last_b, qg=qg,
+        rdx=rdx, wdx=wdx, src=src, nr=nr, nw=nw, ring_src_r=ring_src_r,
+        ring_src_w=ring_src_w, core_mask=core_mask)
+    return pre, hits, misses, conflicts
 
 
 # --------------------------------------------------------------------------
 # One chunk: carry-dependent resolve (runs inside the scan; batch-native)
 # --------------------------------------------------------------------------
 
-def _chunk_step(carry, x, *, cfg: DramConfig, busy: float, engine: str,
-                max_passes: int, tol: float, n_cores: int, n_qg: int,
-                interpret: Optional[bool]):
-    (bank_free, open_row, bus_free, ring_r, ring_w, ir, iw, shift,
-     hits, misses, conflicts) = carry
-    t, fb, ch, row, w, v, cid, pre = x
+def _chunk_step(carry, x, *, cfg: DramConfig, busy: float,
+                max_passes: Optional[int], tol: float, n_cores: int,
+                n_qg: int):
+    from ..kernels.replay.chunkmath import iterate_fixed_point
+
+    (bank_free, bus_free, ring_r, ring_w, ir, iw, shift) = carry
+    t, fb, w, v, cid, pre = x
     C = t.shape[-1]
-    ch_n = cfg.channels
     Qr, Qw = cfg.read_queue, cfg.write_queue
     f32 = jnp.float32
     neg = f32(-jnp.inf)
     i_idx = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), fb.shape)
 
-    # classification: intra links are precomputed; only first-per-bank
-    # requests consult the carried open row
-    seen = jnp.where(pre["intra"], pre["row_prev"], _take(open_row, fb))
-    lat, hit, empty = row_buffer_latency(cfg, seen, row)
-    lat = lat.astype(f32)
-
+    lat = pre["lat"]
     qg = pre["qg"]
     ir_g = ir[..., 0:1] if n_qg == 1 else _take(ir, qg)
     iw_g = iw[..., 0:1] if n_qg == 1 else _take(iw, qg)
@@ -449,7 +452,11 @@ def _chunk_step(carry, x, *, cfg: DramConfig, busy: float, engine: str,
         (jlt[None, :] <= jlt[:, None])
     intra_heads = Qr < C or Qw < C
 
-    def one_pass(done):
+    def _issue_ok(done):
+        # queue backpressure: heads (and hence shift and issue gates)
+        # depend on `done` only when a queue is shorter than the chunk —
+        # on realistic configs this whole block is pass-invariant and
+        # hoists out of the fixed-point iteration
         if intra_heads:
             head = jnp.maximum(head0, _take_guard(done, head_src, neg))
         else:
@@ -457,14 +464,23 @@ def _chunk_step(carry, x, *, cfg: DramConfig, busy: float, engine: str,
         g = jnp.where(v, head - t, neg)
         if n_cores == 1:
             ss = jnp.maximum(shift0,
-                             _cummax(jnp.where(v, g, neg), exclusive=True))
+                             _cummax(g, exclusive=True))
         else:
             gs = jnp.where(core_mask, g[..., None, :], neg)
             ss_c = jnp.maximum(shift[..., None],
                                _cummax(gs, exclusive=True))
             ss = _take(ss_c.reshape(ss_c.shape[:-2] + (n_cores * C,)),
                        cid * C + i_idx)
-        issue_ok = jnp.maximum(t + ss, head)
+        return jnp.maximum(t + ss, head), g
+
+    if not intra_heads:
+        issue_ok0, g0 = _issue_ok(None)
+
+    def one_pass(done):
+        if intra_heads:
+            issue_ok, _ = _issue_ok(done)
+        else:
+            issue_ok = issue_ok0
         bankp = jnp.maximum(bank0, _take_guard(done, prev_link, neg))
         # seed the closures with the previous iterate: completions grow
         # by at least the channel edge weights, so done_j + (W_i - W_j)
@@ -480,76 +496,26 @@ def _chunk_step(carry, x, *, cfg: DramConfig, busy: float, engine: str,
         u = jnp.sum(jnp.where(chan_oh, u_c, 0.0), axis=-2)
         # bank closure: one masked (C, C) row reduction (banks are many,
         # so the matrix contraction beats a per-bank stacked scan)
-        d = jnp.max(jnp.where(mbank, jnp.where(v, u - Vr, neg)[
-            ..., None, :], neg), axis=-1) + Vr
+        d = _rmax(jnp.where(mbank, jnp.where(v, u - Vr, neg)[
+            ..., None, :], neg)) + Vr
         return jnp.where(v, d, 0.0)
 
-    if engine == "pallas":
-        ghead = jlt[None, :] == head_src[:, None]
-        gprev = jlt[None, :] == prev_link[:, None]
-        mchan_m = (ch[None, :] == ch[:, None]) & v[None, :] & \
-            (jlt[None, :] <= jlt[:, None])
-        mshift_m = (cid[None, :] == cid[:, None]) & v[None, :] & \
-            (jlt[None, :] < jlt[:, None])
-        done = _pallas_fixed_point(
-            t, lat, head0, bank0, _take(bus_free, ch), shift0, pre["we"],
-            v, ghead, gprev, mbank, mshift_m, mchan_m, busy=busy,
-            max_passes=(C + 2) if max_passes is None else max_passes,
-            tol=tol, interpret=interpret)
-    elif max_passes is None:
-        # adaptive: three statically-unrolled passes cover realistic
-        # streams (the closures resolve whole chains per pass); if the
-        # third pass still moved something by more than tol, fall into a
-        # while_loop until the fixed point (monotone from below, so the
-        # residual is bounded; capped at C + 2 passes).  The cond keeps
-        # the expensive loop off the hot path — the scan body is
-        # batch-native, so only the taken branch executes.
-        d_prev = one_pass(jnp.zeros(t.shape, f32))
-        for _ in range(2):
-            d_prev = one_pass(d_prev)
-        d_last = one_pass(d_prev)
-
-        def slow(dd):
-            def cond(s):
-                return jnp.logical_and(s[2] < C + 2,
-                                       jnp.any(s[1] - s[0] > tol))
-
-            def body(s):
-                return (s[1], one_pass(s[1]), s[2] + 1)
-
-            _, dn, _ = jax.lax.while_loop(cond, body,
-                                          (dd[0], dd[1], jnp.int32(4)))
-            return dn
-
-        done = jax.lax.cond(jnp.any(d_last - d_prev > tol), slow,
-                            lambda dd: dd[1], (d_prev, d_last))
-    else:
-        # statically unrolled fixed pass count (opt-in fast path: a
-        # data-dependent while_loop in the scan body costs extra on CPU
-        # backends and defeats fusion)
-        done = one_pass(jnp.zeros(t.shape, f32))
-        for _ in range(max_passes - 1):
-            done = one_pass(done)
+    done = iterate_fixed_point(
+        one_pass, jnp.zeros(t.shape, f32),
+        cap=(C + 2) if max_passes is None else max_passes,
+        tol=tol, use_cond=True)
 
     # ---- final derived state + carry update (gathers only) ---------------
     if intra_heads:
-        head = jnp.maximum(head0, _take_guard(done, head_src, neg))
+        _, g = _issue_ok(done)
     else:
-        head = head0
-    g = jnp.where(v, head - t, neg)
+        g = g0
     shift = jnp.maximum(
-        shift, jnp.max(jnp.where(pre["core_mask"], g[..., None, :], neg),
-                       axis=-1))
-
-    hits = hits + jnp.sum(hit & v, axis=-1)
-    misses = misses + jnp.sum(empty & v, axis=-1)
-    conflicts = conflicts + jnp.sum((~hit) & (~empty) & v, axis=-1)
+        shift, _rmax(jnp.where(core_mask, g[..., None, :], neg)))
 
     lb = pre["last_b"]
     bank_free = jnp.where(lb >= 0, _take(done, jnp.maximum(lb, 0)),
                           bank_free)
-    open_row = jnp.where(lb >= 0, _take(row, jnp.maximum(lb, 0)),
-                         open_row)
 
     lc = pre["chan_last"]
     bus_free = jnp.where(lc >= 0, _take(done, jnp.maximum(lc, 0)),
@@ -568,8 +534,7 @@ def _chunk_step(carry, x, *, cfg: DramConfig, busy: float, engine: str,
     ir = ir + pre["nr"]
     iw = iw + pre["nw"]
 
-    new_carry = (bank_free, open_row, bus_free, ring_r, ring_w, ir, iw,
-                 shift, hits, misses, conflicts)
+    new_carry = (bank_free, bus_free, ring_r, ring_w, ir, iw, shift)
     return new_carry, (done, jnp.where(v, done - t, 0.0))
 
 
@@ -586,22 +551,28 @@ def replay_decoded(t_issue, flat_bank, ch, row, is_write, valid,
                    interpret: Optional[bool] = None):
     """Chunked replay of a pre-decoded request stream.
 
-    Batch-native: every input may carry leading batch dimensions
-    (`(..., n)`) and the replay processes the whole batch in one chunk
-    scan — this is how `Simulator.sweep` replays a (designs, ops) stream
-    batch without a vmap wrapper.  Pure traced function (safe under
-    jit/vmap; `cfg`, `gran_bytes` and the keyword knobs must be static
-    in a jitted caller).  Returns a dict with the raw per-request
-    completion times `done` (undefined where ~valid — callers
-    substitute their engine's no-op value), per-request round-trip
-    `latency`, the per-core backpressure `shift` (shape
+    Batch-native under every chunked engine: inputs may carry leading
+    batch dimensions (`(..., n)`) and the replay processes the whole
+    batch in one chunk scan ("xla") or one fused kernel launch
+    ("pallas") — this is how `Simulator.sweep` replays a (designs, ops)
+    stream batch without a vmap wrapper.  Pure traced function (safe
+    under jit/vmap; `cfg`, `gran_bytes` and the keyword knobs must be
+    static in a jitted caller).  Returns a dict with the raw
+    per-request completion times `done` (undefined where ~valid —
+    callers substitute their engine's no-op value), per-request
+    round-trip `latency`, the per-core backpressure `shift` (shape
     (..., n_cores)), and the exact row hit/empty/conflict counters.
 
     per_channel_queues selects the shared-DRAM semantics (per-channel
     in-flight rings, per-core shift) of `simulate_shared_dram`; the
     default matches `simulate_dram`'s single global ring pair.  tol is
     the fixed-point stopping threshold in cycles (0.0 = iterate to the
-    exact fixed point).  The "pallas" engine expects 1-D streams.
+    exact fixed point); max_passes caps the per-chunk pass count under
+    both chunked engines (None = chunk + 2, enough for any stream).
+
+    engine="pallas" dispatches per `resolve_engine_runtime`: the fused
+    megakernel on TPU (or, with interpret=True, the literal kernel body
+    under the Pallas interpreter), this driver otherwise.
     """
     n = t_issue.shape[-1]
     batch = t_issue.shape[:-1]
@@ -617,45 +588,62 @@ def replay_decoded(t_issue, flat_bank, ch, row, is_write, valid,
     if core_id is None:
         core_id = jnp.zeros(t_issue.shape, jnp.int32)
 
+    if engine == "pallas":
+        resolved = resolve_engine_runtime("pallas", interpret)
+        if resolved != "pallas:twin":
+            from ..kernels.replay.megakernel import replay_megakernel
+            return replay_megakernel(
+                t_issue, flat_bank, ch, row, is_write, valid, cfg,
+                gran_bytes, chunk=C, max_passes=passes, tol=float(tol),
+                n_cores=n_cores, core_id=core_id,
+                per_channel_queues=per_channel_queues,
+                interpret=(resolved == "pallas:interpret"))
+        # fall through: the twin is this driver (same model, same
+        # fixed-point contract; the megakernel's chunk math is
+        # differentially pinned to it and to the reference oracle)
+
     pad = (-n) % C
     nc = (n + pad) // C
 
-    def _prep(x, fill, dtype):
-        x = jnp.broadcast_to(jnp.asarray(x, dtype), batch + (n,))
+    def _flat(x, fill, dtype):
+        x = jnp.broadcast_to(jnp.asarray(x).astype(dtype), batch + (n,))
         if pad:
             x = jnp.concatenate(
                 [x, jnp.full(batch + (pad,), fill, dtype)], axis=-1)
-        # (..., nc, C) -> (nc, ..., C): the chunk axis leads for the scan
+        return x
+
+    def _chunked(x):
+        # (..., nc*C) -> (nc, ..., C): the chunk axis leads for the scan
         return jnp.moveaxis(x.reshape(batch + (nc, C)), -2, 0)
 
-    xs = (_prep(t_issue, 0.0, f32), _prep(flat_bank, 0, jnp.int32),
-          _prep(ch, 0, jnp.int32), _prep(row, 0, jnp.int32),
-          _prep(is_write, False, bool), _prep(valid, False, bool),
-          _prep(core_id, 0, jnp.int32))
+    rowf = _flat(row, 0, jnp.int32)
+    vf = _flat(valid, False, bool)
+    xs = tuple(_chunked(x) for x in (
+        _flat(t_issue, 0.0, f32), _flat(flat_bank, 0, jnp.int32),
+        _flat(ch, 0, jnp.int32), rowf,
+        _flat(is_write, False, bool), vf,
+        _flat(core_id, 0, jnp.int32)))
 
-    pre = _precompute_chunk(*xs, cfg=cfg, busy=busy, n_cores=n_cores,
-                            n_qg=n_qg)
+    pre, hits, misses, conflicts = _precompute_stream(
+        *xs, rowf, vf, cfg=cfg, busy=busy, n_cores=n_cores, n_qg=n_qg)
 
     carry0 = (jnp.zeros(batch + (ch_n * bk_n,), f32),
-              -jnp.ones(batch + (ch_n * bk_n,), jnp.int32),
               jnp.zeros(batch + (ch_n,), f32),
               jnp.zeros(batch + (n_qg, Qr), f32),
               jnp.zeros(batch + (n_qg, Qw), f32),
               jnp.zeros(batch + (n_qg,), jnp.int32),
               jnp.zeros(batch + (n_qg,), jnp.int32),
-              jnp.zeros(batch + (n_cores,), f32),
-              jnp.zeros(batch, jnp.int32), jnp.zeros(batch, jnp.int32),
-              jnp.zeros(batch, jnp.int32))
+              jnp.zeros(batch + (n_cores,), f32))
 
     step = functools.partial(
-        _chunk_step, cfg=cfg, busy=busy, engine=engine,
-        max_passes=passes, tol=float(tol), n_cores=n_cores, n_qg=n_qg,
-        interpret=interpret)
-    carry, (done, rt) = jax.lax.scan(step, carry0, xs + (pre,))
+        _chunk_step, cfg=cfg, busy=busy, max_passes=passes,
+        tol=float(tol), n_cores=n_cores, n_qg=n_qg)
+    carry, (done, rt) = jax.lax.scan(
+        step, carry0, (xs[0], xs[1], xs[4], xs[5], xs[6], pre))
 
     def _unchunk(y):
         return jnp.moveaxis(y, 0, -2).reshape(batch + (nc * C,))[..., :n]
 
     return dict(done=_unchunk(done), latency=_unchunk(rt),
-                shift=carry[7], hits=carry[8], misses=carry[9],
-                conflicts=carry[10])
+                shift=carry[6], hits=hits, misses=misses,
+                conflicts=conflicts)

@@ -349,6 +349,22 @@ def build_pipeline(fidelity: str = "fast", *, core_index: int = 0,
             EnergyStage())
 
 
+def pipeline_engine(pipeline: Sequence[Stage]) -> str:
+    """Resolved runtime replay-engine label of a pipeline's DRAM stage.
+
+    '' for the fast model (it replays nothing); otherwise the label
+    `core.replay.resolve_engine_runtime` gives for the stage's engine —
+    including the off-TPU resolution of "pallas" to "pallas:twin" /
+    "pallas:interpret", so reports record what actually ran, never the
+    requested name.
+    """
+    from . import replay as _rp
+    for s in pipeline:
+        if isinstance(s, (CycleDramStage, TraceDramStage)):
+            return _rp.resolve_engine_runtime(s.engine)
+    return ""
+
+
 def resolve_sparsity(cfg: AcceleratorConfig, op: Op) -> SparsityConfig:
     """Per-op N:M override (layer-wise sparsity ratios)."""
     sp = cfg.sparsity

@@ -1,0 +1,15 @@
+"""Fused trace-replay kernels: shared chunk math + the Pallas megakernel.
+
+`chunkmath` is the single implementation of the chunked bank-parallel
+replay step; `megakernel` wraps it in one `pallas_call` over a grid of
+streams, and `core.replay.replay_decoded` traces the same functions
+through XLA as the CPU twin.
+"""
+from .chunkmath import (ChunkState, ChunkTables, chunk_resolve,
+                        chunk_tables, init_state, iterate_fixed_point)
+from .megakernel import replay_megakernel
+
+__all__ = [
+    "ChunkState", "ChunkTables", "chunk_resolve", "chunk_tables",
+    "init_state", "iterate_fixed_point", "replay_megakernel",
+]

@@ -1,0 +1,373 @@
+"""Shared per-chunk replay math for the trace-fidelity DRAM engines.
+
+One implementation of the chunked bank-parallel replay step, written so
+the *same functions* execute in two worlds:
+
+  - inside the Pallas trace-replay megakernel
+    (`kernels.replay.megakernel`), on VMEM-resident chunk slices, and
+  - inside the XLA `lax.scan` twin (`core.replay.replay_decoded`), on
+    jnp arrays with arbitrary leading batch dims.
+
+That is the CPU-CI story: the twin is not a reimplementation, it is the
+kernel body traced by XLA instead of Mosaic, so a divergence between
+"what CI tested" and "what the TPU runs" cannot hide in duplicated math.
+
+Everything here is expressed in the `kernels.conflict` idiom — masked
+(C, C) / (B, C) / (Q, C) one-hot contractions built from
+`broadcasted_iota` compares — because that is the intersection of what
+Mosaic lowers well (no gathers, no scatters, no sorts, reductions over
+a minor/sublane axis) and what XLA-CPU fuses well.  All shapes are
+static; every input is `(..., C)` with optional leading batch dims.
+
+Semantics (the reference per-request scan, `core.dram._reference_scan`):
+
+  head      = ring[dir_idx % Q]       (in-flight window, per direction
+                                       and — shared-DRAM — per channel)
+  issue_ok  = max(t + shift, head)
+  ready     = max(issue_ok, bank_free[bank])
+  done      = max(ready + lat, bus_free[channel]) + busy
+  shift    += max(0, issue_ok - (t + shift))   == running max of head - t
+
+Within a chunk the serial recurrences are closed per fixed-point pass:
+the channel chain as a weighted max-plus prefix (a masked row-sum
+builds the inclusive weight prefix W; the chain closes as
+`rowmax(mchan, s - W) + W`), the same-bank chain as a masked row
+reduction over the bank-latency prefix V, queue heads and previous
+same-bank completions as one-hot gathers of the previous iterate.  The
+pass operator is monotone from below and finalizes at least the first
+not-yet-exact request per pass, so its least fixed point is the serial
+result; `iterate_fixed_point` seeds two passes and escapes into a
+capped while_loop only if the second pass still moved a completion by
+more than `tol` cycles.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core.accelerator import DramConfig
+from ...core.dram import row_buffer_latency
+
+# A plain Python float: module import may first happen inside a jit
+# trace (lazy imports in core.replay), where creating a jnp scalar at
+# module scope would leak a tracer into this global.
+_NEG = float("-inf")
+
+
+def _iota(shape, dim):
+    """broadcasted_iota everywhere — 1-D iota does not lower on TPU."""
+    return jax.lax.broadcasted_iota(jnp.int32, shape, dim)
+
+
+def rowmax(mask, x, fill=_NEG):
+    """max over the last axis of `x` broadcast against `mask`'s rows."""
+    return jnp.max(jnp.where(mask, x[..., None, :], fill), axis=-1)
+
+
+def rowsum(mask, x):
+    return jnp.sum(jnp.where(mask, x[..., None, :], 0), axis=-1)
+
+
+def onehot_pick(oh, x, fill):
+    """Value of `x` at the (at most one) set column per row of `oh`."""
+    return jnp.max(jnp.where(oh, x[..., None, :], fill), axis=-1)
+
+
+class ChunkTables(NamedTuple):
+    """Order-only per-chunk tables (no carried state involved).
+
+    All masks follow the row = consumer / column = producer convention:
+    `mask[..., i, j]` is True when request j (column) feeds request i.
+    """
+    mbank: jnp.ndarray      # (..., C, C) same-bank & valid-j & j <= i
+    mchan: jnp.ndarray      # (..., C, C) same-channel & valid-j & j <= i
+    mshift: jnp.ndarray     # (..., C, C) same-core & valid-j & j < i
+    gprev: jnp.ndarray      # (..., C, C) one-hot pruned prev same-bank
+    ghead: jnp.ndarray      # (..., C, C) one-hot in-chunk queue head src
+    intra: jnp.ndarray      # (..., C)    has a same-bank predecessor here
+    row_prev: jnp.ndarray   # (..., C)    its row (undefined where ~intra)
+    lat_intra: jnp.ndarray  # (..., C)    its row-buffer latency, else 0
+    we: jnp.ndarray         # (..., C)    channel max-plus edge weight
+    W: jnp.ndarray          # (..., C)    inclusive channel weight prefix
+    bank_oh: jnp.ndarray    # (..., B, C) bank one-hot (valid only)
+    chan_oh: jnp.ndarray    # (..., ch_n, C)
+    core_oh: jnp.ndarray    # (..., n_cores, C)
+    g_oh: jnp.ndarray       # (..., n_qg, C) queue-group one-hot
+    qg: jnp.ndarray         # (..., C)    queue group id
+    rdx: jnp.ndarray        # (..., C)    read index within (chunk, group)
+    wdx: jnp.ndarray        # (..., C)
+    nr: jnp.ndarray         # (..., n_qg) reads per group in this chunk
+    nw: jnp.ndarray         # (..., n_qg)
+    surv_r: jnp.ndarray     # (..., C)    last writer of its ring slot
+    surv_w: jnp.ndarray     # (..., C)
+    last_b: jnp.ndarray     # (..., B)    chunk-local last request per bank
+    last_c: jnp.ndarray     # (..., ch_n)
+
+
+def chunk_tables(fb, ch, row, w, v, cid, *, cfg: DramConfig, busy: float,
+                 n_cores: int, n_qg: int) -> ChunkTables:
+    """Everything about one chunk that depends only on stream order.
+
+    Runs per chunk step — inside the megakernel's chunk loop and inside
+    the twin's scan body.  The (C, C) masks stay register/VMEM resident
+    either way; hoisting them would stream (chunks, C, C) tensors
+    through HBM instead.
+    """
+    C = fb.shape[-1]
+    sq = fb.shape + (C,)
+    ii = _iota(sq, fb.ndim - 1)          # row index i (consumer)
+    jj = _iota(sq, fb.ndim)              # col index j (producer)
+    idx = _iota(fb.shape, fb.ndim - 1)
+    vj = v[..., None, :]
+    low = jj <= ii
+    strict = jj < ii
+
+    same_bank = fb[..., None, :] == fb[..., :, None]
+    mbank = same_bank & vj & low
+    prev = rowmax(same_bank & vj & strict, idx, -1)
+    intra = prev >= 0
+    prev_oh = (jj == prev[..., :, None]) & intra[..., :, None]
+    row_prev = onehot_pick(prev_oh, row, -1)
+    lat_intra, _, _ = row_buffer_latency(
+        cfg, jnp.where(intra, row_prev, -1), row)
+    lat_intra = jnp.where(intra, lat_intra, 0).astype(jnp.float32)
+
+    same_ch = ch[..., None, :] == ch[..., :, None]
+    mchan = same_ch & vj & low
+    # channel max-plus edge: the bus burst, plus the row latency folded
+    # in when the previous channel request sits on the same bank (bank
+    # chains are subsequences of a channel chain, so contiguous
+    # same-bank runs ride the channel closure)
+    pin = rowmax(same_ch & vj & strict, idx, -1)
+    pin_oh = (jj == pin[..., :, None]) & (pin >= 0)[..., :, None]
+    linked = intra & (onehot_pick(pin_oh, fb, -1) == fb)
+    we = jnp.where(v, busy + jnp.where(linked, lat_intra, 0.0), 0.0)
+    W = rowsum(mchan, we).astype(jnp.float32)
+    # prune the iterated same-bank gather: links whose channel path
+    # already outweighs their latency are provably dominated
+    W_prev = onehot_pick(prev_oh, W, 0.0)
+    prev_link = jnp.where(intra & (lat_intra + busy > W - W_prev),
+                          prev, -1)
+    gprev = (jj == prev_link[..., :, None]) & (prev_link >= 0)[..., :, None]
+
+    same_core = cid[..., None, :] == cid[..., :, None]
+    mshift = same_core & vj & strict
+
+    # queue groups + per-direction indices within (chunk, group)
+    qg = ch if n_qg > 1 else jnp.zeros_like(fb)
+    same_g = qg[..., None, :] == qg[..., :, None]
+    rm = v & ~w
+    wm = v & w
+    rdx = rowsum(same_g & rm[..., None, :] & strict,
+                 jnp.ones_like(fb)).astype(jnp.int32)
+    wdx = rowsum(same_g & wm[..., None, :] & strict,
+                 jnp.ones_like(fb)).astype(jnp.int32)
+    g_oh = (_iota(qg.shape[:-1] + (n_qg, C), qg.ndim - 1) ==
+            qg[..., None, :]) & vj
+    nr = jnp.sum(g_oh & rm[..., None, :], axis=-1).astype(jnp.int32)
+    nw = jnp.sum(g_oh & wm[..., None, :], axis=-1).astype(jnp.int32)
+
+    # in-chunk queue-head source: the same-(group, direction) request
+    # exactly Q back, when it falls inside this chunk
+    Qr, Qw = cfg.read_queue, cfg.write_queue
+    if Qr < C or Qw < C:
+        eq_r = (rdx[..., None, :] == rdx[..., :, None] - Qr) & \
+            rm[..., None, :] & rm[..., :, None] & same_g
+        eq_w = (wdx[..., None, :] == wdx[..., :, None] - Qw) & \
+            wm[..., None, :] & wm[..., :, None] & same_g
+        ghead = jnp.where(w[..., :, None], eq_w, eq_r)
+    else:
+        ghead = jnp.zeros(sq, bool)
+
+    # ring survivors: a request is the last writer of its slot iff it is
+    # among the last Q of its (group, direction) in the chunk
+    nr_at = jnp.sum(jnp.where(g_oh, nr[..., :, None], 0), axis=-2)
+    nw_at = jnp.sum(jnp.where(g_oh, nw[..., :, None], 0), axis=-2)
+    surv_r = rm & (rdx + Qr >= nr_at)
+    surv_w = wm & (wdx + Qw >= nw_at)
+
+    ch_n = cfg.channels
+    n_banks = ch_n * cfg.banks_per_channel
+    bank_oh = (_iota(fb.shape[:-1] + (n_banks, C), fb.ndim - 1) ==
+               fb[..., None, :]) & vj
+    chan_oh = (_iota(ch.shape[:-1] + (ch_n, C), ch.ndim - 1) ==
+               ch[..., None, :]) & vj
+    core_oh = (_iota(cid.shape[:-1] + (n_cores, C), cid.ndim - 1) ==
+               cid[..., None, :]) & vj
+    last_b = jnp.max(jnp.where(bank_oh, idx[..., None, :], -1), axis=-1)
+    last_c = jnp.max(jnp.where(chan_oh, idx[..., None, :], -1), axis=-1)
+
+    return ChunkTables(
+        mbank=mbank, mchan=mchan, mshift=mshift, gprev=gprev, ghead=ghead,
+        intra=intra, row_prev=row_prev, lat_intra=lat_intra, we=we, W=W,
+        bank_oh=bank_oh, chan_oh=chan_oh, core_oh=core_oh, g_oh=g_oh,
+        qg=qg, rdx=rdx, wdx=wdx, nr=nr, nw=nw,
+        surv_r=surv_r, surv_w=surv_w, last_b=last_b, last_c=last_c)
+
+
+def iterate_fixed_point(one_pass, zero, *, cap: int, tol: float,
+                        use_cond: bool):
+    """The unified fixed-point contract, shared by every engine:
+
+    seed `min(2, cap)` statically-unrolled passes; if the second pass
+    still moved any completion by more than `tol` cycles, iterate a
+    while_loop until converged, hard-capped at `cap` total passes
+    (`max_passes` when the caller gave one, else C + 2 — each pass
+    finalizes at least one request, so C passes always suffice).
+
+    `use_cond=True` keeps the while_loop off the hot path behind a
+    lax.cond (the twin); the megakernel enters the while_loop directly
+    (it runs zero iterations when converged — same semantics, and
+    Mosaic prefers the single loop over a branched body).
+    """
+    if cap <= 1:
+        return one_pass(zero)
+    d0 = one_pass(zero)
+    d1 = one_pass(d0)
+    if cap <= 2:
+        return d1
+
+    def cond_f(s):
+        return jnp.logical_and(s[2] < cap, jnp.any(s[1] - s[0] > tol))
+
+    def body_f(s):
+        return (s[1], one_pass(s[1]), s[2] + 1)
+
+    def _loop(dd):
+        _, dn, _ = jax.lax.while_loop(cond_f, body_f,
+                                      (dd[0], dd[1], jnp.int32(2)))
+        return dn
+
+    if not use_cond:
+        return _loop((d0, d1))
+    return jax.lax.cond(jnp.any(d1 - d0 > tol), _loop,
+                        lambda dd: dd[1], (d0, d1))
+
+
+class ChunkState(NamedTuple):
+    """Architectural state carried across chunks (per stream)."""
+    bank_free: jnp.ndarray   # (..., B)
+    bus_free: jnp.ndarray    # (..., ch_n)
+    ring_r: jnp.ndarray      # (..., n_qg, Qr) in-flight read completions
+    ring_w: jnp.ndarray      # (..., n_qg, Qw)
+    ir: jnp.ndarray          # (..., n_qg) reads admitted so far
+    iw: jnp.ndarray          # (..., n_qg)
+    shift: jnp.ndarray       # (..., n_cores) queue backpressure
+
+
+def init_state(batch, *, n_banks: int, ch_n: int, n_qg: int, Qr: int,
+               Qw: int, n_cores: int) -> ChunkState:
+    f32 = jnp.float32
+    return ChunkState(
+        bank_free=jnp.zeros(batch + (n_banks,), f32),
+        bus_free=jnp.zeros(batch + (ch_n,), f32),
+        ring_r=jnp.zeros(batch + (n_qg, Qr), f32),
+        ring_w=jnp.zeros(batch + (n_qg, Qw), f32),
+        ir=jnp.zeros(batch + (n_qg,), jnp.int32),
+        iw=jnp.zeros(batch + (n_qg,), jnp.int32),
+        shift=jnp.zeros(batch + (n_cores,), f32))
+
+
+def chunk_resolve(state: ChunkState, tab: ChunkTables, t, lat, w, v, *,
+                  cfg: DramConfig, busy: float, max_passes: Optional[int],
+                  tol: float, use_cond: bool):
+    """Resolve one chunk's completion times against the carried state and
+    advance the state.  `lat` is the full per-request row-buffer latency
+    (the caller classifies first-per-bank-in-chunk requests against its
+    open-row view; intra-chunk requests use `tab.lat_intra`).
+
+    Returns (new_state, done, head) — `done` is 0 where ~valid, `head`
+    is the final queue-head time (for the caller's shift bookkeeping).
+    """
+    Qr, Qw = cfg.read_queue, cfg.write_queue
+    C = t.shape[-1]
+    f32 = jnp.float32
+    lat = lat.astype(f32)
+
+    # carried-state gathers as one-hot contractions
+    bank0 = jnp.sum(jnp.where(tab.bank_oh,
+                              state.bank_free[..., :, None], 0.0), axis=-2)
+    bus0 = jnp.sum(jnp.where(tab.chan_oh,
+                             state.bus_free[..., :, None], 0.0), axis=-2)
+    shift0 = jnp.sum(jnp.where(tab.core_oh,
+                               state.shift[..., :, None], 0.0), axis=-2)
+    ir_i = jnp.sum(jnp.where(tab.g_oh, state.ir[..., :, None], 0), axis=-2)
+    iw_i = jnp.sum(jnp.where(tab.g_oh, state.iw[..., :, None], 0), axis=-2)
+    sl_r = (tab.rdx + ir_i) % Qr
+    sl_w = (tab.wdx + iw_i) % Qw
+
+    def ring_read(ring, sl, Q):
+        # head_i = ring[group_i, slot_i] via a (C, n_qg, Q) one-hot
+        n_qg = ring.shape[-2]
+        shp = sl.shape + (n_qg, Q)
+        oh = (_iota(shp, sl.ndim) == tab.qg[..., :, None, None]) & \
+            (_iota(shp, sl.ndim + 1) == sl[..., :, None, None])
+        return jnp.sum(jnp.where(oh, ring[..., None, :, :], 0.0),
+                       axis=(-2, -1))
+
+    head0 = jnp.where(w, ring_read(state.ring_w, sl_w, Qw),
+                      ring_read(state.ring_r, sl_r, Qr))
+    intra_heads = Qr < C or Qw < C
+    W = tab.W
+    V = rowsum(tab.mbank, jnp.where(v, lat + busy, 0.0))
+
+    def one_pass(done):
+        if intra_heads:
+            head = jnp.maximum(head0, rowmax(tab.ghead, done))
+        else:
+            head = head0
+        g = jnp.where(v, head - t, _NEG)
+        ss = jnp.maximum(shift0, rowmax(tab.mshift, g))
+        issue_ok = jnp.maximum(t + ss, head)
+        bankp = jnp.maximum(bank0, rowmax(tab.gprev, done))
+        # seed with the previous iterate so bank-raised completions of
+        # other banks propagate down the channel chain across passes
+        s = jnp.maximum(jnp.maximum(issue_ok, bankp) + lat + busy, done)
+        u = jnp.maximum(rowmax(tab.mchan, jnp.where(v, s - W, _NEG)) + W,
+                        bus0 + W)
+        d = rowmax(tab.mbank, jnp.where(v, u - V, _NEG)) + V
+        return jnp.where(v, d, 0.0)
+
+    cap = (C + 2) if max_passes is None else max_passes
+    done = iterate_fixed_point(one_pass, jnp.zeros(t.shape, f32),
+                               cap=cap, tol=tol, use_cond=use_cond)
+
+    # final derived state
+    if intra_heads:
+        head = jnp.maximum(head0, rowmax(tab.ghead, done))
+    else:
+        head = head0
+    g = jnp.where(v, head - t, _NEG)
+    shift = jnp.maximum(
+        state.shift,
+        jnp.max(jnp.where(tab.core_oh, g[..., None, :], _NEG), axis=-1))
+
+    idx = _iota(t.shape, t.ndim - 1)
+    upd_b = tab.bank_oh & (idx[..., None, :] == tab.last_b[..., :, None])
+    bank_free = jnp.where(tab.last_b >= 0,
+                          rowmax(upd_b, done, 0.0), state.bank_free)
+    upd_c = tab.chan_oh & (idx[..., None, :] == tab.last_c[..., :, None])
+    bus_free = jnp.where(tab.last_c >= 0,
+                         rowmax(upd_c, done, 0.0), state.bus_free)
+
+    def ring_write(ring, sl, surv, Q):
+        # slot s of group g takes done of its surviving writer, if any
+        n_qg = ring.shape[-2]
+        shp = sl.shape[:-1] + (n_qg, Q, C)
+        oh = (_iota(shp, sl.ndim - 1) == tab.qg[..., None, None, :]) & \
+            (_iota(shp, sl.ndim) == sl[..., None, None, :]) & \
+            surv[..., None, None, :]
+        got = jnp.max(jnp.where(oh, done[..., None, None, :], _NEG),
+                      axis=-1)
+        return jnp.where(jnp.any(oh, axis=-1), got, ring)
+
+    ring_r = ring_write(state.ring_r, sl_r, tab.surv_r, Qr)
+    ring_w = ring_write(state.ring_w, sl_w, tab.surv_w, Qw)
+
+    new_state = ChunkState(
+        bank_free=bank_free, bus_free=bus_free, ring_r=ring_r,
+        ring_w=ring_w, ir=state.ir + tab.nr, iw=state.iw + tab.nw,
+        shift=shift)
+    return new_state, done, head

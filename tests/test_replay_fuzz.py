@@ -1,0 +1,272 @@
+"""ISSUE 10 differential fuzz suite: the fused replay megakernel.
+
+Every engine form of the chunked replay — the XLA driver ("xla"), the
+megakernel's off-TPU twin (engine="pallas" resolving to "pallas:twin")
+and the literal Pallas kernel in interpret mode — is fuzzed against the
+per-request reference scan: row hit/miss/conflict counts must be
+bit-exact (classification is order-only and shared), completion times
+within 1e-3 relative (the closures re-associate f32 accumulation).
+
+Streams are randomized plus the known-adversarial shapes: same-bank
+conflict chains, queue-saturating bursts (in-flight ring wrap), and
+chunk-boundary cases (n not a multiple of the chunk, single-chunk,
+chunk > n).  Ranks: 1-D, batched leading dims, and vmap.
+
+Also pinned here: the engine-resolution contract — "pallas" must
+dispatch to the megakernel or its documented twin and be *recorded* as
+such, never silently alias an "xla" `_SWEEP_FN_CACHE` entry — and the
+unified fixed-point contract (`max_passes`/`tol` mean the same thing
+under every engine; `simulate_shared_dram`'s private-channel
+decomposition invariant holds at `max_passes=64` on all of them).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Simulator, preset_grid
+from repro.core import replay
+from repro.core.accelerator import DramConfig
+from repro.core.dram import decode_requests
+from repro.core.replay import replay_decoded, resolve_engine_runtime
+from repro.core.workloads import Op
+from repro.kernels.replay import replay_megakernel
+from repro.trace.contention import simulate_shared_dram
+
+RTOL = 1e-3
+
+
+def _decode(addr, cfg):
+    return decode_requests(jnp.asarray(addr), cfg)
+
+
+def fuzz_stream(seed, n, *, span=1 << 22, p_write=0.3, p_valid=0.9,
+                burst=None):
+    """Random mixed read/write stream; `burst` pins all requests into a
+    `burst`-bank address window (queue/bank pressure)."""
+    rng = np.random.default_rng(seed)
+    t = np.sort(rng.uniform(0.0, 3.0 * n, n)).astype(np.float32)
+    if burst is not None:
+        addr = (rng.integers(0, burst, n) * 64).astype(np.int64)
+    else:
+        addr = ((rng.integers(0, span, n) // 64) * 64).astype(np.int64)
+    w = rng.random(n) < p_write
+    v = rng.random(n) < p_valid
+    return jnp.asarray(t), jnp.asarray(addr), jnp.asarray(w), jnp.asarray(v)
+
+
+def run_reference(t, addr, w, v, cfg):
+    fb, ch, row = _decode(addr, cfg)
+    return replay_decoded(t, fb, ch, row, w, v, cfg, engine="reference")
+
+
+def run_engine(t, addr, w, v, cfg, engine, *, interpret=False, chunk=None,
+               tol=0.0):
+    fb, ch, row = _decode(addr, cfg)
+    if interpret:
+        # the literal Pallas kernel body, interpreted on CPU
+        return replay_megakernel(t, fb, ch, row, w.astype(jnp.int32),
+                                 v.astype(jnp.int32), cfg, chunk=chunk,
+                                 tol=tol, interpret=True)
+    return replay_decoded(t, fb, ch, row, w, v, cfg, engine=engine,
+                          chunk=chunk, tol=tol)
+
+
+def assert_replay_matches(ref, out, v):
+    for k in ("hits", "misses", "conflicts"):
+        assert int(out[k]) == int(ref[k]), k          # bit-exact counts
+    vm = np.asarray(v, bool)
+    a, b = np.asarray(ref["done"]), np.asarray(out["done"])
+    np.testing.assert_allclose(np.where(vm, b, 0.0), np.where(vm, a, 0.0),
+                               rtol=RTOL, atol=5e-2)
+
+
+ALL_FORMS = [("xla", False), ("pallas", False), ("pallas", True)]
+
+
+@pytest.mark.parametrize("engine,interpret", ALL_FORMS)
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_fuzz_random_streams(engine, interpret, seed):
+    n = 160 if interpret else 512
+    t, a, w, v = fuzz_stream(seed, n)
+    cfg = DramConfig()
+    ref = run_reference(t, a, w, v, cfg)
+    out = run_engine(t, a, w, v, cfg, engine, interpret=interpret)
+    assert_replay_matches(ref, out, v)
+
+
+@pytest.mark.parametrize("engine,interpret", ALL_FORMS)
+def test_fuzz_same_bank_chain(engine, interpret):
+    """Alternating rows in one bank: an unbroken conflict chain."""
+    n = 128 if interpret else 384
+    t = jnp.arange(n, dtype=jnp.float32) * 0.5
+    a = (jnp.arange(n) % 2) * (1 << 21)
+    w = jnp.zeros((n,), bool)
+    v = jnp.ones((n,), bool)
+    cfg = DramConfig(channels=1, banks_per_channel=1)
+    ref = run_reference(t, a, w, v, cfg)
+    assert int(ref["conflicts"]) > n // 2
+    out = run_engine(t, a, w, v, cfg, engine, interpret=interpret)
+    assert_replay_matches(ref, out, v)
+
+
+@pytest.mark.parametrize("engine,interpret", ALL_FORMS)
+def test_fuzz_queue_saturation(engine, interpret):
+    """Tiny in-flight rings + a same-window burst: every request beyond
+    the queue depth must wait on a ring head, and the backpressure shift
+    accumulates — the worst case for the intra-chunk head search."""
+    n = 160 if interpret else 512
+    t, a, w, v = fuzz_stream(7, n, burst=4, p_valid=1.0)
+    t = t * 0.01                       # arrivals far faster than service
+    cfg = DramConfig(read_queue=4, write_queue=2)
+    ref = run_reference(t, a, w, v, cfg)
+    out = run_engine(t, a, w, v, cfg, engine, interpret=interpret)
+    assert float(ref["shift"][0]) > 0.0      # queues actually pushed back
+    assert_replay_matches(ref, out, v)
+
+
+@pytest.mark.parametrize("engine,interpret", ALL_FORMS)
+@pytest.mark.parametrize("n,chunk", [(96, 32), (97, 32), (31, 32),
+                                     (64, 64), (65, 64)])
+def test_fuzz_chunk_boundaries(engine, interpret, n, chunk):
+    """Streams that end mid-chunk, fit one chunk, or underfill it."""
+    t, a, w, v = fuzz_stream(n * 1000 + chunk, n)
+    cfg = DramConfig()
+    ref = run_reference(t, a, w, v, cfg)
+    out = run_engine(t, a, w, v, cfg, engine, interpret=interpret,
+                     chunk=chunk)
+    assert_replay_matches(ref, out, v)
+
+
+@pytest.mark.parametrize("engine,interpret", ALL_FORMS)
+def test_fuzz_batched_and_vmapped_ranks(engine, interpret):
+    """(B, n) batched and vmapped runs must equal the per-stream runs."""
+    n, B = (128 if interpret else 256), 3
+    cfg = DramConfig()
+    streams = [fuzz_stream(10 + i, n) for i in range(B)]
+    t = jnp.stack([s[0] for s in streams])
+    a = jnp.stack([s[1] for s in streams])
+    w = jnp.stack([s[2] for s in streams])
+    v = jnp.stack([s[3] for s in streams])
+    fb, ch, row = _decode(a, cfg)
+
+    if interpret:
+        run = lambda *xs: replay_megakernel(
+            xs[0], xs[1], xs[2], xs[3], xs[4].astype(jnp.int32),
+            xs[5].astype(jnp.int32), cfg, tol=0.0, interpret=True)
+    else:
+        run = lambda *xs: replay_decoded(*xs, cfg, engine=engine, tol=0.0)
+
+    batched = run(t, fb, ch, row, w, v)
+    for i in range(B):
+        ref = run_reference(*streams[i], cfg)
+        assert_replay_matches(
+            ref, {k: batched[k][i] for k in batched}, v[i])
+    if not interpret:     # interpret-mode pallas_call doesn't vmap on CPU
+        vm = jax.vmap(lambda *xs: run(*xs)["done"])(t, fb, ch, row, w, v)
+        np.testing.assert_allclose(np.asarray(vm),
+                                   np.asarray(batched["done"]),
+                                   rtol=RTOL, atol=5e-2)
+
+
+# ---- engine resolution / cache identity -----------------------------------
+
+def test_resolve_engine_runtime_labels():
+    on_tpu = jax.default_backend() == "tpu"
+    got = resolve_engine_runtime("pallas")
+    assert got == ("pallas" if on_tpu else "pallas:twin")
+    assert resolve_engine_runtime("pallas", interpret=True) == \
+        ("pallas" if on_tpu else "pallas:interpret")
+    assert resolve_engine_runtime("xla") == "xla"
+    assert resolve_engine_runtime(None) == replay.DEFAULT_ENGINE
+
+
+def test_pallas_sweep_never_aliases_xla_cache():
+    """A 'pallas' batched sweep must get its own compiled kernel entry
+    and surface the resolved engine — never silently run as 'xla'."""
+    from repro.api.simulator import _SWEEP_FN_CACHE
+    grid = preset_grid(array=[8, 16], sram_mb=[0.5], dataflow=["ws"])
+    op = [Op("g", 128, 256, 128)]
+    rx = Simulator("paper-32", fidelity="trace", engine="xla").sweep(
+        grid, op)
+    before = {k for k in _SWEEP_FN_CACHE if k[5] == "xla"}
+    rp = Simulator("paper-32", fidelity="trace", engine="pallas").sweep(
+        grid, op)
+    assert rx.batched and rp.batched
+    assert rx.engine == "xla"
+    assert rp.engine == resolve_engine_runtime("pallas")
+    assert rp.engine != "xla"
+    # the pallas sweep created its own cache entries; the xla ones are
+    # untouched (no aliasing in either direction)
+    assert {k for k in _SWEEP_FN_CACHE if k[5] == "xla"} == before
+    assert any(k[5] == rp.engine for k in _SWEEP_FN_CACHE)
+    # same math off-TPU (the twin IS the driver) / same model on TPU
+    np.testing.assert_allclose(rp.stall_cycles, rx.stall_cycles,
+                               rtol=RTOL)
+
+
+def test_network_report_records_resolved_engine():
+    op = [Op("g", 128, 256, 128)]
+    rep = Simulator("paper-32", fidelity="trace", engine="pallas").run(op)
+    assert rep.engine == resolve_engine_runtime("pallas")
+    fast = Simulator("paper-32").run(op)
+    assert fast.engine == ""       # the fast model replays nothing
+
+
+# ---- unified fixed-point contract -----------------------------------------
+
+@pytest.mark.parametrize("engine", ["xla", "pallas", "reference"])
+def test_shared_dram_private_channel_invariant_all_engines(engine):
+    """Disjoint channel pinning decomposes exactly into isolated runs —
+    under every engine, with the analysis-path contract (max_passes=64,
+    tol=0.0) that `multicore_contention` relies on."""
+    cfg = DramConfig(channels=2, banks_per_channel=4)
+    n = 256
+    rng = np.random.default_rng(3)
+    kw = dict(max_passes=64, tol=0.0) if engine != "reference" else {}
+
+    def one_core(core, channel):
+        t = np.sort(rng.uniform(0, 200.0, n)).astype(np.float32)
+        b = rng.integers(0, 1 << 14, n)
+        addr = (b * cfg.channels + channel) * cfg.burst_bytes
+        w = rng.random(n) < 0.3
+        return (jnp.asarray(t), jnp.asarray(addr), jnp.asarray(w),
+                jnp.full((n,), core, jnp.int32))
+
+    cores = [one_core(0, 0), one_core(1, 1)]
+    iso = [simulate_shared_dram(t, a, w, jnp.zeros((n,), jnp.int32),
+                                jnp.ones((n,), bool), 1, cfg,
+                                engine=engine, **kw)
+           for t, a, w, _ in cores]
+
+    t = jnp.concatenate([c[0] for c in cores])
+    a = jnp.concatenate([c[1] for c in cores])
+    w = jnp.concatenate([c[2] for c in cores])
+    cid = jnp.concatenate([c[3] for c in cores])
+    order = jnp.argsort(t)
+    shared = simulate_shared_dram(t[order], a[order], w[order], cid[order],
+                                  jnp.ones((2 * n,), bool), 2, cfg,
+                                  engine=engine, **kw)
+    for i in range(2):
+        assert float(shared.per_core_stall[i]) == pytest.approx(
+            float(iso[i].per_core_stall[0]), rel=1e-5, abs=1e-2)
+
+
+@pytest.mark.parametrize("engine", ["xla", "pallas"])
+def test_max_passes_cap_and_tol_semantics_match(engine):
+    """max_passes=1 (single relaxation pass) must underestimate the
+    resolved fixed point the same way on every chunked engine form, and
+    tol=0.0 must reach the exact fixed point (more passes change
+    nothing)."""
+    t, a, w, v = fuzz_stream(5, 256, burst=2, p_valid=1.0)
+    cfg = DramConfig(channels=1, banks_per_channel=1)
+    fb, ch, row = _decode(a, cfg)
+    one = replay_decoded(t, fb, ch, row, w, v, cfg, engine=engine,
+                         max_passes=1, tol=0.0)
+    full = replay_decoded(t, fb, ch, row, w, v, cfg, engine=engine,
+                          tol=0.0)
+    capped = replay_decoded(t, fb, ch, row, w, v, cfg, engine=engine,
+                            max_passes=512, tol=0.0)
+    assert float(jnp.max(full["done"])) >= float(jnp.max(one["done"]))
+    np.testing.assert_allclose(np.asarray(capped["done"]),
+                               np.asarray(full["done"]), rtol=1e-6)
